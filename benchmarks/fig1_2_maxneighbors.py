@@ -1,0 +1,25 @@
+"""Paper Figs 1-2: objective value and search time vs maxNeighbors (tai343).
+
+Reproduces the finding: maxNeighbors ~= 50 gives the best objective at
+acceptable time; larger values cost time without quality gain.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import annealing
+from . import common
+
+
+def run() -> list:
+    C, M, inst = common.get(343)
+    rows = []
+    for mn in (10, 25, 50, 100, 200):
+        cfg = common.sa_budget(neighbors=mn, solvers=8)
+        t, (_, f, _) = common.time_fn(
+            lambda cfg=cfg: annealing.run_psa(C, M, jax.random.PRNGKey(0), cfg,
+                                              num_processes=2))
+        rows.append(common.csv_row(
+            f"fig1_2.maxNeighbors={mn}", t * 1e6,
+            f"F={float(f):.0f};A1={common.accuracy(float(f), inst.optimum):.1f}%"))
+    return rows

@@ -1,0 +1,31 @@
+"""Paper Fig 4: objective vs consecutive iterations per information exchange.
+
+Total iterations N = c x n held fixed while the exchange period n varies
+(paper: best around n=100; more exchanges burn time, fewer lose coupling).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import annealing
+from . import common
+
+
+def run() -> list:
+    C, M, inst = common.get(343)
+    total = max(int(2000 * common.SCALE ** 0.5), 40)
+    rows = []
+    for n in (10, 100, 1000):
+        n_eff = min(n, total)
+        cfg = annealing.SAConfig(max_neighbors=20,
+                                 iters_per_exchange=n_eff,
+                                 num_exchanges=max(total // n_eff, 1),
+                                 solvers=8)
+        t, (_, f, _) = common.time_fn(
+            lambda cfg=cfg: annealing.run_psa(C, M, jax.random.PRNGKey(2), cfg,
+                                              num_processes=2))
+        rows.append(common.csv_row(
+            f"fig4.iters_per_exchange={n}", t * 1e6,
+            f"F={float(f):.0f};A1={common.accuracy(float(f), inst.optimum):.1f}%"
+            f";exchanges={cfg.num_exchanges}"))
+    return rows

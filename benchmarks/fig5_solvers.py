@@ -1,0 +1,25 @@
+"""Paper Fig 5: solution quality vs number of solvers per process (tai343).
+
+Paper: ~125 solvers suffice for graphs up to 1024 vertices; more solvers
+improve coverage of the solution space up to a saturation point.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import annealing
+from . import common
+
+
+def run() -> list:
+    C, M, inst = common.get(343)
+    rows = []
+    for sv in (8, 27, 64, 125):
+        cfg = common.sa_budget(solvers=sv, num_exchanges=20, ipe=20)
+        t, (_, f, _) = common.time_fn(
+            lambda cfg=cfg: annealing.run_psa(C, M, jax.random.PRNGKey(3), cfg,
+                                              num_processes=2))
+        rows.append(common.csv_row(
+            f"fig5.solvers={sv}", t * 1e6,
+            f"F={float(f):.0f};A1={common.accuracy(float(f), inst.optimum):.1f}%"))
+    return rows

@@ -1,0 +1,29 @@
+"""Paper Figs 6-7: solution quality vs number of processes (tai343, tai729).
+
+Paper: more processes widen the candidate-solution space and improve
+accuracy with near-constant runtime (each process is parallel hardware).
+On one CPU core runtime grows with processes; quality is the reproduced
+quantity.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import annealing
+from . import common
+
+
+def run() -> list:
+    rows = []
+    for n_inst in (343, 729):
+        C, M, inst = common.get(n_inst)
+        for procs in (1, 2, 4, 8):
+            cfg = common.sa_budget(solvers=4, num_exchanges=15, ipe=15)
+            t, (_, f, _) = common.time_fn(
+                lambda cfg=cfg, p=procs: annealing.run_psa(
+                    C, M, jax.random.PRNGKey(4), cfg, num_processes=p))
+            rows.append(common.csv_row(
+                f"fig6_7.tai{n_inst}.processes={procs}", t * 1e6,
+                f"F={float(f):.0f};"
+                f"A1={common.accuracy(float(f), inst.optimum):.1f}%"))
+    return rows

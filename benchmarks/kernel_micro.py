@@ -1,0 +1,44 @@
+"""Kernel microbenchmarks: QAP objective / swap-delta throughput.
+
+On this CPU container the timed path is the pure-jnp reference (the
+production CPU dispatch); the Pallas kernels are validated in interpret mode
+(tests/test_kernels.py) and targeted at TPU.  The derived column reports the
+achieved element throughput and the TPU roofline estimate for the kernel
+(VMEM-resident one-hot matmul formulation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import qap
+from repro.kernels import ref
+from . import common
+
+
+def run() -> list:
+    rows = []
+    rng = np.random.default_rng(0)
+    for n, batch in ((125, 64), (343, 64), (729, 32)):
+        C = jnp.asarray(rng.integers(0, 50, (n, n)), jnp.float32)
+        M = jnp.asarray(rng.integers(0, 20, (n, n)), jnp.float32)
+        perms = qap.random_permutations(jax.random.PRNGKey(0), batch, n)
+        obj = jax.jit(lambda p: ref.qap_objective_ref(C, M, p))
+        t, _ = common.time_fn(obj, perms)
+        elems = batch * n * n
+        # TPU kernel estimate: 2 matmuls of n_pad^3 on the MXU per perm
+        n_pad = ((n + 127) // 128) * 128
+        tpu_s = batch * 4 * n_pad ** 3 / 197e12
+        rows.append(common.csv_row(
+            f"kernel.objective.n={n}.b={batch}", t / batch * 1e6,
+            f"cpu_gelem_s={elems/t/1e9:.2f};tpu_est_us={tpu_s*1e6:.1f}"))
+
+        p = perms[0]
+        pairs = qap.random_swap_pairs(jax.random.PRNGKey(1), 256, n)
+        dl = jax.jit(lambda pr: ref.qap_delta_ref(C, M, p, pr))
+        t, _ = common.time_fn(dl, pairs)
+        rows.append(common.csv_row(
+            f"kernel.delta.n={n}.k=256", t / 256 * 1e6,
+            f"cpu_gelem_s={256*n/t/1e9:.3f};onchip=O(N)/swap"))
+    return rows

@@ -1,0 +1,46 @@
+"""Framework experiment: predicted comm-cost gain from QAP device placement.
+
+Reads artifacts produced by ``repro.launch.placement_bench`` (which lowers
+real cells on the 512-chip mesh in a subprocess -- it needs its own
+XLA_FLAGS); launches the subprocess on first run.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import subprocess
+import sys
+
+from . import common
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "placement")
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _ensure_artifacts() -> None:
+    if glob.glob(os.path.join(ART, "*.json")):
+        return
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    subprocess.run([sys.executable, "-m", "repro.launch.placement_bench"],
+                   env=env, cwd=REPO, check=False, timeout=3000)
+
+
+def run() -> list:
+    _ensure_artifacts()
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        rec = json.load(open(path))
+        for scen, label in (("algorithms", "pristine"), ("fragmented", "frag")):
+            for algo, a in rec.get(scen, {}).items():
+                rows.append(common.csv_row(
+                    f"placement.{rec['arch']}.{rec['shape']}.{label}.{algo}",
+                    a["seconds"] * 1e6,
+                    f"F0={a['cost_before']:.3g};F={a['cost_after']:.3g};"
+                    f"gain={a['gain']*100:.1f}%"))
+    if not rows:
+        rows.append(common.csv_row("placement.unavailable", 0.0,
+                                   "run repro.launch.placement_bench"))
+    return rows

@@ -1,0 +1,44 @@
+"""Benchmark harness: one module per paper table/figure (deliverable d).
+
+Prints ``name,us_per_call,derived`` CSV rows.  Budgets are scaled for this
+single-core container via REPRO_BENCH_SCALE (benchmarks/common.py); the
+sweep *structure* matches the paper exactly.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from . import (fig1_2_maxneighbors, fig3_temperature, fig4_exchange_period,
+                   fig5_solvers, fig6_7_processes, kernel_micro,
+                   placement_gain, table1_accuracy)
+    modules = [
+        ("fig1_2", fig1_2_maxneighbors),
+        ("fig3", fig3_temperature),
+        ("fig4", fig4_exchange_period),
+        ("fig5", fig5_solvers),
+        ("fig6_7", fig6_7_processes),
+        ("table1+fig8", table1_accuracy),
+        ("kernel", kernel_micro),
+        ("placement", placement_gain),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, mod in modules:
+        if only and only not in name:
+            continue
+        t0 = time.time()
+        try:
+            for row in mod.run():
+                print(row, flush=True)
+        except Exception:
+            traceback.print_exc()
+            print(f"{name}.ERROR,0,failed")
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

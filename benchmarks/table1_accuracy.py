@@ -1,0 +1,77 @@
+"""Paper Table 1 + Fig 8: accuracy (A1) and runtime of PSA / PGA / PCA across
+all seven taiXe instances.
+
+Reproduced findings (paper S5-S6):
+  * PSA has the minimum runtime at every order;
+  * PGA/PCA beat PSA's accuracy on large graphs (tai343/tai729);
+  * PCA (composite) tracks PGA's accuracy at comparable cost;
+  * on small instances the GA is least accurate (A1 24-34% in the paper).
+
+Budgets are scaled by REPRO_BENCH_SCALE (see common.py); a markdown Table 1
+is also written to artifacts/table1.md.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+from repro.core import annealing, composite, genetic
+from . import common
+
+ORDERS = (27, 45, 75, 125, 175, 343, 729)
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def _algorithms(n: int):
+    sa = common.sa_budget(solvers=8, num_exchanges=30, ipe=30)
+    ga = common.ga_budget(generations=150, pop=min(n, 128))
+    pca = composite.CompositeConfig(
+        sa=annealing.SAConfig(**{**sa.__dict__, "num_exchanges": max(sa.num_exchanges // 3, 2),
+                                 "solvers": 0}),
+        ga=ga)
+    return {
+        "psa": lambda C, M, k: annealing.run_psa(C, M, k, sa, num_processes=4),
+        "pga": lambda C, M, k: genetic.run_pga(C, M, k, ga, num_processes=4),
+        "pca": lambda C, M, k: composite.run_pca(C, M, k, pca, num_processes=4),
+    }
+
+
+def run() -> list:
+    rows = []
+    table = {}
+    for n in ORDERS:
+        C, M, inst = common.get(n)
+        table[n] = {}
+        for name, fn in _algorithms(n).items():
+            fs, ts = [], []
+            for r in range(common.RUNS):
+                t, (_, f, _) = common.time_fn(fn, C, M, jax.random.PRNGKey(r))
+                fs.append(float(f))
+                ts.append(t)
+            fbest, tmean = min(fs), float(np.mean(ts))
+            a1 = common.accuracy(fbest, inst.optimum)
+            table[n][name] = (fbest, tmean, a1)
+            rows.append(common.csv_row(
+                f"table1.tai{n}.{name}", tmean * 1e6,
+                f"F={fbest:.0f};F0={inst.optimum:.0f};A1={a1:.1f}%"))
+    _write_markdown(table)
+    return rows
+
+
+def _write_markdown(table) -> None:
+    os.makedirs(ART, exist_ok=True)
+    lines = ["| instance | PSA F | PSA T(s) | PSA A1 | PGA F | PGA T(s) | "
+             "PGA A1 | PCA F | PCA T(s) | PCA A1 | F0 |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for n, algs in table.items():
+        C, M, inst = common.get(n)
+        cells = []
+        for name in ("psa", "pga", "pca"):
+            f, t, a1 = algs[name]
+            cells += [f"{f:.0f}", f"{t:.2f}", f"{a1:.0f}%"]
+        lines.append(f"| tai{n}e01s | " + " | ".join(cells) +
+                     f" | {inst.optimum:.0f} |")
+    with open(os.path.join(ART, "table1.md"), "w") as fh:
+        fh.write("\n".join(lines) + "\n")

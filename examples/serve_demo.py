@@ -1,0 +1,33 @@
+"""Batched serving demo: prefill + KV-cache decode with the slot engine.
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+import time
+
+import numpy as np
+import jax
+
+from repro import configs
+from repro.models.api import Model
+from repro.serve.engine import Engine, ServeConfig
+
+
+def main() -> None:
+    cfg = configs.smoke_config("qwen3_4b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, ServeConfig(max_new_tokens=24, temperature=0.8))
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(2, cfg.vocab_size, (4, 32)).astype(np.int32)
+    t0 = time.time()
+    out = eng.generate(prompts)
+    dt = time.time() - t0
+    print(f"batch=4, prompt=32, generated {out.shape[1]} tokens/request "
+          f"in {dt:.2f}s")
+    for i, row in enumerate(out):
+        print(f"  request {i}: {row[:10].tolist()} ...")
+
+
+if __name__ == "__main__":
+    main()

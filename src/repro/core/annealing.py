@@ -1,0 +1,193 @@
+"""Parallel simulated annealing (PSA) for the mapping problem.
+
+Faithful to the paper's algorithm (S3):
+
+  1. generate a starting solution (the candidate);
+  2. new solution = swap of two arbitrary elements of X;
+  3. accept if dF < 0, else accept with the acceptor probability exp(-dF/T);
+  4. cool by the temperature-decrease function (linear ``T <- q*T`` or Cauchy
+     ``T <- T / (1 + beta*T)``);
+  5. stop on iteration budget / final temperature / stagnation.
+
+Parallelism (paper S3, "several processes search for a solution; the best
+found candidate is broadcast to all processes"): chains are a `vmap` batch
+("solvers" within a process, Fig 5) and a process axis that is either a second
+`vmap` dimension (single host) or a `shard_map` mesh axis
+(``repro.core.distributed``).  Every ``iters_per_exchange`` temperature steps
+the globally best solution is adopted by all chains (Fig 4).
+
+Hardware adaptation (DESIGN.md S4): at one temperature the sequential
+algorithm examines up to ``max_neighbors`` candidates; since rejected
+candidates do not mutate the state, evaluating candidates against the current
+state and applying the first accepted one is *exactly* the sequential
+semantics, realised as a masked `lax.scan` (no data-dependent break on TPU).
+The acceptance cap per temperature is ``max_success``.
+
+Temperature initialisation follows the UGR-Metaheuristics convention the
+paper adopts: ``T0 = mu * F(s0) / -ln(phi)`` with mu = phi = 0.3, and the
+Cauchy beta is ``(T0 - Tf) / (n_coolings * T0 * Tf)`` (the paper's printed
+formula has the numerator sign flipped, which would heat instead of cool; we
+use the standard UGR form and note the fix).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import qap
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class SAConfig:
+    max_neighbors: int = 50          # candidates per temperature (Figs 1-2)
+    max_success: int = 10            # acceptance cap per temperature
+    schedule: str = "cauchy"         # "linear" | "cauchy" (Fig 3)
+    q: float = 0.95                  # linear-schedule decay factor
+    mu: float = 0.3                  # T0 = mu * F(s0) / -ln(phi)
+    phi: float = 0.3
+    t_final: float = 1e-3
+    iters_per_exchange: int = 100    # temperature steps between exchanges (Fig 4)
+    num_exchanges: int = 50          # c;  total iterations = c * iters_per_exchange
+    solvers: int = 125               # chains per process (Fig 5)
+    seed_with: Optional[str] = None  # None | "greedy"  (initialisation variant)
+
+
+class SAState(NamedTuple):
+    p: Array        # current permutation per chain        (..., N)
+    f: Array        # current objective                    (...,)
+    best_p: Array   # best-so-far permutation              (..., N)
+    best_f: Array   # best-so-far objective                (...,)
+    temp: Array     # current temperature                  (...,)
+
+
+def initial_temperature(f0: Array, mu: float, phi: float) -> Array:
+    return mu * f0 / -jnp.log(phi)
+
+
+def cool(temp: Array, cfg: SAConfig, beta: Array) -> Array:
+    if cfg.schedule == "linear":
+        return temp * cfg.q
+    if cfg.schedule == "cauchy":
+        return temp / (1.0 + beta * temp)
+    raise ValueError(f"unknown schedule {cfg.schedule!r}")
+
+
+def init_chain(C: Array, M: Array, key: Array, cfg: SAConfig,
+               identity: Optional[Array] = None) -> SAState:
+    """identity: when given (seed_with='identity'), this chain starts from
+    the scheduler's as-allocated order instead of a random permutation --
+    the greedy-initialisation variant the paper cites ([9])."""
+    n = C.shape[0]
+    p = identity if identity is not None else qap.random_permutation(key, n)
+    f = qap.objective(C, M, p)
+    t0 = initial_temperature(f, cfg.mu, cfg.phi)
+    return SAState(p=p, f=f, best_p=p, best_f=f, temp=t0)
+
+
+def temperature_step(C: Array, M: Array, state: SAState, key: Array,
+                     cfg: SAConfig, beta: Array) -> SAState:
+    """One temperature level: sequential candidate scan with acceptance cap."""
+    n = state.p.shape[0]
+    kpair, kacc = jax.random.split(key)
+    pairs = qap.random_swap_pairs(kpair, cfg.max_neighbors, n)
+    us = jax.random.uniform(kacc, (cfg.max_neighbors,))
+
+    def body(carry, inputs):
+        p, f, best_p, best_f, successes = carry
+        ab, u = inputs
+        d = qap.swap_delta(C, M, p, ab[0], ab[1])
+        accept = ((d < 0) | (u < jnp.exp(-d / jnp.maximum(state.temp, 1e-9)))) \
+            & (successes < cfg.max_success)
+        p_new = qap.swap_positions(p, ab[0], ab[1])
+        p = jnp.where(accept, p_new, p)
+        f = jnp.where(accept, f + d, f)
+        better = f < best_f
+        best_p = jnp.where(better, p, best_p)
+        best_f = jnp.where(better, f, best_f)
+        return (p, f, best_p, best_f, successes + accept.astype(jnp.int32)), None
+
+    (p, f, best_p, best_f, _), _ = jax.lax.scan(
+        body, (state.p, state.f, state.best_p, state.best_f, jnp.int32(0)),
+        (pairs, us))
+    temp = jnp.maximum(cool(state.temp, cfg, beta), cfg.t_final)
+    return SAState(p=p, f=f, best_p=best_p, best_f=best_f, temp=temp)
+
+
+def _adopt_best(state: SAState, best_p: Array, best_f: Array) -> SAState:
+    """Paper: each process makes the broadcast best its candidate solution."""
+    better = best_f < state.best_f
+    return state._replace(p=best_p, f=best_f,
+                          best_p=jnp.where(better[..., None], best_p, state.best_p),
+                          best_f=jnp.minimum(best_f, state.best_f))
+
+
+def _chain_round(C, M, state, key, cfg: SAConfig, beta):
+    """iters_per_exchange temperature steps for one chain."""
+    keys = jax.random.split(key, cfg.iters_per_exchange)
+    def step(s, k):
+        return temperature_step(C, M, s, k, cfg, beta), None
+    state, _ = jax.lax.scan(step, state, keys)
+    return state
+
+
+def make_beta(C: Array, M: Array, key: Array, cfg: SAConfig) -> Array:
+    """Cauchy beta from T0/Tf and the total number of coolings."""
+    n = C.shape[0]
+    f0 = qap.objective(C, M, qap.random_permutation(key, n))
+    t0 = initial_temperature(f0, cfg.mu, cfg.phi)
+    n_cool = cfg.num_exchanges * cfg.iters_per_exchange
+    return (t0 - cfg.t_final) / (n_cool * t0 * cfg.t_final)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "num_processes", "exchange"))
+def run_psa(C: Array, M: Array, key: Array, cfg: SAConfig,
+            num_processes: int = 4, exchange: bool = True
+            ) -> Tuple[Array, Array, Array]:
+    """Parallel SA on a (num_processes, solvers) chain grid (single host).
+
+    Returns (best_perm, best_f, history) where history[r] is the global best
+    objective after exchange round r.
+    """
+    kinit, kbeta, krun = jax.random.split(key, 3)
+    beta = make_beta(C, M, kbeta, cfg)
+
+    chain_keys = jax.random.split(kinit, num_processes * cfg.solvers) \
+        .reshape(num_processes, cfg.solvers, 2)
+    init = jax.vmap(jax.vmap(lambda k: init_chain(C, M, k, cfg)))(chain_keys)
+    if cfg.seed_with == "identity":
+        # chain 0 of every process starts from the as-allocated order
+        n = C.shape[0]
+        ident = init_chain(C, M, chain_keys[0, 0], cfg,
+                           identity=jnp.arange(n, dtype=jnp.int32))
+        init = jax.tree.map(
+            lambda all_, one: all_.at[:, 0].set(
+                jnp.broadcast_to(one, (num_processes,) + one.shape)),
+            init, ident)
+
+    def round_step(state, key):
+        keys = jax.random.split(key, num_processes * cfg.solvers) \
+            .reshape(num_processes, cfg.solvers, 2)
+        state = jax.vmap(jax.vmap(
+            lambda s, k: _chain_round(C, M, s, k, cfg, beta)))(state, keys)
+        gbest_f = state.best_f.min()
+        flat = state.best_f.reshape(-1)
+        gbest_p = state.best_p.reshape(-1, state.best_p.shape[-1])[jnp.argmin(flat)]
+        if exchange:
+            bp = jnp.broadcast_to(gbest_p, state.p.shape)
+            bf = jnp.broadcast_to(gbest_f, state.f.shape)
+            state = _adopt_best(state, bp, bf)
+        return state, gbest_f
+
+    round_keys = jax.random.split(krun, cfg.num_exchanges)
+    state, history = jax.lax.scan(round_step, init, round_keys)
+
+    flat_f = state.best_f.reshape(-1)
+    i = jnp.argmin(flat_f)
+    best_p = state.best_p.reshape(-1, state.best_p.shape[-1])[i]
+    return best_p, flat_f[i], history

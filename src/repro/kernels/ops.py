@@ -1,0 +1,37 @@
+"""Dispatch wrappers for the QAP kernels.
+
+On TPU backends the Pallas kernels are used; on CPU (this container) the
+pure-jnp references run, with ``interpret=True`` available for kernel
+validation.  Call sites in ``repro.core`` go through these wrappers only.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .qap_delta import qap_delta_pallas
+from .qap_objective import qap_objective_pallas, MAX_KERNEL_N, _pad_to, LANE
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def qap_objective(C: Array, M: Array, perms: Array, *,
+                  force_pallas: bool = False, interpret: bool = False) -> Array:
+    """Batched objective F (B,) for perms (B, N)."""
+    n = C.shape[0]
+    fits = _pad_to(max(n, LANE), LANE) <= MAX_KERNEL_N
+    if force_pallas or (_on_tpu() and fits):
+        return qap_objective_pallas(C, M, perms, interpret=interpret or not _on_tpu())
+    return ref.qap_objective_ref(C, M, perms)
+
+
+def qap_delta(C: Array, M: Array, p: Array, pairs: Array, *,
+              force_pallas: bool = False, interpret: bool = False) -> Array:
+    """Batched swap deltas (K,) for pairs (K, 2)."""
+    if force_pallas or _on_tpu():
+        return qap_delta_pallas(C, M, p, pairs, interpret=interpret or not _on_tpu())
+    return ref.qap_delta_ref(C, M, p, pairs)

@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: batched O(N) swap-delta evaluation.
+
+The SA hot loop: the paper (S5) credits simulated annealing's speed to
+incremental objective recomputation -- a swap of two positions changes F by a
+quantity computable in O(N).  This kernel evaluates a batch of K candidate
+swaps against one current permutation, one program instance per candidate.
+
+TPU adaptation (DESIGN.md S4): the candidate's four matrix rows
+(C[a,:], C[b,:], C[:,a], C[:,b] via C^T, and M rows/cols for the swapped
+nodes u = p[a], v = p[b]) are streamed HBM->VMEM by the BlockSpec index maps
+driven from a scalar-prefetch table -- no full-matrix residency, so the
+working set is O(N) per candidate regardless of problem size.  The only
+dynamic addressing inside the kernel body is a 1-D gather by the permutation
+(``jnp.take``), which Mosaic supports as a dynamic gather; correctness is
+validated in interpret mode against ``ref.qap_delta_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+LANE = 128
+
+
+def _pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _delta_kernel(info_ref,            # (K, 4) int32 scalar prefetch: a, b, u, v
+                  p_ref,               # (n_pad,) current permutation
+                  c_row_a, c_row_b,    # (1, n_pad) rows of C
+                  ct_row_a, ct_row_b,  # (1, n_pad) rows of C^T (= columns of C)
+                  m_row_u, m_row_v,    # (1, n_pad) rows of M
+                  mt_row_u, mt_row_v,  # (1, n_pad) rows of M^T (= columns of M)
+                  out_ref,             # (1,) f32
+                  *, n_pad: int):
+    k = pl.program_id(0)
+    a = info_ref[k, 0]
+    b = info_ref[k, 1]
+
+    p = p_ref[...]
+    idx = jax.lax.iota(jnp.int32, n_pad)
+    mask = (idx != a) & (idx != b)
+
+    ca = c_row_a[0, :].astype(jnp.float32)     # C[a, :]
+    cb = c_row_b[0, :].astype(jnp.float32)     # C[b, :]
+    cta = ct_row_a[0, :].astype(jnp.float32)   # C[:, a]
+    ctb = ct_row_b[0, :].astype(jnp.float32)   # C[:, b]
+    mu = m_row_u[0, :].astype(jnp.float32)     # M[u, :]
+    mv = m_row_v[0, :].astype(jnp.float32)     # M[v, :]
+    mtu = mt_row_u[0, :].astype(jnp.float32)   # M[:, u]
+    mtv = mt_row_v[0, :].astype(jnp.float32)   # M[:, v]
+
+    # Gathers of the node-indexed columns/rows by the current permutation.
+    m_p_v = jnp.take(mtv, p, axis=0)           # M[p, v]
+    m_p_u = jnp.take(mtu, p, axis=0)           # M[p, u]
+    m_v_p = jnp.take(mv, p, axis=0)            # M[v, p]
+    m_u_p = jnp.take(mu, p, axis=0)            # M[u, p]
+
+    col = jnp.where(mask, (cta - ctb) * (m_p_v - m_p_u), 0.0).sum()
+    row = jnp.where(mask, (ca - cb) * (m_v_p - m_u_p), 0.0).sum()
+
+    # Corner terms via dynamic scalar picks from the already-resident rows.
+    caa = jnp.take(cta, a)                     # C[a, a]
+    cbb = jnp.take(ctb, b)                     # C[b, b]
+    cab = jnp.take(ca, b)                      # C[a, b]
+    cba = jnp.take(cb, a)                      # C[b, a]
+    muu = jnp.take(m_p_u, a)                   # M[p[a], u] = M[u, u]
+    mvv = jnp.take(m_p_v, b)                   # M[v, v]
+    muv = jnp.take(m_p_v, a)                   # M[u, v]
+    mvu = jnp.take(m_p_u, b)                   # M[v, u]
+
+    corner = ((caa - cbb) * (mvv - muu)
+              + cab * (mvu - muv)
+              + cba * (muv - mvu))
+    out_ref[0] = col + row + corner
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def qap_delta_pallas(C: Array, M: Array, p: Array, pairs: Array,
+                     interpret: bool = False) -> Array:
+    """Batched swap deltas.  C, M: (N, N); p: (N,); pairs: (K, 2) -> (K,) f32."""
+    n = C.shape[0]
+    k = pairs.shape[0]
+    n_pad = _pad_to(max(n, LANE), LANE)
+    pad = n_pad - n
+
+    Cp = jnp.pad(C.astype(jnp.float32), ((0, pad), (0, pad)))
+    Mp = jnp.pad(M.astype(jnp.float32), ((0, pad), (0, pad)))
+    CpT = Cp.T
+    MpT = Mp.T
+    pp = jnp.concatenate([p.astype(jnp.int32),
+                          jnp.arange(n, n_pad, dtype=jnp.int32)])
+
+    a = pairs[:, 0].astype(jnp.int32)
+    b = pairs[:, 1].astype(jnp.int32)
+    info = jnp.stack([a, b, pp[a], pp[b]], axis=1)   # (K, 4): a, b, u, v
+
+    row = lambda col_of_info: (lambda i, info_ref: (info_ref[i, col_of_info], 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((n_pad,), lambda i, info_ref: (0,)),   # p (resident)
+            pl.BlockSpec((1, n_pad), row(0)),                   # C[a, :]
+            pl.BlockSpec((1, n_pad), row(1)),                   # C[b, :]
+            pl.BlockSpec((1, n_pad), row(0)),                   # C^T[a, :]
+            pl.BlockSpec((1, n_pad), row(1)),                   # C^T[b, :]
+            pl.BlockSpec((1, n_pad), row(2)),                   # M[u, :]
+            pl.BlockSpec((1, n_pad), row(3)),                   # M[v, :]
+            pl.BlockSpec((1, n_pad), row(2)),                   # M^T[u, :]
+            pl.BlockSpec((1, n_pad), row(3)),                   # M^T[v, :]
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i, info_ref: (i,)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_delta_kernel, n_pad=n_pad),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((k,), jnp.float32),
+        interpret=interpret,
+    )(info, pp, Cp, Cp, CpT, CpT, Mp, Mp, MpT, MpT)
+    return out

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: batched QAP objective evaluation.
+
+The GA hot loop: every new descendant needs a full O(N^2) objective
+re-evaluation (the paper, S5, cites this as the GA's cost driver).  On TPU we
+adapt the CPU gather loop to the MXU: the permuted distance matrix
+``M[p][:, p]`` is computed as ``P @ M @ P^T`` with ``P = one_hot(p)`` -- two
+N x N matmuls that run on the systolic array -- followed by an elementwise
+product with the flow matrix ``C`` and a full reduction.
+
+VMEM budget per program instance (grid = (B,)): P, M, C and two N x N
+temporaries in f32.  For the paper's largest order (729, padded to 768):
+5 * 768^2 * 4B = 11.8 MB < 16 MB VMEM.  Orders above ``MAX_KERNEL_N`` fall
+back to the reference implementation (handled by ops.py).
+
+Padding: matrices are zero-padded to a multiple of 128 (MXU lane width);
+permutations are padded with the identity on the pad range, and since the
+padded rows/cols of C are zero they contribute nothing to F.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+LANE = 128
+MAX_KERNEL_N = 768  # padded-N cap so the working set fits VMEM
+
+
+def _pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _objective_kernel(p_ref, c_ref, m_ref, out_ref, *, n_pad: int):
+    """One program instance == one permutation of the batch."""
+    p = p_ref[0, :]                                   # (n_pad,) int32
+    onehot = (p[:, None] == jax.lax.broadcasted_iota(jnp.int32, (n_pad, n_pad), 1))
+    P = onehot.astype(jnp.float32)                    # (n_pad, n_pad)
+    M = m_ref[...].astype(jnp.float32)
+    C = c_ref[...].astype(jnp.float32)
+    # M[p][:, p] == P @ M @ P^T  (both matmuls hit the MXU).
+    PM = jax.lax.dot_general(P, M, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    PMPt = jax.lax.dot_general(PM, P, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    out_ref[0] = jnp.sum(C * PMPt)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def qap_objective_pallas(C: Array, M: Array, perms: Array,
+                         interpret: bool = False) -> Array:
+    """Batched objective on TPU.  C, M: (N, N); perms: (B, N) -> (B,) f32."""
+    n = C.shape[0]
+    b = perms.shape[0]
+    n_pad = _pad_to(max(n, LANE), LANE)
+    if n_pad > MAX_KERNEL_N:
+        raise ValueError(f"padded N={n_pad} exceeds kernel cap {MAX_KERNEL_N}")
+
+    pad = n_pad - n
+    Cp = jnp.pad(C.astype(jnp.float32), ((0, pad), (0, pad)))
+    Mp = jnp.pad(M.astype(jnp.float32), ((0, pad), (0, pad)))
+    # Identity on the pad range keeps perms valid permutations of 0..n_pad-1.
+    pad_ids = jnp.broadcast_to(jnp.arange(n, n_pad, dtype=perms.dtype), (b, pad))
+    Pp = jnp.concatenate([perms, pad_ids], axis=1)
+
+    out = pl.pallas_call(
+        functools.partial(_objective_kernel, n_pad=n_pad),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, n_pad), lambda i: (i, 0)),          # this perm
+            pl.BlockSpec((n_pad, n_pad), lambda i: (0, 0)),      # C (resident)
+            pl.BlockSpec((n_pad, n_pad), lambda i: (0, 0)),      # M (resident)
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=interpret,
+    )(Pp, Cp, Mp)
+    return out

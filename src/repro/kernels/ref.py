@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for the QAP Pallas kernels.
+
+These are the correctness references used by tests (assert_allclose against
+the interpret-mode kernels) and the CPU fallback dispatch in ``ops.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def qap_objective_ref(C: Array, M: Array, perms: Array) -> Array:
+    """Batched objective: F[b] = sum_{k,l} C[k,l] * M[p[b,k], p[b,l]].
+
+    C, M: (N, N); perms: (B, N) int32.  Returns (B,) f32.
+    """
+    def one(p):
+        Mp = jnp.take(jnp.take(M, p, axis=0), p, axis=1)
+        return jnp.sum(C.astype(jnp.float32) * Mp.astype(jnp.float32))
+    return jax.vmap(one)(perms)
+
+
+def selective_scan_ref(u: Array, dt: Array, a: Array, b: Array, c: Array
+                       ) -> Array:
+    """Oracle for the Mamba selective scan kernel.
+
+    u, dt: (B, S, D); a: (D, N); b, c: (B, S, N).  Returns y (B, S, D) f32:
+        h_t = exp(dt_t * A) * h_{t-1} + (dt_t * u_t) * B_t
+        y_t = h_t @ C_t
+    """
+    uf = u.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    bsz, s, d = u.shape
+    n = a.shape[1]
+
+    def step(h, t):
+        a_bar = jnp.exp(dtf[:, t, :, None] * af[None])          # (B, D, N)
+        bx = (dtf[:, t] * uf[:, t])[..., None] * bf[:, t, None, :]
+        h = a_bar * h + bx
+        y = jnp.einsum("bdn,bn->bd", h, cf[:, t])
+        return h, y
+
+    h0 = jnp.zeros((bsz, d, n), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, jnp.arange(s))
+    return ys.swapaxes(0, 1)                                     # (B, S, D)
+
+
+def qap_delta_ref(C: Array, M: Array, p: Array, pairs: Array) -> Array:
+    """Batched swap deltas: delta[k] = F(swap(p, a_k, b_k)) - F(p).
+
+    C, M: (N, N); p: (N,) int32; pairs: (K, 2) int32.  Returns (K,) f32.
+    O(N) per pair -- same formula as ``repro.core.qap.swap_delta``.
+    """
+    Cf = C.astype(jnp.float32)
+    Mf = M.astype(jnp.float32)
+    n = p.shape[0]
+    idx = jnp.arange(n)
+
+    def one(ab):
+        a, b = ab[0], ab[1]
+        u, v = p[a], p[b]
+        mask = (idx != a) & (idx != b)
+        col = jnp.where(mask, (Cf[:, a] - Cf[:, b]) * (Mf[p, v] - Mf[p, u]), 0.0).sum()
+        row = jnp.where(mask, (Cf[a, :] - Cf[b, :]) * (Mf[v, p] - Mf[u, p]), 0.0).sum()
+        corner = ((Cf[a, a] - Cf[b, b]) * (Mf[v, v] - Mf[u, u])
+                  + Cf[a, b] * (Mf[v, u] - Mf[u, v])
+                  + Cf[b, a] * (Mf[u, v] - Mf[v, u]))
+        return col + row + corner
+
+    return jax.vmap(one)(pairs)

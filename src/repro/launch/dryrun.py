@@ -1,0 +1,264 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  This module is the ONLY place the 512-device
+# placeholder platform is created; smoke tests and benches see 1 device.
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from typing import Any, Dict, Optional, Tuple  # noqa: E402
+
+import numpy as np       # noqa: E402
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import configs                                    # noqa: E402
+from repro.models.api import Model, batch_partition_specs, input_specs  # noqa: E402
+from repro.models.config import LM_SHAPES, is_subquadratic, shape_cell  # noqa: E402
+from repro.parallel import sharding as sh                     # noqa: E402
+from repro.topology import hlocost                             # noqa: E402
+from repro.train import optimizer as opt_lib                  # noqa: E402
+from repro.train.step import (make_decode_step, make_prefill_step,  # noqa: E402
+                              make_train_step)
+from repro.launch.mesh import make_production_mesh             # noqa: E402
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+
+def _parse_overrides(pairs):
+    out = {}
+    for p in pairs or []:
+        k, v = p.split("=", 1)
+        try:
+            out[k] = int(v)
+        except ValueError:
+            out[k] = {"true": True, "false": False}.get(v.lower(), v)
+    return out
+
+
+def _sharded_bytes_per_device(tree, spec_tree, mesh) -> int:
+    """Analytic per-device bytes of a sharded pytree (exact for weights)."""
+    total = 0
+    specs = jax.tree.leaves(spec_tree, is_leaf=lambda x: isinstance(x, P))
+    leaves = jax.tree.leaves(tree)
+    for leaf, spec in zip(leaves, specs):
+        shards = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            for a in axes:
+                shards *= mesh.shape[a]
+        total += int(np.prod(leaf.shape)) * leaf.dtype.itemsize // max(shards, 1)
+    return total
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               overrides: Optional[Dict[str, Any]] = None,
+               rule_overrides: Optional[Dict[str, Any]] = None,
+               microbatch: int = 1) -> Dict[str, Any]:
+    """Lower + compile one (arch x shape x mesh) cell; return the record."""
+    cfg = configs.get_config(arch)
+    if overrides:
+        cfg = cfg.with_overrides(**overrides)
+    cell = shape_cell(shape_name)
+
+    if cell.name == "long_500k" and not is_subquadratic(cfg):
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped",
+                "reason": "pure full-attention arch; long_500k requires "
+                          "sub-quadratic attention (DESIGN.md S5)"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ndev = int(np.prod(list(mesh.shape.values())))
+    rules = sh.rules_for_mesh(mesh, rule_overrides)
+    dp_size = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    if cell.global_batch % dp_size != 0:
+        # long_500k has global_batch=1: batch cannot shard over the data
+        # axes; activations/caches replicate on batch and shard on seq/tp.
+        rules = dict(rules)
+        rules["batch"] = None
+    model = Model(cfg)
+    t0 = time.time()
+
+    with sh.use_rules(rules), jax.set_mesh(mesh):
+        decls = model.decls()
+        aparams = model.abstract()
+        pspecs = sh.resolve_tree(model.specs(), rules)
+        psh = _named(mesh, pspecs)
+        batch_sds = input_specs(cfg, cell)
+        bspecs = sh.resolve_tree(batch_partition_specs(cfg, cell), rules)
+        bsh = {k: NamedSharding(mesh, bspecs[k]) for k in batch_sds}
+        dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+
+        if cell.kind == "train":
+            ocfg = opt_lib.OptConfig(moment_dtype=cfg.opt_dtype)
+            aopt = opt_lib.abstract_state(ocfg, aparams)
+            ospecs = opt_lib.state_specs(ocfg, pspecs)
+            osh = jax.tree.map(lambda s: NamedSharding(mesh, s), ospecs,
+                               is_leaf=lambda x: isinstance(x, P))
+            sched = opt_lib.warmup_cosine(3e-4, 100, 10_000)
+            step = make_train_step(model, ocfg, sched, num_groups=dp,
+                                   microbatch=microbatch)
+            mesh_none = NamedSharding(mesh, P())
+            out_sh = (psh, osh, {"loss": mesh_none, "grad_norm": mesh_none,
+                                 "lr": mesh_none, "step": mesh_none})
+            jitted = jax.jit(step, in_shardings=(psh, osh, bsh),
+                             out_shardings=out_sh, donate_argnums=(0, 1))
+            lowered = jitted.lower(aparams, aopt, batch_sds)
+        elif cell.kind == "prefill":
+            fn = make_prefill_step(model, num_groups=dp)
+            csh = _named(mesh, sh.resolve_tree(model.cache_specs(), rules))
+            logit_sh = NamedSharding(mesh, sh.resolve_spec(P("batch", "tp"), rules))
+            jitted = jax.jit(fn, in_shardings=(psh, bsh),
+                             out_shardings=(logit_sh, csh))
+            lowered = jitted.lower(aparams, batch_sds)
+        else:  # decode
+            acache = model.abstract_cache(cell.global_batch, cell.seq_len)
+            cspecs = sh.resolve_tree(model.cache_specs(), rules)
+            csh = _named(mesh, cspecs)
+            fn = make_decode_step(model)
+            pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+            logit_sh = NamedSharding(mesh, sh.resolve_spec(P("batch", "tp"), rules))
+            jitted = jax.jit(fn, in_shardings=(psh, csh, bsh,
+                                               NamedSharding(mesh, P())),
+                             out_shardings=(logit_sh, csh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(aparams, acache, batch_sds, pos_sds)
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    # ---- analyses ---------------------------------------------------------
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok", "num_devices": ndev,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "overrides": overrides or {}, "rule_overrides": rule_overrides or {},
+        "microbatch": microbatch,
+        "num_params": model.num_params(),
+    }
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        record["flops"] = float(cost.get("flops", 0.0))
+        record["hlo_bytes"] = float(sum(v for k, v in cost.items()
+                                        if k.startswith("bytes accessed")
+                                        and k == "bytes accessed"))
+        record["cost_raw"] = {k: float(v) for k, v in cost.items()
+                              if isinstance(v, (int, float))}
+    except Exception as e:                          # pragma: no cover
+        record["cost_error"] = repr(e)
+    try:
+        mem = compiled.memory_analysis()
+        record["memory_analysis"] = {
+            a: int(getattr(mem, a)) for a in
+            ("generated_code_size_in_bytes", "argument_size_in_bytes",
+             "output_size_in_bytes", "temp_size_in_bytes", "alias_size_in_bytes")
+            if hasattr(mem, a)}
+    except Exception as e:                          # pragma: no cover
+        record["memory_analysis_error"] = repr(e)
+
+    # analytic per-device weight/optimizer/cache bytes (exact)
+    wb = _sharded_bytes_per_device(aparams, pspecs, mesh)
+    record["weight_bytes_per_device"] = wb
+    if cell.kind == "train":
+        record["opt_bytes_per_device"] = _sharded_bytes_per_device(
+            jax.tree.leaves(aopt.mu) and aopt.mu or {}, ospecs.mu, mesh) + \
+            _sharded_bytes_per_device(aopt.nu, ospecs.nu, mesh)
+    if cell.kind == "decode":
+        record["cache_bytes_per_device"] = _sharded_bytes_per_device(
+            acache, cspecs, mesh)
+
+    # Trip-count-aware HLO cost model (XLA's cost_analysis counts while
+    # bodies once; see topology/hlocost.py).  All values are per-device.
+    hlo = compiled.as_text()
+    hc = hlocost.analyze(hlo, ndev)
+    record["flops_hlo"] = hc.flops
+    record["hbm_bytes"] = hc.hbm_bytes
+    record["collective_bytes"] = hc.collective_bytes
+    record["collectives"] = hc.by_collective
+    record["hlo_size"] = len(hlo)
+    return record
+
+
+def cell_tag(rec: Dict[str, Any]) -> str:
+    return f"{rec['arch']}.{rec['shape']}.{rec['mesh']}"
+
+
+def run(arch_list, shape_list, meshes, overrides=None, rule_overrides=None,
+        microbatch=1, out_dir=ARTIFACT_DIR, tag="") -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    for arch in arch_list:
+        for shape in shape_list:
+            for multi in meshes:
+                name = f"{arch}.{shape}.{'multi' if multi else 'single'}"
+                if tag:
+                    name += f".{tag}"
+                path = os.path.join(out_dir, name + ".json")
+                if os.path.exists(path):
+                    print(f"== {name}: cached")
+                    continue
+                print(f"== {name}: lowering...", flush=True)
+                try:
+                    rec = lower_cell(arch, shape, multi, overrides,
+                                     rule_overrides, microbatch)
+                except Exception:
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if multi else "single",
+                           "status": "error",
+                           "traceback": traceback.format_exc()}
+                rec["tag"] = tag
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec.get("status")
+                print(f"   -> {status} "
+                      f"(compile {rec.get('compile_s', '-')}s, "
+                      f"flops {rec.get('flops', 0):.3g}, "
+                      f"coll {rec.get('collective_bytes', 0):.3g}B)", flush=True)
+                if status == "error":
+                    print(rec["traceback"].splitlines()[-1])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--override", action="append", default=[])
+    ap.add_argument("--rule", action="append", default=[],
+                    help="logical=physical sharding rule override, e.g. fsdp=data")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=ARTIFACT_DIR)
+    args = ap.parse_args()
+
+    archs = configs.ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = [c.name for c in LM_SHAPES] if args.shape == "all" \
+        else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    rules = {}
+    for r in args.rule:
+        k, v = r.split("=", 1)
+        rules[k] = tuple(v.split("+")) if v else None
+    run(archs, shapes, meshes, _parse_overrides(args.override), rules or None,
+        args.microbatch, args.out, args.tag)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Must precede all other imports (see dryrun.py).
+
+import argparse     # noqa: E402
+import re           # noqa: E402
+
+"""Profiling aid for the perf loop (SPerf): compile one cell and print the
+top HBM-traffic and collective instructions with their trip multipliers --
+the dry-run equivalent of reading a profile."""
+
+from repro.topology import hlocost  # noqa: E402
+
+
+def top_contributors(txt: str, ndev: int, k: int = 12):
+    comps = hlocost.parse_module(txt)
+    entry = None
+    for line in txt.splitlines():
+        if line.startswith("ENTRY"):
+            entry = hlocost._COMP_HEADER.match(line.strip()).group(2)
+            break
+    mult = {n: 0.0 for n in comps}
+    mult[entry] = 1.0
+    fusion_int = {n: False for n in comps}
+    order, seen, i = [entry], {entry}, 0
+    while i < len(order):
+        cn = order[i]
+        i += 1
+        for inst in comps[cn].instructions:
+            trip = hlocost._trip_count(inst) if inst.op == "while" else 1
+            for role, callee in hlocost._called_comps(inst):
+                if callee not in comps:
+                    continue
+                mult[callee] += mult[cn] * (trip if role == "body" else 1)
+                if role in ("calls", "to_apply") and inst.op == "fusion":
+                    fusion_int[callee] = True
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+
+    hbm_rows, coll_rows = [], []
+    for cn, comp in comps.items():
+        m = mult.get(cn, 0)
+        if m == 0:
+            continue
+        internal = fusion_int.get(cn, False)
+        for inst in comp.instructions:
+            kind = inst.op.replace("-start", "")
+            if kind in hlocost.COLLECTIVE_KINDS and not inst.op.endswith("-done"):
+                md = re.search(r'op_name="([^"]+)"', inst.line)
+                coll_rows.append((m * hlocost._type_bytes(inst.type_str), m,
+                                  kind, inst.type_str[:44],
+                                  (md.group(1) if md else "")[-70:]))
+            if internal or inst.op in hlocost._FREE_OPS:
+                continue
+            b = hlocost._type_bytes(inst.type_str)
+            if inst.op == "fusion":
+                callee = next((c for r, c in hlocost._called_comps(inst)
+                               if r == "calls" and c in comps), None)
+                if callee:
+                    fcomp = comps[callee]
+                    eff = hlocost._effective_param_bytes(fcomp)
+                    b = hlocost._fusion_result_bytes(fcomp, b) + sum(eff.values())
+            else:
+                for om in re.finditer(r"%([\w\.\-]+)", inst.args):
+                    t = comp.symbols.get(om.group(1))
+                    b += hlocost._type_bytes(t) if t else 0
+            md = re.search(r'op_name="([^"]+)"', inst.line)
+            hbm_rows.append((m * b, m, inst.op, inst.type_str[:44],
+                             (md.group(1) if md else "")[-70:]))
+    hbm_rows.sort(reverse=True)
+    coll_rows.sort(reverse=True)
+    print("== top HBM traffic (bytes x trips) ==")
+    for r in hbm_rows[:k]:
+        print(f"  {r[0]:.3g}  x{r[1]:.0f} {r[2]:<10} {r[3]:<44} {r[4]}")
+    print("== top collectives (result bytes x trips) ==")
+    for r in coll_rows[:k]:
+        print(f"  {r[0]:.3g}  x{r[1]:.0f} {r[2]:<14} {r[3]:<44} {r[4]}")
+
+
+def main() -> None:
+    from repro.launch.dryrun import _parse_overrides
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--override", action="append", default=[])
+    ap.add_argument("--rule", action="append", default=[])
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+
+    import repro.configs as configs
+    from repro.launch import placement_bench
+    overrides = _parse_overrides(args.override)
+    rules = {}
+    for r in args.rule:
+        kk, v = r.split("=", 1)
+        rules[kk] = tuple(v.split("+")) if v else None
+    # route through compile_cell with patched config
+    orig = configs.get_config
+    configs.get_config = lambda a: orig(a).with_overrides(**overrides) \
+        if overrides else orig(a)
+    if rules:
+        from repro.parallel import sharding as sh
+        orig_rules = sh.rules_for_mesh
+        sh.rules_for_mesh = lambda mesh, o=None: {**orig_rules(mesh, o), **rules}
+    compiled, mesh = placement_bench.compile_cell(args.arch, args.shape,
+                                                  args.multi)
+    import numpy as np
+    ndev = int(np.prod(list(mesh.shape.values())))
+    top_contributors(compiled.as_text(), ndev, args.top)
+
+
+if __name__ == "__main__":
+    main()

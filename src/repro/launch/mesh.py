@@ -1,0 +1,47 @@
+"""Production mesh construction (deliverable e).
+
+``make_production_mesh`` builds the assigned meshes:
+
+  * single-pod:  (16, 16)      axes ("data", "model")   = 256 chips
+  * multi-pod:   (2, 16, 16)   axes ("pod", "data", "model") = 512 chips
+
+``make_mesh_with_devices`` builds a mesh from an explicit device order --
+this is how the paper's technique lands: ``launch/placement.py`` computes a
+QAP-optimal permutation of physical devices and the mesh is rebuilt with that
+order, changing which physical chip backs each logical coordinate.
+
+No jax device state is touched at import time (functions only).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def production_shape(multi_pod: bool = False) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    if multi_pod:
+        return (2, 16, 16), ("pod", "data", "model")
+    return (16, 16), ("data", "model")
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape, axes = production_shape(multi_pod)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh_with_devices(devices: Sequence, shape: Tuple[int, ...],
+                           axes: Tuple[str, ...]) -> Mesh:
+    dev = np.asarray(devices, dtype=object).reshape(shape)
+    return Mesh(dev, axes)
+
+
+def make_local_mesh(axes: Tuple[str, ...] = ("data", "model")) -> Mesh:
+    """Smallest mesh over whatever devices exist (CPU demos / examples)."""
+    n = jax.device_count()
+    shape = (1,) * (len(axes) - 1) + (n,)
+    return make_mesh_with_devices(jax.devices(), shape, axes)

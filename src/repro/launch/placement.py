@@ -1,0 +1,103 @@
+"""Topology-aware device placement: the paper's technique as a launcher
+feature.
+
+At job-launch time (exactly the paper's deployment: the mapping search runs
+before the job starts, on the job's own resources):
+
+  1. the step function is lowered+compiled once with the default device
+     order; the SPMD HLO gives the *program graph* C (logical-device traffic
+     matrix, ``topology.traffic``);
+  2. the physical machine gives the *system graph* M (ICI/DCI distance
+     matrix, ``topology.tpu``);
+  3. one of the paper's three parallel algorithms (PSA / PGA / PCA) solves
+     the QAP functional (1) for a permutation p: logical -> physical;
+  4. the mesh is rebuilt with the permuted device order and the job is
+     re-lowered against it.
+
+The predicted communication cost F(p) vs F(identity) is the placement gain
+reported in EXPERIMENTS.md and benchmarks/placement_gain.py.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+from repro.core import annealing, genetic, mapping as mapping_lib
+from repro.topology import hlocost, tpu, traffic as traffic_lib
+from .mesh import make_mesh_with_devices
+
+
+@dataclass
+class PlacementResult:
+    perm: np.ndarray
+    cost_before: float        # F(identity) -- default device order
+    cost_after: float         # F(p*)
+    algorithm: str
+    seconds: float
+
+    @property
+    def gain(self) -> float:
+        return 0.0 if self.cost_before == 0 else \
+            (self.cost_before - self.cost_after) / self.cost_before
+
+
+def traffic_from_compiled(compiled, num_devices: int) -> np.ndarray:
+    """Program graph C from a compiled step (trip-count aware)."""
+    hc = hlocost.analyze(compiled.as_text(), num_devices)
+    c = np.zeros((num_devices, num_devices), np.float64)
+    for op in hc.collective_ops:
+        c += traffic_lib.traffic_matrix([op], num_devices).astype(np.float64)
+    return c.astype(np.float32)
+
+
+def system_graph_for_mesh(mesh: Mesh) -> np.ndarray:
+    shape = tuple(mesh.shape.values())
+    spec = tpu.spec_for_mesh_shape(shape)
+    return tpu.distance_matrix(spec)
+
+
+# Budget presets follow the paper's S5 conclusions: SA meets resource-manager
+# timeouts for large graphs; GA/composite buy accuracy with more time.
+# Chains are seeded with the as-allocated order (paper's greedy-init
+# variant [9]) so the search refines the scheduler's placement rather than
+# re-discovering it from random starts.
+_FAST_SA = annealing.SAConfig(max_neighbors=25, iters_per_exchange=40,
+                              num_exchanges=30, solvers=16,
+                              seed_with="identity")
+_FAST_GA = genetic.GAConfig(generations=120, pop_size=64, seed_identity=True)
+
+
+def solve_placement(c: np.ndarray, m: np.ndarray, algorithm: str = "psa",
+                    key=None, num_processes: int = 4,
+                    sa_cfg: Optional[annealing.SAConfig] = None,
+                    ga_cfg: Optional[genetic.GAConfig] = None
+                    ) -> PlacementResult:
+    res = mapping_lib.find_mapping(
+        c, m, algorithm, key=key, num_processes=num_processes,
+        sa_cfg=sa_cfg or _FAST_SA, ga_cfg=ga_cfg or _FAST_GA)
+    return PlacementResult(perm=res.perm, cost_before=res.baseline,
+                           cost_after=res.objective, algorithm=algorithm,
+                           seconds=res.seconds)
+
+
+def apply_placement(mesh: Mesh, perm: np.ndarray) -> Mesh:
+    """Rebuild the mesh with logical coordinate k backed by device perm[k]."""
+    devices = np.asarray(mesh.devices).reshape(-1)[perm]
+    return make_mesh_with_devices(devices, tuple(mesh.shape.values()),
+                                  tuple(mesh.axis_names))
+
+
+def place_job(compiled, mesh: Mesh, algorithm: str = "psa", key=None
+              ) -> Tuple[Mesh, PlacementResult]:
+    """One-call integration used by launch/train.py."""
+    ndev = int(np.prod(list(mesh.shape.values())))
+    c = traffic_from_compiled(compiled, ndev)
+    m = system_graph_for_mesh(mesh)
+    result = solve_placement(c, m, algorithm, key=key)
+    return apply_placement(mesh, result.perm), result

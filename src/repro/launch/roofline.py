@@ -1,0 +1,145 @@
+"""Roofline derivation from dry-run artifacts (deliverable g).
+
+Reads ``artifacts/dryrun/*.json`` (written by launch/dryrun.py) and derives,
+per (arch x shape x mesh):
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s          [s]
+    memory term     = HLO_bytes_per_device / HBM_bw               [s]
+    collective term = collective_wire_bytes / (chips x link_bw)   [s]
+
+Hardware constants per the brief: 197 TFLOP/s bf16, 819 GB/s HBM,
+50 GB/s/link ICI (v5e).  FLOPs/bytes come from the trip-count-aware HLO cost
+model (topology/hlocost.py) because XLA's cost_analysis counts while bodies
+once; both are recorded in the artifact.  All HLO quantities are per-device
+(the module is SPMD-partitioned); collective bytes are summed over
+participants, divided by chips x link_bw per the brief.
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) for train; 2*N*D for
+prefill; 2*N*B for decode.  The ratio MODEL_FLOPS / (HLO_FLOPs x chips)
+flags remat/redundancy waste.
+
+    PYTHONPATH=src python -m repro.launch.roofline [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro import configs
+from repro.models.config import shape_cell
+from repro.topology.tpu import HBM_BW, ICI_BW, PEAK_FLOPS
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts",
+                   "dryrun")
+
+_HINTS = {
+    "compute": "raise arithmetic efficiency: larger attention chunks cut "
+               "recompute; microbatching trades latency for reuse",
+    "memory": "cut HBM traffic: fuse attention score chains (Pallas flash "
+              "kernel on TPU), raise attn chunk sizes, remat policy 'dots'",
+    "collective": "cut wire bytes: keep fsdp gathers in bf16, scope fsdp to "
+                  "fewer axes, QAP placement to shorten hop distance",
+}
+
+
+def active_params(arch: str) -> int:
+    cfg = configs.get_config(arch)
+    from repro.models.api import Model
+    total = Model(cfg).num_params()
+    if cfg.num_experts > 0:
+        moe_layers = sum(ch in "EWMA" for ch in cfg.layer_pattern)
+        expert = 3 * cfg.num_experts * cfg.d_model * cfg.moe_d_ff
+        inactive = expert * (1.0 - cfg.num_experts_per_tok / cfg.num_experts)
+        total -= int(moe_layers * inactive)
+    return total
+
+
+def model_flops(arch: str, shape: str) -> float:
+    cell = shape_cell(shape)
+    n = active_params(arch)
+    if cell.kind == "train":
+        return 6.0 * n * cell.global_batch * cell.seq_len
+    if cell.kind == "prefill":
+        return 2.0 * n * cell.global_batch * cell.seq_len
+    return 2.0 * n * cell.global_batch          # decode: one token
+
+
+def derive(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    ndev = rec["num_devices"]
+    compute_s = rec.get("flops_hlo", 0.0) / PEAK_FLOPS
+    memory_s = rec.get("hbm_bytes", 0.0) / HBM_BW
+    collective_s = rec.get("collective_bytes", 0.0) / (ndev * ICI_BW)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_global = rec.get("flops_hlo", 0.0) * ndev
+    useful = mf / hlo_global if hlo_global else 0.0
+    # roofline fraction: ideal time / achievable time.  Train/prefill are
+    # compute-ideal (model flops at peak); decode is bandwidth-ideal (every
+    # step must at minimum stream weights + KV cache from HBM once).
+    cell = shape_cell(rec["shape"])
+    if cell.kind == "decode":
+        min_bytes = rec.get("weight_bytes_per_device", 0) + \
+            rec.get("cache_bytes_per_device", 0)
+        ideal_s = min_bytes / HBM_BW
+    else:
+        ideal_s = mf / (ndev * PEAK_FLOPS)
+    bound_s = max(terms.values())
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "tag": rec.get("tag", ""),
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dominant,
+        "model_flops": mf, "useful_ratio": useful,
+        "roofline_fraction": (ideal_s / bound_s) if bound_s else 0.0,
+        "hint": _HINTS[dominant],
+    }
+
+
+def load_all(mesh: Optional[str] = None, tag: str = "") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        rec = json.load(open(path))
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        if (rec.get("tag") or "") != tag:
+            continue
+        d = derive(rec)
+        if d:
+            rows.append(d)
+    return rows
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    out = ["| arch | shape | mesh | compute (s) | memory (s) | collective (s) "
+           "| dominant | MODEL/HLO flops | roofline frac |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.1%} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    rows = load_all(args.mesh, args.tag)
+    print(markdown_table(rows))
+    for r in rows:
+        print(f"# {r['arch']}.{r['shape']}: dominant={r['dominant']} -> "
+              f"{r['hint']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Model facade + input_specs: the contract used by the launcher/dry-run.
+
+``input_specs(cfg, cell)`` returns weak-type-correct ShapeDtypeStruct
+stand-ins for every model input of a shape cell -- the dry-run lowers against
+these with zero allocation.  ``batch_partition_specs`` gives the matching
+logical PartitionSpecs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import transformer
+from .config import ModelConfig, ShapeCell, shape_cell
+from .param import abstract_params, count_params, init_params, param_specs
+from .transformer import FRONTEND_DIMS
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # --- parameters ------------------------------------------------------
+    def decls(self):
+        return transformer.model_decls(self.cfg)
+
+    def init(self, key) -> Any:
+        return init_params(self.decls(), key)
+
+    def abstract(self) -> Any:
+        return abstract_params(self.decls())
+
+    def specs(self) -> Any:
+        return param_specs(self.decls())
+
+    def num_params(self) -> int:
+        return count_params(self.decls())
+
+    # --- compute ----------------------------------------------------------
+    def loss(self, params, batch, num_groups: int = 1):
+        return transformer.train_loss(params, batch, self.cfg, num_groups)
+
+    def prefill(self, params, batch, num_groups: int = 1, cache_len=None):
+        return transformer.prefill(params, batch, self.cfg, num_groups,
+                                   cache_len)
+
+    def decode_step(self, params, cache, batch, pos):
+        return transformer.decode_step(params, cache, batch, pos, self.cfg)
+
+    # --- caches -----------------------------------------------------------
+    def make_cache(self, batch: int, seq_len: int):
+        return transformer.make_cache(self.cfg, batch, seq_len)
+
+    def abstract_cache(self, batch: int, seq_len: int):
+        return transformer.abstract_cache(self.cfg, batch, seq_len)
+
+    def cache_specs(self):
+        return transformer.cache_spec_tree(self.cfg)
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for one (arch x shape) cell."""
+    b, s = cell.global_batch, cell.seq_len
+    tok = lambda *shape: jax.ShapeDtypeStruct(shape, jnp.int32)
+    if cell.kind == "train":
+        if cfg.frontend is not None:
+            fd = FRONTEND_DIMS[cfg.frontend]
+            return {"embeds": jax.ShapeDtypeStruct((b, s, fd), jnp.bfloat16),
+                    "labels": tok(b, s)}
+        return {"tokens": tok(b, s), "labels": tok(b, s)}
+    if cell.kind == "prefill":
+        if cfg.frontend is not None:
+            fd = FRONTEND_DIMS[cfg.frontend]
+            return {"embeds": jax.ShapeDtypeStruct((b, s, fd), jnp.bfloat16)}
+        return {"tokens": tok(b, s)}
+    # decode: one new token against a seq_len cache
+    if cfg.frontend is not None:
+        fd = FRONTEND_DIMS[cfg.frontend]
+        return {"embeds": jax.ShapeDtypeStruct((b, 1, fd), jnp.bfloat16)}
+    return {"tokens": tok(b, 1)}
+
+
+def batch_partition_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, P]:
+    specs: Dict[str, P] = {}
+    if cell.kind == "train":
+        specs["labels"] = P("batch", None)
+    if cfg.frontend is not None:
+        specs["embeds"] = P("batch", None, None)
+    else:
+        specs["tokens"] = P("batch", None)
+    return specs
+
+
+def make_concrete_batch(cfg: ModelConfig, cell: ShapeCell, key) -> Dict[str, Any]:
+    """Real (random) inputs matching input_specs -- smoke tests & examples."""
+    spec = input_specs(cfg, cell)
+    out = {}
+    for name, sds in spec.items():
+        k = jax.random.fold_in(key, hash(name) % (2 ** 31))
+        if jnp.issubdtype(sds.dtype, jnp.integer):
+            out[name] = jax.random.randint(k, sds.shape, 0, cfg.vocab_size,
+                                           dtype=sds.dtype)
+        else:
+            out[name] = jax.random.normal(k, sds.shape, jnp.float32).astype(sds.dtype)
+    return out

@@ -1,0 +1,359 @@
+"""Transformer substrate: norms, RoPE, GQA attention (all assigned variants),
+SwiGLU MLP, embeddings, and the chunked vocab-parallel LM loss.
+
+All parameters are declared via :mod:`repro.models.param` (PDecl) so the same
+code path serves real init, abstract dry-run shapes, and sharding specs.
+Sharding uses logical axis names (see ``repro.parallel.sharding``): weights
+are 2D-sharded ('fsdp' x 'tp'), activations are batch-sharded with
+tensor-parallel inner dimensions.
+
+Attention comes in two execution forms:
+  * train/prefill: memory-efficient blockwise causal attention (online
+    softmax over KV chunks -- the FlashAttention recurrence in pure XLA ops),
+    with a sliced-window fast path for SWA layers;
+  * decode: single-token attention over a (possibly ring/windowed) KV cache
+    that is *sequence-sharded* across the 'tp' axis -- GSPMD turns the
+    softmax reductions into the flash-decoding combine (DESIGN.md S3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import shard
+from .config import ModelConfig
+from .param import PDecl
+
+Array = jax.Array
+
+NEG_INF = -2.0 ** 30   # large-but-finite: keeps fully-masked rows NaN-free
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_decls(d: int) -> Dict[str, PDecl]:
+    return {"scale": PDecl((d,), P(None), init="ones")}
+
+
+def rmsnorm(params, x: Array, eps: float) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (NeoX half-rotation)
+# ---------------------------------------------------------------------------
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs       # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                             # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attn_decls(cfg: ModelConfig) -> Dict[str, PDecl]:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    decls = {
+        "wq": PDecl((d, h * hd), P("fsdp", "tp")),
+        "wk": PDecl((d, kv * hd), P("fsdp", "tp")),
+        "wv": PDecl((d, kv * hd), P("fsdp", "tp")),
+        "wo": PDecl((h * hd, d), P("tp", "fsdp")),
+    }
+    if cfg.qkv_bias:
+        decls |= {"bq": PDecl((h * hd,), P("tp"), init="zeros"),
+                  "bk": PDecl((kv * hd,), P("tp"), init="zeros"),
+                  "bv": PDecl((kv * hd,), P("tp"), init="zeros")}
+    if cfg.qk_norm:
+        decls |= {"q_norm": PDecl((hd,), P(None), init="ones"),
+                  "k_norm": PDecl((hd,), P(None), init="ones")}
+    return decls
+
+
+def _project_qkv(params, x: Array, cfg: ModelConfig, positions: Array
+                 ) -> Tuple[Array, Array, Array]:
+    """x (B, S, D) -> q (B, S, H, hd), k/v (B, S, KV, hd), roped + normed."""
+    b, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = cfg.compute_dtype
+    q = x @ params["wq"].astype(dt)
+    k = x @ params["wk"].astype(dt)
+    v = x @ params["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    q = shard(q.reshape(b, s, h, hd), "batch", None, "tp", None)
+    k = shard(k.reshape(b, s, kv, hd), "batch", None, None, None)
+    v = shard(v.reshape(b, s, kv, hd), "batch", None, None, None)
+    if cfg.qk_norm:
+        q = rmsnorm({"scale": params["q_norm"]}, q, cfg.norm_eps)
+        k = rmsnorm({"scale": params["k_norm"]}, k, cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mea(q: Array, k: Array, v: Array, q_pos: Array, kv_pos: Array,
+         cfg: ModelConfig, window: Optional[int]) -> Array:
+    """Memory-efficient attention: online softmax over KV chunks.
+
+    q (B, Sq, H, hd); k, v (B, Skv, KV, hd); positions give causal/window
+    masks.  Returns (B, Sq, H, hd).
+    """
+    b, sq0, h, hd = q.shape
+    skv0, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qc = min(cfg.attn_q_chunk, sq0)
+    kc = min(cfg.attn_kv_chunk, skv0)
+    # pad to chunk multiples; padded KV slots get position 2^30 so the causal
+    # mask excludes them, padded Q rows are sliced off at the end.
+    pq = (-sq0) % qc
+    pk = (-skv0) % kc
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pq))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pk), constant_values=2 ** 30)
+    sq, skv = sq0 + pq, skv0 + pk
+    nq, nk = sq // qc, skv // kc
+    scale = hd ** -0.5
+
+    qr = q.reshape(b, nq, qc, kvh, g, hd)
+    qpr = q_pos.reshape(nq, qc)
+    kr = k.reshape(b, nk, kc, kvh, hd)
+    vr = v.reshape(b, nk, kc, kvh, hd)
+    kpr = kv_pos.reshape(nk, kc)
+
+    def q_block(qb, qp):
+        # qb (b, qc, kvh, g, hd); scan over kv chunks with online softmax.
+        acc0 = jnp.zeros((b, qc, kvh, g, hd), jnp.float32)
+        m0 = jnp.full((b, qc, kvh, g), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, qc, kvh, g), jnp.float32)
+
+        def kv_step(carry, inp):
+            acc, m, l = carry
+            kb, vb, kp = inp
+            s_ = jnp.einsum("bqkgd,bskd->bqkgs", qb.astype(jnp.float32),
+                            kb.astype(jnp.float32)) * scale
+            mask = kp[None, :] <= qp[:, None]                 # causal
+            if window is not None:
+                mask &= kp[None, :] > qp[:, None] - window
+            s_ = jnp.where(mask[None, :, None, None, :], s_, NEG_INF)
+            m_new = jnp.maximum(m, s_.max(axis=-1))
+            p = jnp.exp(s_ - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bqkgs,bskd->bqkgd", p, vb.astype(jnp.float32))
+            acc = acc * corr[..., None] + pv
+            return (acc, m_new, l), None
+
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0),
+                                      (kr.swapaxes(0, 1), vr.swapaxes(0, 1), kpr))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    out = jax.lax.map(lambda t: q_block(t[0], t[1]),
+                      (qr.swapaxes(0, 1), qpr))                # scan over q chunks
+    out = out.swapaxes(0, 1).reshape(b, sq, h, hd)[:, :sq0]
+    return out.astype(cfg.compute_dtype)
+
+
+def _dp_reshard(q, k, v, cfg):
+    """Batch-parallel attention resharding (cfg.attn_dp): one structured
+    all-gather of q over the tp axis, k/v untouched (already batch-sharded)."""
+    q = shard(q, "batch", None, None, None)
+    k = shard(k, "batch", None, None, None)
+    v = shard(v, "batch", None, None, None)
+    return q, k, v
+
+
+def attention_train(params, x: Array, cfg: ModelConfig,
+                    window: Optional[int], positions: Array) -> Array:
+    """Causal self-attention over (B, S, D); returns (B, S, D)."""
+    b, s, d = x.shape
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    if cfg.attn_dp:
+        q, k, v = _dp_reshard(q, k, v, cfg)
+    w = window if (window is not None and window < s) else None
+    pos1d = positions[0]                       # (S,) -- same across batch
+    o = _mea(q, k, v, pos1d, pos1d, cfg, w)
+    o = o.reshape(b, s, cfg.num_heads * cfg.head_dim)
+    y = o @ params["wo"].astype(cfg.compute_dtype)
+    return shard(y, "batch", None, None)
+
+
+def make_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               window: Optional[int]) -> Dict[str, Any]:
+    size = min(window, seq_len) if window else seq_len
+    kvshape = (batch, size, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(kvshape, cfg.compute_dtype),
+            "v": jnp.zeros(kvshape, cfg.compute_dtype)}
+
+
+def cache_specs(windowed: bool) -> Dict[str, P]:
+    # KV caches are sequence-sharded over the tensor axis (flash-decoding).
+    return {"k": P("batch", "seq", None, None),
+            "v": P("batch", "seq", None, None)}
+
+
+def attention_prefill(params, x: Array, cfg: ModelConfig,
+                      window: Optional[int], positions: Array,
+                      cache_len: Optional[int] = None
+                      ) -> Tuple[Array, Dict[str, Array]]:
+    """Like train, but also returns the KV cache (ring-rolled if windowed).
+
+    ``cache_len`` >= S adds decode headroom; windowed layers cap the cache at
+    the window size (ring buffer with slot = position % window).
+    """
+    b, s, _ = x.shape
+    cache_len = cache_len or s
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    if cfg.attn_dp:
+        q, k, v = _dp_reshard(q, k, v, cfg)
+    w = window if (window is not None and window < s) else None
+    pos1d = positions[0]
+    o = _mea(q, k, v, pos1d, pos1d, cfg, w)
+    o = o.reshape(b, s, cfg.num_heads * cfg.head_dim)
+    y = shard(o @ params["wo"].astype(cfg.compute_dtype), "batch", None, None)
+
+    if window and window < cache_len:
+        keep = min(window, s)
+        k_last, v_last = k[:, s - keep:], v[:, s - keep:]
+        if s > window:
+            # ring-order the last `window` entries: slot = pos % window
+            shift = s % window
+            cache = {"k": jnp.roll(k_last, shift, axis=1),
+                     "v": jnp.roll(v_last, shift, axis=1)}
+        else:
+            pad = window - s
+            cache = {"k": jnp.pad(k_last, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                     "v": jnp.pad(v_last, ((0, 0), (0, pad), (0, 0), (0, 0)))}
+    else:
+        pad = cache_len - s
+        cache = {"k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                 "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))}
+    cache = {n: shard(c, "batch", "seq", None, None) for n, c in cache.items()}
+    return y, cache
+
+
+def attention_decode(params, x: Array, cfg: ModelConfig, cache: Dict[str, Array],
+                     pos: Array, window: Optional[int]
+                     ) -> Tuple[Array, Dict[str, Array]]:
+    """One-token decode: x (B, 1, D), cache (B, Sc, KV, hd), pos scalar."""
+    b = x.shape[0]
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // kvh
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(params, x, cfg, positions)
+
+    sc = cache["k"].shape[1]
+    slot = (pos % sc).astype(jnp.int32)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+    k = shard(k, "batch", "seq", None, None)
+    v = shard(v, "batch", "seq", None, None)
+
+    # Full-cache attention; softmax reductions over the sharded Sc dimension
+    # become the flash-decoding psum combine under GSPMD.
+    qv = q.reshape(b, kvh, g, hd)
+    s_ = jnp.einsum("bkgd,bskd->bkgs", qv.astype(jnp.float32),
+                    k.astype(jnp.float32)) * (hd ** -0.5)
+    valid = jnp.arange(sc) < jnp.minimum(pos + 1, sc)          # ring: all valid once full
+    s_ = jnp.where(valid[None, None, None, :], s_, NEG_INF)
+    p = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    o = o.reshape(b, 1, h * hd).astype(cfg.compute_dtype)
+    y = shard(o @ params["wo"].astype(cfg.compute_dtype), "batch", None, None)
+    return y, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_decls(cfg: ModelConfig) -> Dict[str, PDecl]:
+    d, f = cfg.d_model, cfg.d_ff
+    decls = {"wi": PDecl((d, f), P("fsdp", "tp")),
+             "wo": PDecl((f, d), P("tp", "fsdp"))}
+    if cfg.mlp_gated:
+        decls["wg"] = PDecl((d, f), P("fsdp", "tp"))
+    return decls
+
+
+def mlp(params, x: Array, cfg: ModelConfig) -> Array:
+    dt = cfg.compute_dtype
+    if cfg.mlp_gated:
+        h = jax.nn.silu(x @ params["wg"].astype(dt)) * (x @ params["wi"].astype(dt))
+    else:
+        h = jax.nn.gelu(x @ params["wi"].astype(dt))
+    h = shard(h, "batch", None, "tp")
+    return shard(h @ params["wo"].astype(dt), "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Embedding + LM head + chunked vocab-parallel cross-entropy
+# ---------------------------------------------------------------------------
+
+def embed_decls(cfg: ModelConfig) -> Dict[str, PDecl]:
+    return {"embedding": PDecl((cfg.vocab_size, cfg.d_model), P("tp", "fsdp"),
+                               init="embed", fan_in=cfg.d_model)}
+
+
+def embed(params, tokens: Array, cfg: ModelConfig) -> Array:
+    x = jnp.take(params["embedding"], tokens, axis=0).astype(cfg.compute_dtype)
+    return shard(x, "batch", None, None)
+
+
+def head_decls(cfg: ModelConfig) -> Dict[str, PDecl]:
+    return {"w": PDecl((cfg.d_model, cfg.vocab_size), P("fsdp", "tp"))}
+
+
+def logits_fn(params, h: Array, cfg: ModelConfig) -> Array:
+    out = h.astype(cfg.compute_dtype) @ params["w"].astype(cfg.compute_dtype)
+    return shard(out.astype(jnp.float32), "batch", None, "tp")
+
+
+def lm_loss(head_params, h: Array, targets: Array, cfg: ModelConfig) -> Array:
+    """Mean next-token cross-entropy, chunked over the sequence so the
+    (B, S, V) logits tensor is never materialised (vocab stays 'tp'-sharded
+    inside each chunk; GSPMD reduces the logsumexp across vocab shards)."""
+    b, s, d = h.shape
+    c = min(cfg.loss_chunk, s)
+    assert s % c == 0, (s, c)
+    nc = s // c
+    hc = h.reshape(b, nc, c, d).swapaxes(0, 1)         # (nc, B, c, D)
+    tc = targets.reshape(b, nc, c).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_loss(hx, tx):
+        logits = logits_fn(head_params, hx, cfg)       # (B, c, V) f32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, tx[..., None], axis=-1)[..., 0]
+        return (lse - tgt).sum()
+
+    def body(acc, inp):
+        hx, tx = inp
+        return acc + chunk_loss(hx, tx), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), (hc, tc))
+    return total / (b * s)

@@ -1,0 +1,125 @@
+"""Mixture-of-Experts layer: top-k routing with sort-based dispatch.
+
+TPU adaptation (DESIGN.md S4): no ragged kernels -- tokens are grouped per
+data shard, argsorted by expert id *within the group* (no cross-shard sort),
+packed into capacity-bounded per-expert buffers, processed with batched
+einsums sharded over the 'ep' axis (expert parallelism), and combined back
+with the router weights.  The group->expert buffer resharding is where GSPMD
+emits the all-to-all; FLOPs scale with top_k, not num_experts.
+
+Capacity: cap = tokens_per_group * top_k / E * capacity_factor; overflow
+tokens are dropped (standard Switch behaviour) -- the combine step simply
+contributes zero for dropped tokens.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import shard
+from .config import ModelConfig
+from .param import PDecl
+
+Array = jax.Array
+
+CAPACITY_FACTOR = 1.25
+
+
+def moe_decls(cfg: ModelConfig) -> Dict[str, PDecl]:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    # Experts shard over 'ep' when divisible by the axis; otherwise the ff
+    # dimension is tensor-sharded inside each expert (mixtral: 8 experts on a
+    # 16-way axis).  The decision is made at lower time via the axis size --
+    # here we declare both dims and let the launcher pick the rule; default
+    # declaration uses ep-sharding on E and fsdp on d.
+    ep_spec = P("ep", "fsdp", None) if e % 16 == 0 else P(None, "fsdp", "tp")
+    ep_spec_out = P("ep", None, "fsdp") if e % 16 == 0 else P(None, "tp", "fsdp")
+    return {
+        "router": PDecl((d, e), P("fsdp", None)),
+        "wg": PDecl((e, d, f), ep_spec, fan_in=d),
+        "wi": PDecl((e, d, f), ep_spec, fan_in=d),
+        "wo": PDecl((e, f, d), ep_spec_out, fan_in=f),
+    }
+
+
+def moe_apply(params, x: Array, cfg: ModelConfig, num_groups: int = 1) -> Array:
+    """x (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    dt = cfg.compute_dtype
+    t = b * s
+    g = num_groups if t % num_groups == 0 else 1
+    tg = t // g
+
+    xf = x.reshape(g, tg, d)
+    logits = (xf.astype(jnp.float32) @ params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (g, tg, E)
+    w, ids = jax.lax.top_k(probs, k)                           # (g, tg, k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(tg * k / e * CAPACITY_FACTOR) + 1
+
+    def dispatch_group(xg, idg, wg_):
+        # xg (tg, d); idg/wg_ (tg, k)
+        flat_ids = idg.reshape(tg * k)
+        order = jnp.argsort(flat_ids)                          # local sort only
+        sorted_ids = flat_ids[order]
+        tok = order // k                                       # source token
+        hist = jnp.bincount(flat_ids, length=e)
+        start = jnp.cumsum(hist) - hist                        # first slot per expert
+        pos = jnp.arange(tg * k) - start[sorted_ids]           # rank within expert
+        keep = pos < cap
+        slot = jnp.where(keep, pos, cap - 1)
+
+        # per-slot source token and router weight
+        tok_buf = jnp.full((e, cap), tg, jnp.int32) \
+            .at[sorted_ids, slot].set(jnp.where(keep, tok, tg))
+        wflat = wg_.reshape(tg * k)[order]
+        w_buf = jnp.zeros((e, cap), jnp.float32) \
+            .at[sorted_ids, slot].set(jnp.where(keep, wflat, 0.0))
+        if cfg.moe_combine == "scatter":
+            # direct (E, cap) <- token gather: the (tg*k, d) intermediate
+            # never exists, so its EP-crossing cotangent all-reduce (the
+            # dominant collective in the baseline, SPerf cell C) vanishes.
+            xg_pad = jnp.concatenate([xg.astype(dt), jnp.zeros((1, d), dt)])
+            buf = xg_pad[tok_buf]                         # (e, cap, d)
+        else:
+            buf = jnp.zeros((e, cap, d), dt)
+            buf = buf.at[sorted_ids, slot].add(
+                jnp.where(keep[:, None], xg[tok].astype(dt), 0))
+        return buf, (sorted_ids, slot, tok, keep, order, tok_buf, w_buf)
+
+    bufs, meta = jax.vmap(dispatch_group)(xf, ids, w)
+    bufs = shard(bufs, "batch", "ep", None, None)              # (g, E, cap, D)
+
+    hg = jax.nn.silu(jnp.einsum("gecd,edf->gecf", bufs, params["wg"].astype(dt)))
+    hu = jnp.einsum("gecd,edf->gecf", bufs, params["wi"].astype(dt))
+    y = jnp.einsum("gecf,efd->gecd", hg * hu, params["wo"].astype(dt))
+    y = shard(y, "batch", "ep", None, None)
+
+    if cfg.moe_combine == "scatter":
+        # Expert-side combine: weight and scatter-add within the EP shard,
+        # so the cross-shard reduction moves (tg, d), not (tg*k, d).
+        def combine_group(yg, xg_w, m):
+            *_, tok_buf, w_buf = m
+            contrib = yg * w_buf[..., None].astype(dt)         # (e, cap, d)
+            out = jnp.zeros((tg + 1, d), dt) \
+                .at[tok_buf.reshape(-1)].add(contrib.reshape(-1, d),
+                                             mode="drop")
+            return out[:tg]
+    else:
+        # Baseline: token-side gather across the EP-sharded buffer.
+        def combine_group(yg, xg_w, m):
+            sorted_ids, slot, tok, keep, order, *_ = m
+            gathered = yg[sorted_ids, slot]                    # (tg*k, d)
+            gathered = jnp.where(keep[:, None], gathered, 0)
+            wflat = xg_w.reshape(tg * k)[order]
+            out = jnp.zeros((tg, d), dt) \
+                .at[tok].add(gathered * wflat[:, None].astype(dt))
+            return out
+
+    out = jax.vmap(combine_group)(y, w, meta)
+    return shard(out.reshape(b, s, d), "batch", None, None)

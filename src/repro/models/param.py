@@ -1,0 +1,73 @@
+"""Parameter declarations: one source of truth for init / shapes / sharding.
+
+Every layer declares its parameters as a pytree of :class:`PDecl`.  From the
+same declaration tree we derive
+
+  * ``init_params``      -- materialised arrays (training / smoke tests),
+  * ``abstract_params``  -- ShapeDtypeStructs (the multi-pod dry-run never
+                            allocates full-scale weights),
+  * ``param_specs``      -- PartitionSpecs consumed by pjit in_shardings.
+
+This guarantees the three trees always have identical structure, which is the
+invariant the dry-run depends on.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class PDecl:
+    """Declaration of a single parameter tensor."""
+    shape: Tuple[int, ...]
+    spec: P = P()
+    init: str = "normal"      # normal | zeros | ones | embed
+    dtype: Any = jnp.float32  # master weights f32; forward casts to bf16
+    fan_in: Optional[int] = None   # for "normal": stddev = 1/sqrt(fan_in)
+
+
+def stack(decls, n: int):
+    """Prepend a layer dimension (for lax.scan over stacked layers)."""
+    def one(d: PDecl) -> PDecl:
+        return PDecl(shape=(n,) + tuple(d.shape), spec=P(None, *d.spec),
+                     init=d.init, dtype=d.dtype, fan_in=d.fan_in)
+    return jax.tree.map(one, decls, is_leaf=lambda x: isinstance(x, PDecl))
+
+
+def _init_one(d: PDecl, key) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    fan_in = d.fan_in if d.fan_in is not None else (d.shape[-2] if len(d.shape) >= 2 else d.shape[-1])
+    std = 1.0 / np.sqrt(max(fan_in, 1))
+    if d.init == "embed":
+        std = 1.0
+    return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(d.dtype)
+
+
+def init_params(decls, key) -> Any:
+    leaves, treedef = jax.tree.flatten(decls, is_leaf=lambda x: isinstance(x, PDecl))
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [_init_one(d, k) for d, k in zip(leaves, keys)])
+
+
+def abstract_params(decls) -> Any:
+    return jax.tree.map(lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), decls,
+                        is_leaf=lambda x: isinstance(x, PDecl))
+
+
+def param_specs(decls) -> Any:
+    return jax.tree.map(lambda d: d.spec, decls,
+                        is_leaf=lambda x: isinstance(x, PDecl))
+
+
+def count_params(decls) -> int:
+    leaves = jax.tree.leaves(decls, is_leaf=lambda x: isinstance(x, PDecl))
+    return int(sum(int(np.prod(d.shape)) for d in leaves))

@@ -1,0 +1,215 @@
+"""Mamba selective-state-space layer (Jamba's 'm' layers).
+
+TPU adaptation: the selective scan runs as an outer `lax.scan` over sequence
+chunks with a `lax.associative_scan` inside each chunk -- the chunk size
+bounds the (B, c, d_inner, d_state) working set while keeping the recurrence
+parallel within a chunk (DESIGN.md S4).  Decode is the O(1) single-step
+recurrence with a (h, conv window) state carried in the cache.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import shard
+from .config import ModelConfig
+from .param import PDecl
+
+Array = jax.Array
+
+SCAN_CHUNK = 128
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    di = cfg.mamba_expand * cfg.d_model
+    dt_rank = max(cfg.d_model // 16, 1)
+    return di, cfg.mamba_d_state, cfg.mamba_d_conv, dt_rank
+
+
+def mamba_decls(cfg: ModelConfig) -> Dict[str, PDecl]:
+    d = cfg.d_model
+    di, n, k, dtr = _dims(cfg)
+    return {
+        "in_proj": PDecl((d, 2 * di), P("fsdp", "tp")),
+        "conv_w": PDecl((k, di), P(None, "tp"), fan_in=k),
+        "conv_b": PDecl((di,), P("tp"), init="zeros"),
+        "x_proj": PDecl((di, dtr + 2 * n), P("tp", None)),
+        "dt_proj": PDecl((dtr, di), P(None, "tp"), fan_in=dtr),
+        "dt_bias": PDecl((di,), P("tp"), init="zeros"),
+        "a_log": PDecl((di, n), P("tp", None), init="zeros"),
+        "d_skip": PDecl((di,), P("tp"), init="ones"),
+        "out_proj": PDecl((di, d), P("tp", "fsdp")),
+    }
+
+
+def _ssm_params(params, x_in: Array, cfg: ModelConfig):
+    """Shared projections: returns (u, z, dt, B, C, A) for x_in (B, S, D)."""
+    di, n, k, dtr = _dims(cfg)
+    dt_ = cfg.compute_dtype
+    xz = x_in @ params["in_proj"].astype(dt_)
+    u, z = jnp.split(xz, 2, axis=-1)                     # (B, S, di) each
+    return u, z
+
+
+def _post_conv(params, u_conv: Array, cfg: ModelConfig):
+    di, n, k, dtr = _dims(cfg)
+    dt_ = cfg.compute_dtype
+    u_act = jax.nn.silu(u_conv)
+    xdbc = u_act.astype(jnp.float32) @ params["x_proj"].astype(jnp.float32)
+    dt, b, c = jnp.split(xdbc, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt @ params["dt_proj"].astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))   # (B,S,di)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))               # (di,n)
+    return u_act, dt, b, c, a
+
+
+def _scan_chunked(a_bar: Array, bx: Array, h0: Array,
+                  c_proj: Optional[Array] = None) -> Tuple[Array, Array]:
+    """h_t = a_bar_t * h_{t-1} + bx_t over axis 1.
+
+    With ``c_proj`` (B, S, n) given, the observation y_t = <h_t, c_t> is
+    computed *inside* the chunk loop and the (B, S, di, n) state tensor is
+    never materialised in HBM -- only (B, c, di, n) chunk transients exist.
+    This is the hardware-aware-scan idea of Mamba realised at the XLA level
+    (EXPERIMENTS.md SPerf, jamba hillclimb iteration 1); the Pallas kernel
+    (kernels/selective_scan.py) is the TPU-native form.
+
+    Returns (y (B, S, di) if c_proj else states (B, S, di, n), h_last).
+    """
+    b, s, di, n = a_bar.shape
+    c = min(SCAN_CHUNK, s)
+    assert s % c == 0, (s, c)
+    nc = s // c
+    ar = a_bar.reshape(b, nc, c, di, n).swapaxes(0, 1)
+    br = bx.reshape(b, nc, c, di, n).swapaxes(0, 1)
+    cr = None if c_proj is None else \
+        c_proj.reshape(b, nc, c, n).swapaxes(0, 1)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    def chunk_step(h, inp):
+        if cr is None:
+            ac, bc = inp                               # (B, c, di, n)
+        else:
+            ac, bc, cc = inp
+        pa, pb = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        states = pa * h[:, None] + pb                  # (B, c, di, n)
+        if cr is None:
+            return states[:, -1], states
+        y = jnp.einsum("bcdn,bcn->bcd", states, cc)    # project, drop states
+        return states[:, -1], y
+
+    xs = (ar, br) if cr is None else (ar, br, cr)
+    h_last, out = jax.lax.scan(chunk_step, h0, xs)
+    if cr is None:
+        return out.swapaxes(0, 1).reshape(b, s, di, n), h_last
+    return out.swapaxes(0, 1).reshape(b, s, di), h_last
+
+
+def _fused_scan(u_act: Array, dt: Array, b: Array, c: Array, a: Array,
+                h0: Array, chunk: int = SCAN_CHUNK) -> Tuple[Array, Array]:
+    """Chunked selective scan with discretisation and projection fused into
+    the loop body.  u_act, dt: (B, S, di); b, c: (B, S, n); a: (di, n)."""
+    bsz, s, di = u_act.shape
+    n = a.shape[1]
+    ck = min(chunk, s)
+    assert s % ck == 0, (s, ck)
+    nc = s // ck
+    resh = lambda t: t.reshape(bsz, nc, ck, -1).swapaxes(0, 1)
+    ur, dtr, br, cr = map(resh, (u_act, dt, b, c))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    def chunk_step(h, inp):
+        uc, dc, bc, cc = inp                           # (B, ck, .)
+        a_bar = jnp.exp(dc[..., None] * a[None, None])     # (B, ck, di, n)
+        bx = (dc * uc)[..., None] * bc[:, :, None, :]
+        pa, pb = jax.lax.associative_scan(combine, (a_bar, bx), axis=1)
+        states = pa * h[:, None] + pb
+        y = jnp.einsum("bcdn,bcn->bcd", states, cc)
+        return states[:, -1], y
+
+    h_last, y = jax.lax.scan(chunk_step, h0, (ur, dtr, br, cr))
+    return y.swapaxes(0, 1).reshape(bsz, s, di), h_last
+
+
+def mamba_train(params, x: Array, cfg: ModelConfig,
+                return_state: bool = False):
+    """x (B, S, D) -> (B, S, D); full-sequence selective scan.
+
+    ``return_state=True`` additionally returns the decode cache after the
+    sequence (used by prefill -- one pass instead of two).
+    """
+    bsz, s, d = x.shape
+    di, n, k, dtr = _dims(cfg)
+    dt_ = cfg.compute_dtype
+    u, z = _ssm_params(params, x, cfg)
+
+    # causal depthwise conv over sequence
+    u_pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    conv = sum(u_pad[:, i:i + s] * params["conv_w"][i].astype(dt_)
+               for i in range(k)) + params["conv_b"].astype(dt_)
+    u_act, dt, b, c, a = _post_conv(params, conv, cfg)
+
+    h0 = jnp.zeros((bsz, di, n), jnp.float32)
+    if cfg.mamba_fuse_proj:
+        # Fused path (SPerf, jamba iterations A1/A2): discretisation
+        # (a_bar, bx), the recurrence, and the C-projection all live inside
+        # the chunk loop, so no (B, S, di, n) tensor ever reaches HBM --
+        # only (B, S, di) streams.  TPU-native form: kernels/selective_scan.
+        y, h_last = _fused_scan(u_act.astype(jnp.float32), dt, b, c, a, h0,
+                                cfg.mamba_chunk)
+    else:   # baseline: materialise states, project outside the loop
+        a_bar = jnp.exp(dt[..., None] * a[None, None])               # (B,S,di,n)
+        bx = (dt * u_act.astype(jnp.float32))[..., None] * b[:, :, None, :]
+        states, h_last = _scan_chunked(a_bar, bx, h0)
+        y = jnp.einsum("bsdn,bsn->bsd", states, c)
+    y = y + u_act.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(dt_)
+    out = shard(y @ params["out_proj"].astype(dt_), "batch", None, None)
+    if return_state:
+        return out, {"h": h_last, "conv": u[:, s - (k - 1):].astype(dt_)}
+    return out
+
+
+def mamba_make_cache(cfg: ModelConfig, batch: int) -> Dict[str, Array]:
+    di, n, k, _ = _dims(cfg)
+    return {"h": jnp.zeros((batch, di, n), jnp.float32),
+            "conv": jnp.zeros((batch, k - 1, di), cfg.compute_dtype)}
+
+
+def mamba_cache_specs() -> Dict[str, P]:
+    return {"h": P("batch", "tp", None), "conv": P("batch", None, "tp")}
+
+
+def mamba_decode(params, x: Array, cfg: ModelConfig, cache: Dict[str, Array]
+                 ) -> Tuple[Array, Dict[str, Array]]:
+    """One-token step: x (B, 1, D); O(1) state update."""
+    bsz = x.shape[0]
+    di, n, k, dtr = _dims(cfg)
+    dt_ = cfg.compute_dtype
+    u, z = _ssm_params(params, x, cfg)                 # (B,1,di)
+
+    window = jnp.concatenate([cache["conv"], u], axis=1)   # (B,k,di)
+    conv = jnp.einsum("bkd,kd->bd", window.astype(dt_),
+                      params["conv_w"].astype(dt_)) + params["conv_b"].astype(dt_)
+    u_act, dt, b, c, a = _post_conv(params, conv[:, None], cfg)
+
+    a_bar = jnp.exp(dt[..., None] * a[None, None])[:, 0]             # (B,di,n)
+    bx = ((dt * u_act.astype(jnp.float32))[..., None] * b[:, :, None, :])[:, 0]
+    h = a_bar * cache["h"] + bx
+    y = jnp.einsum("bdn,bn->bd", h, c[:, 0])
+    y = y + u_act[:, 0].astype(jnp.float32) * params["d_skip"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(dt_)
+    out = (y @ params["out_proj"].astype(dt_))[:, None]
+    return shard(out, "batch", None, None), \
+        {"h": h, "conv": window[:, 1:]}

@@ -1,0 +1,361 @@
+"""Model assembly: layer-pattern plans, scan-compressed stacks, and the
+train / prefill / decode entry points shared by all ten architectures.
+
+The per-layer pattern string (config.py) is compressed into
+``unit * repeats + rest``: the repeating unit becomes a single traced block
+scanned over stacked parameters (``lax.scan``), keeping HLO size and compile
+time O(unit) instead of O(layers) -- essential for the 88-94 layer configs on
+the 512-device dry-run.  Heterogeneous interleaves (gemma3's 5:1
+local:global, jamba's mMmMaMmM) scan over their natural super-block.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import shard
+from . import layers, moe, rwkv, ssm
+from .config import ModelConfig
+from .param import PDecl, abstract_params, init_params, param_specs, stack
+
+Array = jax.Array
+
+FRONTEND_DIMS = {"audio": 128, "vision": 3200}   # EnCodec frames / InternViT patches
+
+ATTN_CHARS = "TEGLWaA"
+MOE_CHARS = "EWMA"
+WINDOW_CHARS = "LW"
+
+
+def layer_plan(pattern: str, scan_layers: bool = True) -> Tuple[str, int, str]:
+    """pattern == unit * repeats + rest  (smallest unit with repeats >= 2)."""
+    n = len(pattern)
+    if scan_layers:
+        for p in range(1, min(12, n) + 1):
+            unit = pattern[:p]
+            reps = n // p
+            if reps >= 2 and (unit * (reps + 1))[:n] == pattern:
+                return unit, reps, pattern[p * reps:]
+    return pattern, 1, ""
+
+
+def _window_for(cfg: ModelConfig, ch: str) -> Optional[int]:
+    if ch == "L":
+        return cfg.local_window
+    if ch == "W":
+        return cfg.sliding_window
+    return None
+
+
+# ---------------------------------------------------------------------------
+# One block (mixer + ffn with pre-norms)
+# ---------------------------------------------------------------------------
+
+def block_decls(cfg: ModelConfig, ch: str) -> Dict[str, Any]:
+    d = cfg.d_model
+    if ch == "R":
+        return {"norm1": layers.rmsnorm_decls(d), "tm": rwkv.rwkv_decls(cfg),
+                "norm2": layers.rmsnorm_decls(d)}
+    decls: Dict[str, Any] = {"norm1": layers.rmsnorm_decls(d),
+                             "norm2": layers.rmsnorm_decls(d)}
+    if ch in "mM":
+        decls["mixer"] = ssm.mamba_decls(cfg)
+    else:
+        decls["mixer"] = layers.attn_decls(cfg)
+    decls["ffn"] = moe.moe_decls(cfg) if ch in MOE_CHARS else layers.mlp_decls(cfg)
+    return decls
+
+
+def block_train(params, x: Array, cfg: ModelConfig, ch: str, positions: Array,
+                num_groups: int) -> Array:
+    if ch == "R":
+        y, _, _ = rwkv.rwkv_time_mix(
+            params["tm"], layers.rmsnorm(params["norm1"], x, cfg.norm_eps), cfg,
+            jnp.zeros_like(x[:, :1]),
+            jnp.zeros((x.shape[0],) + _rwkv_state_shape(cfg), jnp.float32))
+        x = x + y
+        y, _ = rwkv.rwkv_channel_mix(
+            params["tm"], layers.rmsnorm(params["norm2"], x, cfg.norm_eps), cfg,
+            jnp.zeros_like(x[:, :1]))
+        return x + y
+    h = layers.rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if ch in "mM":
+        y = ssm.mamba_train(params["mixer"], h, cfg)
+    else:
+        y = layers.attention_train(params["mixer"], h, cfg, _window_for(cfg, ch),
+                                   positions)
+    x = x + y
+    h = layers.rmsnorm(params["norm2"], x, cfg.norm_eps)
+    if ch in MOE_CHARS:
+        y = moe.moe_apply(params["ffn"], h, cfg, num_groups)
+    else:
+        y = layers.mlp(params["ffn"], h, cfg)
+    return x + y
+
+
+def _rwkv_state_shape(cfg: ModelConfig) -> Tuple[int, int, int]:
+    hd = cfg.rwkv_head_size
+    return (cfg.d_model // hd, hd, hd)
+
+
+def block_make_cache(cfg: ModelConfig, ch: str, batch: int, seq_len: int):
+    if ch == "R":
+        return rwkv.rwkv_make_cache(cfg, batch)
+    if ch in "mM":
+        return ssm.mamba_make_cache(cfg, batch)
+    return layers.make_cache(cfg, batch, seq_len, _window_for(cfg, ch))
+
+
+def block_cache_specs(cfg: ModelConfig, ch: str):
+    if ch == "R":
+        return rwkv.rwkv_cache_specs()
+    if ch in "mM":
+        return ssm.mamba_cache_specs()
+    return layers.cache_specs(ch in WINDOW_CHARS)
+
+
+def block_prefill(params, x, cfg, ch, positions, num_groups, cache_len=None):
+    """Returns (x, cache)."""
+    if ch == "R":
+        h = layers.rmsnorm(params["norm1"], x, cfg.norm_eps)
+        y, tm_xprev, s_last = rwkv.rwkv_time_mix(
+            params["tm"], h, cfg, jnp.zeros_like(h[:, :1]),
+            jnp.zeros((x.shape[0],) + _rwkv_state_shape(cfg), jnp.float32))
+        x = x + y
+        h = layers.rmsnorm(params["norm2"], x, cfg.norm_eps)
+        y, cm_xprev = rwkv.rwkv_channel_mix(params["tm"], h, cfg,
+                                            jnp.zeros_like(h[:, :1]))
+        return x + y, {"s": s_last, "tm_xprev": tm_xprev, "cm_xprev": cm_xprev}
+    h = layers.rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if ch in "mM":
+        # Mamba prefill: one pass returns both outputs and the decode state.
+        y, cache = ssm.mamba_train(params["mixer"], h, cfg, return_state=True)
+    else:
+        y, cache = layers.attention_prefill(params["mixer"], h, cfg,
+                                            _window_for(cfg, ch), positions,
+                                            cache_len)
+    x = x + y
+    h = layers.rmsnorm(params["norm2"], x, cfg.norm_eps)
+    if ch in MOE_CHARS:
+        y = moe.moe_apply(params["ffn"], h, cfg, num_groups)
+    else:
+        y = layers.mlp(params["ffn"], h, cfg)
+    return x + y, cache
+
+
+def block_decode(params, x, cfg, ch, cache, pos, num_groups):
+    """x (B, 1, D); returns (x, new_cache)."""
+    if ch == "R":
+        h = layers.rmsnorm(params["norm1"], x, cfg.norm_eps)
+        y, tm_xprev, s_last = rwkv.rwkv_time_mix(params["tm"], h, cfg,
+                                                 cache["tm_xprev"], cache["s"])
+        x = x + y
+        h = layers.rmsnorm(params["norm2"], x, cfg.norm_eps)
+        y, cm_xprev = rwkv.rwkv_channel_mix(params["tm"], h, cfg, cache["cm_xprev"])
+        return x + y, {"s": s_last, "tm_xprev": tm_xprev, "cm_xprev": cm_xprev}
+    h = layers.rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if ch in "mM":
+        y, cache = ssm.mamba_decode(params["mixer"], h, cfg, cache)
+    else:
+        y, cache = layers.attention_decode(params["mixer"], h, cfg, cache, pos,
+                                           _window_for(cfg, ch))
+    x = x + y
+    h = layers.rmsnorm(params["norm2"], x, cfg.norm_eps)
+    if ch in MOE_CHARS:
+        y = moe.moe_apply(params["ffn"], h, cfg, num_groups=1)
+    else:
+        y = layers.mlp(params["ffn"], h, cfg)
+    return x + y, cache
+
+
+# ---------------------------------------------------------------------------
+# Whole-model declarations
+# ---------------------------------------------------------------------------
+
+def model_decls(cfg: ModelConfig) -> Dict[str, Any]:
+    unit, reps, rest = layer_plan(cfg.layer_pattern, cfg.scan_layers)
+    decls: Dict[str, Any] = {}
+    if cfg.frontend is None:
+        decls["embed"] = layers.embed_decls(cfg)
+    else:
+        fd = FRONTEND_DIMS[cfg.frontend]
+        decls["frontend"] = {"proj": PDecl((fd, cfg.d_model), P(None, "fsdp"))}
+        decls["embed"] = layers.embed_decls(cfg)   # for decode over token ids
+    unit_decls = [block_decls(cfg, ch) for ch in unit]
+    decls["unit"] = [stack(d, reps) for d in unit_decls] if reps > 1 else unit_decls
+    decls["rest"] = [block_decls(cfg, ch) for ch in rest]
+    decls["final_norm"] = layers.rmsnorm_decls(cfg.d_model)
+    decls["head"] = layers.head_decls(cfg)
+    pdt = cfg.param_dtype
+    if isinstance(pdt, str):
+        pdt = {"bf16": jnp.bfloat16, "bfloat16": jnp.bfloat16,
+               "f32": jnp.float32, "float32": jnp.float32}[pdt]
+    if pdt != jnp.float32:
+        # serving mode: store weights directly in the compute dtype
+        decls = jax.tree.map(
+            lambda d: PDecl(d.shape, d.spec, d.init, pdt, d.fan_in), decls,
+            is_leaf=lambda x: isinstance(x, PDecl))
+    return decls
+
+
+def _embed_inputs(params, batch: Dict[str, Array], cfg: ModelConfig) -> Array:
+    if cfg.frontend is not None and "embeds" in batch:
+        x = batch["embeds"].astype(cfg.compute_dtype) @ \
+            params["frontend"]["proj"].astype(cfg.compute_dtype)
+        return shard(x, "batch", None, None)
+    return layers.embed(params["embed"], batch["tokens"], cfg)
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _maybe_cast_params(params, cfg: ModelConfig):
+    if not cfg.cast_params_once:
+        return params
+    dt = cfg.compute_dtype
+    return jax.tree.map(
+        lambda p: p.astype(dt) if (p.dtype == jnp.float32 and p.ndim >= 2)
+        else p, params)
+
+
+def forward_hidden(params, batch: Dict[str, Array], cfg: ModelConfig,
+                   num_groups: int = 1) -> Array:
+    """Embed -> all blocks -> final norm.  Returns hidden states (B, S, D)."""
+    unit, reps, rest = layer_plan(cfg.layer_pattern, cfg.scan_layers)
+    params = _maybe_cast_params(params, cfg)
+    x = _embed_inputs(params, batch, cfg)
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def unit_body(xc, pslices):
+        for ch, p in zip(unit, pslices):
+            xc = block_train(p, xc, cfg, ch, positions, num_groups)
+        return xc
+
+    unit_body = _remat(unit_body, cfg)
+    if reps > 1:
+        def scan_fn(xc, pslices):
+            return unit_body(xc, pslices), None
+        x, _ = jax.lax.scan(scan_fn, x, tuple(params["unit"]))
+    else:
+        x = unit_body(x, params["unit"])
+    for ch, p in zip(rest, params["rest"]):
+        x = _remat(lambda xc, pp, c=ch: block_train(pp, xc, cfg, c, positions,
+                                                    num_groups), cfg)(x, p)
+    return layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def train_loss(params, batch: Dict[str, Array], cfg: ModelConfig,
+               num_groups: int = 1) -> Array:
+    h = forward_hidden(params, batch, cfg, num_groups)
+    return layers.lm_loss(params["head"], h, batch["labels"], cfg)
+
+
+def prefill(params, batch: Dict[str, Array], cfg: ModelConfig,
+            num_groups: int = 1, cache_len: Optional[int] = None
+            ) -> Tuple[Array, Any]:
+    """Returns (last-token logits (B, V), cache pytree)."""
+    unit, reps, rest = layer_plan(cfg.layer_pattern, cfg.scan_layers)
+    x = _embed_inputs(params, batch, cfg)
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    caches: Dict[str, Any] = {"unit": [], "rest": []}
+    if reps > 1:
+        def scan_fn(xc, pslices):
+            new_caches = []
+            for ch, p in zip(unit, pslices):
+                xc, cache = block_prefill(p, xc, cfg, ch, positions,
+                                          num_groups, cache_len)
+                new_caches.append(cache)
+            return xc, tuple(new_caches)
+        x, unit_caches = jax.lax.scan(scan_fn, x, tuple(params["unit"]))
+        caches["unit"] = list(unit_caches)
+    else:
+        for ch, p in zip(unit, params["unit"]):
+            x, cache = block_prefill(p, x, cfg, ch, positions, num_groups,
+                                     cache_len)
+            caches["unit"].append(cache)
+    for ch, p in zip(rest, params["rest"]):
+        x, cache = block_prefill(p, x, cfg, ch, positions, num_groups, cache_len)
+        caches["rest"].append(cache)
+    h = layers.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = layers.logits_fn(params["head"], h, cfg)[:, 0]
+    return logits, caches
+
+
+def decode_step(params, cache: Any, batch: Dict[str, Array], pos: Array,
+                cfg: ModelConfig) -> Tuple[Array, Any]:
+    """One decode step.  batch has 'tokens' (B, 1) or 'embeds' (B, 1, fd)."""
+    unit, reps, rest = layer_plan(cfg.layer_pattern, cfg.scan_layers)
+    x = _embed_inputs(params, batch, cfg)
+
+    new_caches: Dict[str, Any] = {"unit": [], "rest": []}
+    if reps > 1:
+        def scan_fn(xc, inp):
+            pslices, cslices = inp
+            new_cs = []
+            for ch, p, c in zip(unit, pslices, cslices):
+                xc, nc = block_decode(p, xc, cfg, ch, c, pos, 1)
+                new_cs.append(nc)
+            return xc, tuple(new_cs)
+        x, unit_caches = jax.lax.scan(
+            scan_fn, x, (tuple(params["unit"]), tuple(cache["unit"])))
+        new_caches["unit"] = list(unit_caches)
+    else:
+        for ch, p, c in zip(unit, params["unit"], cache["unit"]):
+            x, nc = block_decode(p, x, cfg, ch, c, pos, 1)
+            new_caches["unit"].append(nc)
+    for ch, p, c in zip(rest, params["rest"], cache["rest"]):
+        x, nc = block_decode(p, x, cfg, ch, c, pos, 1)
+        new_caches["rest"].append(nc)
+    h = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = layers.logits_fn(params["head"], h, cfg)[:, 0]
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Cache constructors (concrete + abstract + specs)
+# ---------------------------------------------------------------------------
+
+def make_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    unit, reps, rest = layer_plan(cfg.layer_pattern, cfg.scan_layers)
+    def one(ch):
+        return block_make_cache(cfg, ch, batch, seq_len)
+    unit_caches = [one(ch) for ch in unit]
+    if reps > 1:
+        unit_caches = [jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (reps,) + a.shape).copy(), c)
+            for c in unit_caches]
+    return {"unit": unit_caches, "rest": [one(ch) for ch in rest]}
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    return jax.eval_shape(lambda: make_cache(cfg, batch, seq_len))
+
+
+def cache_spec_tree(cfg: ModelConfig):
+    unit, reps, rest = layer_plan(cfg.layer_pattern, cfg.scan_layers)
+    def one(ch, stacked):
+        specs = block_cache_specs(cfg, ch)
+        if stacked:
+            specs = jax.tree.map(lambda s: P(None, *s), specs,
+                                 is_leaf=lambda x: isinstance(x, P))
+        return specs
+    return {"unit": [one(ch, reps > 1) for ch in unit],
+            "rest": [one(ch, False) for ch in rest]}

@@ -1,0 +1,45 @@
+"""Collective helpers: int8 error-feedback gradient compression for the DP
+axis (distributed-optimization deliverable).
+
+``compressed_allreduce_mean``: each shard quantises its local gradient to
+int8 with a per-tensor scale, all-gathers the compact representation, and
+dequantises+averages locally -- 4x wire-bytes reduction vs f32 psum on the
+data-parallel axis.  Quantisation error is fed back into the next step's
+gradient (error-feedback buffer), which keeps SGD convergence (Karimireddy
+et al.).  Used via ``shard_map`` by the launcher when
+``--grad-compression=int8``.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def quantize_int8(x: Array) -> Tuple[Array, Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: Array, scale: Array) -> Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_allreduce_mean(g: Array, err: Array, axis: str
+                              ) -> Tuple[Array, Array]:
+    """Error-feedback int8 all-reduce-mean over a mesh axis (in shard_map).
+
+    Returns (mean gradient f32, new error-feedback buffer).
+    """
+    g_corr = g.astype(jnp.float32) + err
+    q, scale = quantize_int8(g_corr)
+    new_err = g_corr - dequantize_int8(q, scale)
+    qs = jax.lax.all_gather(q, axis)                 # int8 on the wire
+    ss = jax.lax.all_gather(scale, axis)
+    mean = jnp.mean(qs.astype(jnp.float32) *
+                    ss.reshape((-1,) + (1,) * g.ndim), axis=0)
+    return mean, new_err

@@ -1,0 +1,118 @@
+"""Logical->physical sharding rules (MaxText-style logical axis names).
+
+Parameter declarations and activation constraints use *logical* axis names;
+at lower time they are resolved against the active mesh:
+
+  logical   meaning                          single-pod        multi-pod
+  -------   ------------------------------   ---------------   ----------------
+  batch     global data-parallel batch       ('data',)         ('pod', 'data')
+  fsdp      weight shard (ZeRO-3 style)      ('data',)         ('pod', 'data')
+  tp        tensor-parallel (heads/ff/vocab) ('model',)        ('model',)
+  ep        expert-parallel (MoE experts)    ('model',)        ('model',)
+  seq       sequence shard (SP / KV cache)   ('model',)        ('model',)
+
+``fsdp`` spanning the pod axis on the multi-pod mesh is deliberate: the
+235B-class configs only fit HBM with weights+optimizer sharded over all 512
+chips; the cost shows up in the collective roofline term and is one of the
+hillclimbing knobs (EXPERIMENTS.md SPerf).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Union[None, str, Tuple[str, ...]]
+Rules = Dict[str, Axes]
+
+SINGLE_POD_RULES: Rules = {
+    "batch": ("data",),
+    "fsdp": ("data",),
+    "tp": ("model",),
+    "ep": ("model",),
+    "seq": ("model",),
+}
+
+MULTI_POD_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "fsdp": ("pod", "data"),
+    "tp": ("model",),
+    "ep": ("model",),
+    "seq": ("model",),
+}
+
+_state = threading.local()
+
+
+def rules_for_mesh(mesh: Mesh, overrides: Optional[Rules] = None) -> Rules:
+    rules = dict(MULTI_POD_RULES if "pod" in mesh.axis_names else SINGLE_POD_RULES)
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+@contextlib.contextmanager
+def use_rules(rules: Rules):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def current_rules() -> Rules:
+    r = getattr(_state, "rules", None)
+    return r if r is not None else SINGLE_POD_RULES
+
+
+def resolve_spec(spec: P, rules: Optional[Rules] = None) -> P:
+    """Map logical axis names in a PartitionSpec to physical mesh axes."""
+    rules = rules or current_rules()
+    out = []
+    for entry in spec:
+        if entry is None:
+            out.append(None)
+        elif isinstance(entry, str):
+            phys = rules.get(entry, entry)
+            if phys is None:
+                out.append(None)
+            elif isinstance(phys, tuple) and len(phys) == 1:
+                out.append(phys[0])
+            else:
+                out.append(phys)
+        else:  # tuple of logical names
+            flat = []
+            for e in entry:
+                phys = rules.get(e, e)
+                if phys is None:
+                    continue
+                flat.extend(phys if isinstance(phys, tuple) else (phys,))
+            out.append(tuple(flat) if flat else None)
+    return P(*out)
+
+
+def resolve_tree(spec_tree, rules: Optional[Rules] = None):
+    return jax.tree.map(
+        lambda s: resolve_spec(s, rules), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def shard(x: jax.Array, *logical: Axes) -> jax.Array:
+    """Activation sharding constraint in logical axis names.
+
+    ``shard(x, 'batch', None, 'tp')`` constrains a (B, S, D)-like tensor.
+    A no-op outside jit on a single device.
+    """
+    spec = resolve_spec(P(*logical))
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x  # no mesh in scope (pure-CPU smoke tests)
+
+
+def named_sharding(mesh: Mesh, spec: P, rules: Optional[Rules] = None) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(spec, rules or rules_for_mesh(mesh)))

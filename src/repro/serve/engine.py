@@ -1,0 +1,71 @@
+"""Batched serving engine: prefill + decode loop with slot-based batching.
+
+A fixed batch of request slots is prefillled together and decoded step by
+step (greedy or temperature sampling); finished requests are masked.  This is
+the serving driver used by ``examples/serve_demo.py`` and
+``launch/serve.py``; at scale the same jitted ``decode_step`` runs under the
+production mesh with the KV cache sequence-sharded (see DESIGN.md S3).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+
+Array = jax.Array
+
+
+@dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0       # 0 => greedy
+    eos_id: int = 1
+    seed: int = 0
+
+
+@dataclass
+class Engine:
+    model: Model
+    params: Any
+    cfg: ServeConfig = field(default_factory=ServeConfig)
+
+    def __post_init__(self):
+        self._prefill = jax.jit(self.model.prefill,
+                                static_argnames=("cache_len",))
+        self._decode = jax.jit(self.model.decode_step)
+
+    def generate(self, tokens: np.ndarray) -> np.ndarray:
+        """tokens (B, S) -> generated (B, max_new_tokens)."""
+        b, s = tokens.shape
+        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(tokens)},
+                                      cache_len=s + self.cfg.max_new_tokens)
+        key = jax.random.PRNGKey(self.cfg.seed)
+        out: List[np.ndarray] = []
+        done = np.zeros(b, bool)
+        cur = self._sample(logits, key)
+        for t in range(self.cfg.max_new_tokens):
+            out.append(np.asarray(cur))
+            done |= np.asarray(cur) == self.cfg.eos_id
+            if done.all():
+                break
+            key, sub = jax.random.split(key)
+            logits, cache = self._decode(self.params, cache,
+                                         {"tokens": cur[:, None]},
+                                         jnp.int32(s + t))
+            cur = self._sample(logits, sub)
+        gen = np.stack(out, axis=1)
+        pad = self.cfg.max_new_tokens - gen.shape[1]
+        if pad:
+            gen = np.pad(gen, ((0, 0), (0, pad)), constant_values=self.cfg.eos_id)
+        return gen
+
+    def _sample(self, logits: Array, key: Array) -> Array:
+        if self.cfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / self.cfg.temperature,
+                                      axis=-1).astype(jnp.int32)

@@ -1,0 +1,76 @@
+"""TPU machine topology model: the paper's system graph G_s.
+
+A v5e pod is a 16x16 2D torus of chips; ICI links run ~50 GB/s/direction
+(brief's constant).  Pods connect over DCI at much lower effective
+per-chip bandwidth, modelled as an additive hop penalty.  The *distance
+matrix* M (edge weights m_ij of G_s) is what the QAP functional (1) consumes:
+m_ij = ICI hop count within a pod, plus ``dci_penalty`` across pods --
+i.e. cost is proportional to hops / bandwidth share.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+ICI_BW = 50e9            # bytes/s per link (brief)
+HBM_BW = 819e9           # bytes/s
+PEAK_FLOPS = 197e12      # bf16 / chip (brief)
+DCI_PENALTY = 16.0       # extra distance units for crossing pods
+HBM_PER_CHIP = 16 * 1024 ** 3   # v5e: 16 GiB
+
+
+@dataclass(frozen=True)
+class PodSpec:
+    side_x: int = 16
+    side_y: int = 16
+    num_pods: int = 1
+    dci_penalty: float = DCI_PENALTY
+
+    @property
+    def chips_per_pod(self) -> int:
+        return self.side_x * self.side_y
+
+    @property
+    def num_chips(self) -> int:
+        return self.chips_per_pod * self.num_pods
+
+
+def torus_coords(spec: PodSpec, chip: int) -> Tuple[int, int, int]:
+    pod, rem = divmod(chip, spec.chips_per_pod)
+    y, x = divmod(rem, spec.side_x)
+    return pod, x, y
+
+
+def _torus_dist(a: int, b: int, side: int) -> int:
+    d = abs(a - b)
+    return min(d, side - d)
+
+
+def distance_matrix(spec: PodSpec) -> np.ndarray:
+    """(num_chips, num_chips) ICI/DCI hop distances -- the system graph M."""
+    n = spec.num_chips
+    coords = np.array([torus_coords(spec, i) for i in range(n)])
+    pod = coords[:, 0]
+    x, y = coords[:, 1], coords[:, 2]
+    dx = np.abs(x[:, None] - x[None, :])
+    dx = np.minimum(dx, spec.side_x - dx)
+    dy = np.abs(y[:, None] - y[None, :])
+    dy = np.minimum(dy, spec.side_y - dy)
+    m = (dx + dy).astype(np.float32)
+    cross = (pod[:, None] != pod[None, :])
+    m = m + cross.astype(np.float32) * spec.dci_penalty
+    np.fill_diagonal(m, 0.0)
+    return m
+
+
+def spec_for_mesh_shape(shape: Tuple[int, ...]) -> PodSpec:
+    """Production meshes from launch/mesh.py: (16,16) or (2,16,16)."""
+    total = int(np.prod(shape))
+    if total <= 256:
+        # single pod (or a slice of one): fold into a <=16x16 block
+        side = int(np.ceil(np.sqrt(total)))
+        return PodSpec(side_x=side, side_y=int(np.ceil(total / side)), num_pods=1)
+    assert total % 256 == 0, f"unsupported chip count {total}"
+    return PodSpec(num_pods=total // 256)

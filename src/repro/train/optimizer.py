@@ -1,0 +1,114 @@
+"""Hand-rolled optimizers (no optax in this environment): AdamW + SGD-M.
+
+Moment dtype is configurable per model config (``opt_dtype``): the 235B-class
+configs use bf16 moments so weights+optimizer fit 16 GB/chip HBM at 512-way
+sharding (DESIGN.md S3); everything else uses f32.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"          # adamw | sgdm
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    momentum: float = 0.9        # sgdm
+    grad_clip: float = 1.0       # global-norm clip; 0 disables
+    moment_dtype: Any = jnp.float32
+
+
+class OptState(NamedTuple):
+    step: Array
+    mu: Any         # first moment  (adamw) / momentum (sgdm)
+    nu: Any         # second moment (adamw) / unused   (sgdm)
+
+
+def init(cfg: OptConfig, params: Any) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    mu = jax.tree.map(zeros, params)
+    nu = jax.tree.map(zeros, params) if cfg.kind == "adamw" else jax.tree.map(
+        lambda p: jnp.zeros((), jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=mu, nu=nu)
+
+
+def abstract_state(cfg: OptConfig, abstract_params: Any) -> OptState:
+    return jax.eval_shape(lambda p: init(cfg, p), abstract_params)
+
+
+def state_specs(cfg: OptConfig, param_specs: Any) -> OptState:
+    from jax.sharding import PartitionSpec as P
+    mu = param_specs
+    nu = param_specs if cfg.kind == "adamw" else jax.tree.map(
+        lambda s: P(), param_specs, is_leaf=lambda x: hasattr(x, "index"))
+    return OptState(step=P(), mu=mu, nu=nu)
+
+
+def global_norm(tree: Any) -> Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, Array]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gnorm
+
+
+def apply(cfg: OptConfig, lr: Array, params: Any, grads: Any,
+          state: OptState) -> Tuple[Any, OptState]:
+    step = state.step + 1
+    if cfg.grad_clip > 0:
+        grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+
+    if cfg.kind == "adamw":
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * cfg.b1 + gf * (1 - cfg.b1)
+            v32 = v.astype(jnp.float32) * cfg.b2 + jnp.square(gf) * (1 - cfg.b2)
+            mhat = m32 / (1 - cfg.b1 ** step.astype(jnp.float32))
+            vhat = v32 / (1 - cfg.b2 ** step.astype(jnp.float32))
+            pf = p.astype(jnp.float32)
+            pf = pf - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * pf)
+            return (pf.astype(p.dtype), m32.astype(cfg.moment_dtype),
+                    v32.astype(cfg.moment_dtype))
+        out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+        # unzip the 3-tuples
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, OptState(step=step, mu=new_m, nu=new_v)
+
+    if cfg.kind == "sgdm":
+        def upd(p, g, m):
+            gf = g.astype(jnp.float32) + cfg.weight_decay * p.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * cfg.momentum + gf
+            return ((p.astype(jnp.float32) - lr * m32).astype(p.dtype),
+                    m32.astype(cfg.moment_dtype))
+        out = jax.tree.map(upd, params, grads, state.mu)
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, OptState(step=step, mu=new_m, nu=state.nu)
+
+    raise ValueError(cfg.kind)
+
+
+def warmup_cosine(lr: float, warmup: int, total: int, floor: float = 0.1
+                  ) -> Callable[[Array], Array]:
+    def schedule(step: Array) -> Array:
+        s = step.astype(jnp.float32)
+        warm = lr * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(s < warmup, warm, cos)
+    return schedule

@@ -1,0 +1,78 @@
+"""train_step / serve-step factories: what the launcher jits and lowers.
+
+The factories close over static configuration (model config, optimizer
+config, microbatching) and return pure functions suitable for
+``jax.jit(..., in_shardings=..., out_shardings=..., donate_argnums=...)``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+from repro.models.config import ModelConfig
+from . import optimizer as opt_lib
+
+Array = jax.Array
+
+
+def make_train_step(model: Model, opt_cfg: opt_lib.OptConfig,
+                    schedule: Callable[[Array], Array],
+                    num_groups: int = 1,
+                    microbatch: int = 1) -> Callable:
+    """Returns f(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``microbatch > 1`` enables gradient accumulation: the global batch is
+    split on the leading axis and scanned, trading step latency for
+    activation memory (a hillclimb knob for the biggest configs).
+    """
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, num_groups)
+
+    def train_step(params, opt_state, batch):
+        if microbatch > 1:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatch == 0, (b, microbatch)
+                return x.reshape(microbatch, b // microbatch, *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mb):
+                loss_acc, grad_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                grad_acc = jax.tree.map(jnp.add, grad_acc, grads)
+                return (loss_acc + loss, grad_acc), None
+
+            zero_grads = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc_fn, (jnp.float32(0.0), zero_grads),
+                                            micro)
+            loss = loss / microbatch
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+        lr = schedule(opt_state.step)
+        gnorm = opt_lib.global_norm(grads)
+        params, opt_state = opt_lib.apply(opt_cfg, lr, params, grads, opt_state)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr,
+                   "step": opt_state.step}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model, num_groups: int = 1) -> Callable:
+    def serve_prefill(params, batch):
+        return model.prefill(params, batch, num_groups)
+    return serve_prefill
+
+
+def make_decode_step(model: Model) -> Callable:
+    def serve_step(params, cache, batch, pos):
+        return model.decode_step(params, cache, batch, pos)
+    return serve_step

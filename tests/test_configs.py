@@ -1,0 +1,62 @@
+"""Every assigned architecture config matches the brief's table exactly."""
+import pytest
+
+from repro import configs
+from repro.models.config import is_subquadratic
+
+# (layers, d_model, heads, kv, d_ff, vocab, experts, top_k)
+EXPECTED = {
+    "qwen3_moe_235b_a22b": (94, 4096, 64, 4, 1536, 151_936, 128, 8),
+    "mixtral_8x22b": (56, 6144, 48, 8, 16_384, 32_768, 8, 2),
+    "rwkv6_7b": (32, 4096, None, None, 14_336, 65_536, 0, 0),
+    "musicgen_medium": (48, 1536, 24, 24, 6144, 2048, 0, 0),
+    "qwen3_4b": (36, 2560, 32, 8, 9728, 151_936, 0, 0),
+    "qwen1_5_4b": (40, 2560, 20, 20, 6912, 151_936, 0, 0),
+    "gemma3_4b": (34, 2560, 8, 4, 10_240, 262_144, 0, 0),
+    "granite_34b": (88, 6144, 48, 1, 24_576, 49_152, 0, 0),
+    "jamba_v0_1_52b": (32, 4096, 32, 8, 14_336, 65_536, 16, 2),
+    "internvl2_76b": (80, 8192, 64, 8, 28_672, 128_256, 0, 0),
+}
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_config_matches_brief(arch):
+    cfg = configs.get_config(arch)
+    L, d, h, kv, ff, v, e, k = EXPECTED[arch]
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    if h is not None:       # rwkv is attention-free
+        assert cfg.num_heads == h
+        assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+    assert cfg.num_experts == e
+    assert cfg.num_experts_per_tok == k
+    assert len(cfg.layer_pattern) == L
+
+
+def test_feature_flags():
+    assert configs.get_config("qwen3_4b").qk_norm
+    assert configs.get_config("qwen3_moe_235b_a22b").qk_norm
+    assert configs.get_config("qwen1_5_4b").qkv_bias
+    assert not configs.get_config("granite_34b").mlp_gated
+    assert configs.get_config("mixtral_8x22b").layer_pattern == "W" * 56
+    assert configs.get_config("musicgen_medium").frontend == "audio"
+    assert configs.get_config("internvl2_76b").frontend == "vision"
+    g = configs.get_config("gemma3_4b").layer_pattern
+    assert g.count("G") == 5 and g.count("L") == 29           # 5:1 local:global
+    j = configs.get_config("jamba_v0_1_52b").layer_pattern
+    assert j.count("a") + j.count("A") == 4                   # 1:7 attn:mamba
+    assert sum(c in "MA" for c in j) == 16                    # MoE every 2nd
+
+
+def test_long_context_eligibility():
+    runs = {a for a in configs.ARCH_IDS
+            if is_subquadratic(configs.get_config(a))}
+    assert runs == {"rwkv6_7b", "jamba_v0_1_52b", "mixtral_8x22b", "gemma3_4b"}
+
+
+def test_aliases():
+    assert configs.get_config("qwen3-4b").name == "qwen3-4b"
+    with pytest.raises(KeyError):
+        configs.get_config("nonexistent")

@@ -1,0 +1,77 @@
+"""Mesh-distributed algorithm semantics on an 8-device CPU mesh.
+
+Runs in a subprocess with its own XLA_FLAGS so the main test session keeps a
+single device (required by the smoke tests and benches).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh
+    from repro.core import annealing, composite, distributed, genetic, instances, qap
+
+    assert len(jax.devices()) == 8
+    mesh = Mesh(np.asarray(jax.devices()).reshape(8), ("proc",))
+    inst = instances.make_taie(12)
+    C, M = jnp.asarray(inst.C), jnp.asarray(inst.M)
+
+    # --- PSA over the mesh ----------------------------------------------
+    sa_cfg = annealing.SAConfig(max_neighbors=10, iters_per_exchange=10,
+                                num_exchanges=8, solvers=4)
+    p, f, hist = distributed.run_psa_mesh(C, M, jax.random.PRNGKey(0), sa_cfg, mesh)
+    assert bool(qap.is_permutation(p)), "psa: invalid permutation"
+    np.testing.assert_allclose(float(qap.objective(C, M, p)), float(f), rtol=1e-5)
+    h = np.asarray(hist)
+    assert (np.diff(h) <= 1e-6).all(), "psa: best-so-far must be monotone"
+
+    # --- PGA over the mesh (ring ppermute) --------------------------------
+    ga_cfg = genetic.GAConfig(generations=30)
+    p2, f2, hist2 = distributed.run_pga_mesh(C, M, jax.random.PRNGKey(1), ga_cfg, mesh)
+    assert bool(qap.is_permutation(p2)), "pga: invalid permutation"
+    np.testing.assert_allclose(float(qap.objective(C, M, p2)), float(f2), rtol=1e-5)
+
+    # --- Composite over the mesh ------------------------------------------
+    pca_cfg = composite.CompositeConfig(
+        sa=annealing.SAConfig(max_neighbors=5, iters_per_exchange=5,
+                              num_exchanges=4, solvers=6),
+        ga=genetic.GAConfig(generations=15))
+    p3, f3, _ = distributed.run_pca_mesh(C, M, jax.random.PRNGKey(2), pca_cfg, mesh)
+    assert bool(qap.is_permutation(p3)), "pca: invalid permutation"
+    np.testing.assert_allclose(float(qap.objective(C, M, p3)), float(f3), rtol=1e-5)
+
+    # Distributed and single-host PSA must agree in *distribution*: both
+    # reach at least the quality of a short single-host run.
+    p4, f4, _ = annealing.run_psa(C, M, jax.random.PRNGKey(0), sa_cfg, num_processes=8)
+    assert float(f) <= float(f4) * 1.25 + 1e-6
+
+    # Ring exchange correctness: ppermute moves data to the next island.
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+    def ring_fn(x):
+        return jax.lax.ppermute(x, "proc", [(i, (i + 1) % 8) for i in range(8)])
+    xs = jnp.arange(8, dtype=jnp.int32)
+    out = jax.jit(shard_map(ring_fn, mesh=mesh, in_specs=(P("proc"),),
+                            out_specs=P("proc")))(xs)
+    np.testing.assert_array_equal(np.asarray(out), np.roll(np.arange(8), 1))
+    print("DISTRIBUTED_OK")
+""")
+
+
+@pytest.mark.slow
+def test_distributed_algorithms_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env, cwd=os.path.dirname(os.path.dirname(__file__)),
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "DISTRIBUTED_OK" in r.stdout

@@ -1,0 +1,162 @@
+"""Topology model, HLO traffic extraction, and QAP placement."""
+import numpy as np
+import pytest
+import jax
+
+from repro.core import qap
+from repro.launch import placement as pl
+from repro.topology import hlocost, tpu, traffic
+
+
+# ---------------------------------------------------------------- topology
+def test_torus_distance_symmetric_and_wrapping():
+    spec = tpu.PodSpec(side_x=4, side_y=4, num_pods=1)
+    m = tpu.distance_matrix(spec)
+    assert m.shape == (16, 16)
+    np.testing.assert_array_equal(m, m.T)
+    assert m[0, 3] == 1.0            # torus wrap: x=0 to x=3 on side 4
+    assert m[0, 5] == 2.0            # (0,0) -> (1,1)
+    assert np.diag(m).sum() == 0
+
+
+def test_multi_pod_distance_penalty():
+    spec = tpu.PodSpec(side_x=2, side_y=2, num_pods=2, dci_penalty=10.0)
+    m = tpu.distance_matrix(spec)
+    assert m.shape == (8, 8)
+    assert m[0, 4] == 10.0           # same coords, different pod
+    assert m[0, 1] == 1.0
+
+
+# ---------------------------------------------------------------- HLO parse
+HLO_SAMPLE = """
+HloModule test
+
+%region_1 (p: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %p = (s32[], f32[128,256]) parameter(0)
+  %g0 = s32[] get-tuple-element(%p), index=0
+  %g1 = f32[128,256] get-tuple-element(%p), index=1
+  %ar = f32[128,256] all-reduce(%g1), replica_groups={{0,1,2,3}}, to_apply=%add
+  ROOT %t = (s32[], f32[128,256]) tuple(%g0, %ar)
+}
+
+ENTRY %main (a: f32[128,256], b: f32[256,512]) -> f32[128,512] {
+  %a = f32[128,256] parameter(0)
+  %b = f32[256,512] parameter(1)
+  %tup = (s32[], f32[128,256]) tuple(%c0, %a)
+  %w = (s32[], f32[128,256]) while(%tup), condition=%cond, body=%region_1, backend_config={"known_trip_count":{"n":"7"}}
+  %wa = f32[128,256] get-tuple-element(%w), index=1
+  %ag = f32[256,512] all-gather(%bshard), channel_id=1, replica_groups=[2,8]<=[8,2]T(1,0), dimensions={0}
+  ROOT %dot = f32[128,512] dot(%wa, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_hlocost_counts_dot_flops_and_trips():
+    cost = hlocost.analyze(HLO_SAMPLE, 16)
+    # dot: 2 * 128*512 * 256 flops, executed once
+    assert cost.flops == pytest.approx(2 * 128 * 512 * 256)
+    # all-reduce inside while body runs 7 times on groups of 4
+    ar = cost.by_collective["all-reduce"]
+    assert ar["count"] == pytest.approx(7)
+    ag = cost.by_collective["all-gather"]
+    assert ag["count"] == pytest.approx(1)
+
+
+def test_parse_iota_replica_groups():
+    groups = traffic._parse_groups(
+        "x = f32[4] all-gather(%y), replica_groups=[2,8]<=[8,2]T(1,0), dims={0}", 16)
+    assert len(groups) == 2 and len(groups[0]) == 8
+    flat = sorted(g for gr in groups for g in gr)
+    assert flat == list(range(16))
+    # transposed iota: first group is the even stride pattern
+    assert groups[0] == [0, 2, 4, 6, 8, 10, 12, 14]
+
+
+def test_traffic_matrix_ring_pattern():
+    op = traffic.CollectiveOp(kind="all-reduce", bytes=1000,
+                              groups=[[0, 1, 2, 3]])
+    c = traffic.traffic_matrix([op], 4)
+    # ring edges 0->1->2->3->0 carry 2*bytes*(g-1)/g
+    expect = 2 * 1000 * 3 / 4
+    for a, b in [(0, 1), (1, 2), (2, 3), (3, 0)]:
+        assert c[a, b] == pytest.approx(expect)
+    assert c.sum() == pytest.approx(4 * expect)
+
+
+def test_collective_permute_pairs():
+    op = traffic.CollectiveOp(kind="collective-permute", bytes=512,
+                              groups=[[0, 1], [1, 2]])
+    c = traffic.traffic_matrix([op], 4)
+    assert c[0, 1] == 512 and c[1, 2] == 512 and c.sum() == 1024
+
+
+# ---------------------------------------------------------------- placement
+def test_placement_improves_cross_pod_traffic():
+    """Traffic between logical neighbours placed across pods must be pulled
+    back into one pod by the QAP solver."""
+    spec = tpu.PodSpec(side_x=2, side_y=2, num_pods=2, dci_penalty=50.0)
+    m = tpu.distance_matrix(spec)
+    n = 8
+    # heavy ring traffic over logical devices 0..7 arranged badly:
+    # consecutive logical ids alternate pods under a bad identity layout
+    c = np.zeros((n, n), np.float32)
+    order = [0, 4, 1, 5, 2, 6, 3, 7]      # pathological logical->physical
+    for i in range(n):
+        c[order[i], order[(i + 1) % n]] = 100.0
+    res = pl.solve_placement(c, m, "psa", key=jax.random.PRNGKey(0))
+    assert res.cost_after <= res.cost_before
+    assert res.gain > 0.3, f"expected large gain, got {res.gain:.2%}"
+    assert qap.is_permutation(jax.numpy.asarray(res.perm))
+
+
+def test_placement_identity_when_already_optimal():
+    spec = tpu.PodSpec(side_x=2, side_y=1, num_pods=1)
+    m = tpu.distance_matrix(spec)
+    c = np.zeros((2, 2), np.float32)
+    c[0, 1] = 5.0
+    res = pl.solve_placement(c, m, "psa", key=jax.random.PRNGKey(0))
+    assert res.cost_after == pytest.approx(res.cost_before)  # can't beat 1 hop
+
+
+# ------------------------------------------------------- property invariants
+from hypothesis import given, settings, strategies as st
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 12), st.integers(8, 64))
+def test_traffic_matrix_conserves_wire_bytes(seed, g, payload):
+    """Ring traffic matrix total == total_collective_bytes for one op."""
+    op = traffic.CollectiveOp(kind="all-gather", bytes=payload * 128,
+                              groups=[list(range(g))])
+    c = traffic.traffic_matrix([op], g)
+    total = traffic.total_collective_bytes([op])
+    assert abs(c.sum() - total) / max(total, 1) < 1e-6
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(6, 20))
+def test_polish_monotone_and_valid(seed, n):
+    from repro.core import mapping as mapping_lib
+    rng = np.random.default_rng(seed)
+    C = rng.integers(0, 9, (n, n)).astype(np.float32)
+    M = rng.integers(0, 9, (n, n)).astype(np.float32)
+    np.fill_diagonal(C, 0); np.fill_diagonal(M, 0)
+    import jax.numpy as jnp
+    p0 = jnp.asarray(rng.permutation(n).astype(np.int32))
+    f0 = float(qap.objective(jnp.asarray(C), jnp.asarray(M), p0))
+    p1, f1 = mapping_lib.polish(jnp.asarray(C), jnp.asarray(M), p0,
+                                jax.random.PRNGKey(seed), rounds=20)
+    assert float(f1) <= f0 + 1e-4
+    assert bool(qap.is_permutation(p1))
+    f_check = float(qap.objective(jnp.asarray(C), jnp.asarray(M), p1))
+    assert abs(f_check - float(f1)) < max(1e-3, 1e-5 * abs(f_check))
+
+
+def test_distance_matrix_triangle_inequality_within_pod():
+    spec = tpu.PodSpec(side_x=4, side_y=4, num_pods=1)
+    m = tpu.distance_matrix(spec)
+    n = spec.num_chips
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        i, j, k2 = rng.integers(0, n, 3)
+        assert m[i, j] <= m[i, k2] + m[k2, j] + 1e-6

@@ -1,0 +1,109 @@
+"""Core QAP correctness: objective, deltas, instances, exact oracles."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import qap, instances, exact
+
+
+def _rand_instance(rng, n, asymmetric=False):
+    C = rng.integers(0, 10, (n, n)).astype(np.float32)
+    M = rng.integers(0, 10, (n, n)).astype(np.float32)
+    if not asymmetric:
+        C = C + C.T
+        M = M + M.T
+    np.fill_diagonal(C, 0)
+    np.fill_diagonal(M, 0)
+    return jnp.asarray(C), jnp.asarray(M)
+
+
+def test_objective_matches_matrix_form():
+    rng = np.random.default_rng(0)
+    n = 7
+    C, M = _rand_instance(rng, n, asymmetric=True)
+    p = jnp.asarray(rng.permutation(n).astype(np.int32))
+    # Direct four-index sum per the paper's functional (1).
+    X = np.zeros((n, n))
+    X[np.arange(n), np.asarray(p)] = 1.0
+    f_direct = np.einsum("ij,kp,ki,pj->", np.asarray(M), np.asarray(C), X, X)
+    f = qap.objective(C, M, p)
+    np.testing.assert_allclose(float(f), f_direct, rtol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(4, 24), st.booleans())
+def test_swap_delta_matches_recompute(seed, n, asym):
+    rng = np.random.default_rng(seed)
+    C, M = _rand_instance(rng, n, asymmetric=asym)
+    p = jnp.asarray(rng.permutation(n).astype(np.int32))
+    a, b = map(int, rng.choice(n, size=2, replace=False))
+    delta = qap.swap_delta(C, M, p, a, b)
+    f0 = qap.objective(C, M, p)
+    f1 = qap.objective(C, M, qap.swap_positions(p, a, b))
+    np.testing.assert_allclose(float(delta), float(f1 - f0), rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(5, 40))
+def test_pair_from_index_bijective(seed, n):
+    num = n * (n - 1) // 2
+    idx = jnp.arange(num)
+    a, b = qap.pair_from_index(idx, n)
+    a, b = np.asarray(a), np.asarray(b)
+    assert (a < b).all() and (a >= 0).all() and (b < n).all()
+    assert len({(x, y) for x, y in zip(a, b)}) == num
+
+
+def test_permutation_utilities():
+    key = jax.random.PRNGKey(0)
+    p = qap.random_permutation(key, 17)
+    assert bool(qap.is_permutation(p))
+    np.testing.assert_array_equal(np.asarray(qap.compose(p, qap.invert(p))),
+                                  np.arange(17))
+    batch = qap.random_permutations(key, 5, 11)
+    assert np.asarray(qap.is_permutation(batch)).all()
+
+
+def test_make_taie_known_optimum_small():
+    """Brute force confirms the constructed optimum on a tiny order."""
+    inst = instances.make_taie(6)
+    f_bf, _ = exact.brute_force(inst.C, inst.M)
+    np.testing.assert_allclose(f_bf, inst.optimum, rtol=1e-6)
+    # The advertised optimal permutation attains F0.
+    f_opt = qap.objective(jnp.asarray(inst.C), jnp.asarray(inst.M),
+                          jnp.asarray(inst.opt_perm))
+    np.testing.assert_allclose(float(f_opt), inst.optimum, rtol=1e-6)
+
+
+def test_branch_and_bound_agrees_with_brute_force():
+    rng = np.random.default_rng(3)
+    C, M = _rand_instance(rng, 7)
+    f_bf, _ = exact.brute_force(np.asarray(C), np.asarray(M))
+    f_bb, p_bb = exact.branch_and_bound(np.asarray(C), np.asarray(M))
+    assert f_bf == pytest.approx(f_bb)
+    f_check = float(qap.objective(C, M, jnp.asarray(p_bb)))
+    assert f_check == pytest.approx(f_bb)
+
+
+@pytest.mark.parametrize("n", [27, 45, 125])
+def test_make_taie_optimum_attained_and_unbeaten(n):
+    inst = instances.make_taie(n)
+    C, M = jnp.asarray(inst.C), jnp.asarray(inst.M)
+    f_opt = float(qap.objective(C, M, jnp.asarray(inst.opt_perm)))
+    np.testing.assert_allclose(f_opt, inst.optimum, rtol=1e-6)
+    # No random permutation (or local swap of the optimum) beats F0.
+    key = jax.random.PRNGKey(n)
+    perms = qap.random_permutations(key, 64, n)
+    fs = np.asarray(qap.objective(C, M, perms))
+    assert (fs >= inst.optimum - 1e-3).all()
+    pairs = qap.random_swap_pairs(jax.random.PRNGKey(1), 128, n)
+    deltas = np.asarray(qap.swap_delta_batch(C, M, jnp.asarray(inst.opt_perm), pairs))
+    assert (deltas >= -1e-3).all()
+
+
+def test_instance_orders_match_paper():
+    for n in instances.PAPER_ORDERS:
+        d = instances.GRID[n]
+        assert d[0] * d[1] * d[2] == n
