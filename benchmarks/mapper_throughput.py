@@ -1,0 +1,149 @@
+"""Mapping-service throughput: batched engine vs the sequential loop.
+
+The tentpole claim: a resource manager receives a *stream* of mapping
+requests, and dispatching a whole size bucket through one batched solver
+program (``annealing.run_psa_batch``: a leading vmap instance axis over
+the (processes, solvers) chain grid) beats solving the same instances one
+``run_psa`` call at a time.  Both paths run the identical SA budget, so
+the comparison is pure dispatch/batching efficiency.
+
+Usage:
+    PYTHONPATH=src python benchmarks/mapper_throughput.py
+    PYTHONPATH=src python benchmarks/mapper_throughput.py --dry-run   # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import annealing
+from repro.serve.mapper import MapRequest, MappingEngine
+
+
+def random_instance(n: int, seed: int):
+    rng = np.random.default_rng(seed)
+    C = rng.integers(0, 10, (n, n)).astype(np.float32)
+    M = rng.integers(1, 10, (n, n)).astype(np.float32)
+    C, M = C + C.T, M + M.T
+    np.fill_diagonal(C, 0)
+    np.fill_diagonal(M, 0)
+    return C, M
+
+
+def pad_batch(insts, bucket):
+    B = len(insts)
+    Cs = np.zeros((B, bucket, bucket), np.float32)
+    Ms = np.zeros((B, bucket, bucket), np.float32)
+    nvs = np.zeros(B, np.int32)
+    for i, (C, M) in enumerate(insts):
+        n = C.shape[0]
+        Cs[i, :n, :n] = C
+        Ms[i, :n, :n] = M
+        nvs[i] = n
+    return jnp.asarray(Cs), jnp.asarray(Ms), jnp.asarray(nvs)
+
+
+def bench(batch: int, n: int, bucket: int, cfg: annealing.SAConfig,
+          num_processes: int, repeats: int):
+    insts = [random_instance(n, 100 + i) for i in range(batch)]
+    keys = jnp.stack([jax.random.PRNGKey(i) for i in range(batch)])
+    Cs, Ms, nvs = pad_batch(insts, bucket)
+
+    # --- sequential baseline: one run_psa call per instance -------------
+    def run_seq():
+        outs = []
+        for i in range(batch):
+            p, f, _ = annealing.run_psa(Cs[i], Ms[i], keys[i], cfg,
+                                        num_processes, n_valid=nvs[i])
+            outs.append((p, f))
+        jax.block_until_ready(outs)
+        return outs
+
+    # --- batched: one run_psa_batch call for the whole bucket -----------
+    def run_batch():
+        out = annealing.run_psa_batch(Cs, Ms, keys, cfg, num_processes,
+                                      n_valid=nvs)
+        jax.block_until_ready(out)
+        return out
+
+    run_seq()                      # compile both programs before timing
+    run_batch()
+
+    t_seq = min(_timed(run_seq) for _ in range(repeats))
+    t_batch = min(_timed(run_batch) for _ in range(repeats))
+
+    # --- engine end-to-end (queue + pad + dispatch + cache admin) -------
+    def run_engine():
+        eng = MappingEngine(buckets=(bucket,), num_processes=num_processes,
+                            sa_cfg=cfg, polish_rounds=0)
+        for i, (C, M) in enumerate(insts):
+            eng.submit(MapRequest(job_id=f"j{i}", C=C, M=M, seed=i))
+        return eng.flush()
+    run_engine()
+    t_engine = min(_timed(run_engine) for _ in range(repeats))
+
+    # equality: the batch axis changes throughput, not results
+    seq_out = run_seq()
+    batch_out = run_batch()
+    seq_f = np.array([float(f) for _, f in seq_out])
+    batch_f = np.asarray(batch_out[1])
+    assert np.array_equal(seq_f, batch_f), (seq_f, batch_f)
+
+    return t_seq, t_batch, t_engine
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--n", type=int, default=32)
+    ap.add_argument("--bucket", type=int, default=32)
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--neighbors", type=int, default=16)
+    ap.add_argument("--iters-per-exchange", type=int, default=5)
+    ap.add_argument("--num-exchanges", type=int, default=3)
+    ap.add_argument("--solvers", type=int, default=4)
+    ap.add_argument("--num-processes", type=int, default=2)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny shapes, one repeat: CI smoke test")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        args.batch, args.n, args.bucket, args.repeats = 2, 8, 8, 1
+        args.neighbors, args.iters_per_exchange = 4, 2
+        args.num_exchanges, args.solvers = 2, 2
+    if args.n > args.bucket:
+        ap.error(f"--n {args.n} does not fit --bucket {args.bucket}")
+    if args.batch < 1 or args.repeats < 1:
+        ap.error("--batch and --repeats must be >= 1")
+
+    cfg = annealing.SAConfig(max_neighbors=args.neighbors,
+                             iters_per_exchange=args.iters_per_exchange,
+                             num_exchanges=args.num_exchanges,
+                             solvers=args.solvers)
+    t_seq, t_batch, t_engine = bench(args.batch, args.n, args.bucket, cfg,
+                                     args.num_processes, args.repeats)
+    B = args.batch
+    print(f"instances: {B} x n={args.n} (bucket {args.bucket}), "
+          f"SA budget: {cfg.max_neighbors} neighbors x "
+          f"{cfg.iters_per_exchange} x {cfg.num_exchanges}, "
+          f"{cfg.solvers} solvers x {args.num_processes} processes")
+    print(f"sequential loop : {t_seq:.4f} s  ({B / t_seq:8.1f} mappings/s)")
+    print(f"batched solve   : {t_batch:.4f} s  ({B / t_batch:8.1f} mappings/s)")
+    print(f"engine flush    : {t_engine:.4f} s  ({B / t_engine:8.1f} mappings/s)")
+    print(f"speedup (batched vs sequential): {t_seq / t_batch:.2f}x")
+    if args.dry_run:
+        print("dry-run OK")
+
+
+if __name__ == "__main__":
+    main()

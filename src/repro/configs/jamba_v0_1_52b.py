@@ -23,7 +23,7 @@ SMOKE = ModelConfig(
     num_layers=8, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
     d_ff=128, vocab_size=256,
     layer_pattern=_UNIT,
-    num_experts=4, num_experts_per_tok=2,
+    num_experts=4, num_experts_per_tok=2, moe_capacity_factor=0.0,
     mamba_d_state=4, mamba_d_conv=2, mamba_expand=2,
     attn_q_chunk=16, attn_kv_chunk=16, loss_chunk=16,
 )

@@ -15,6 +15,6 @@ SMOKE = ModelConfig(
     num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
     d_ff=96, vocab_size=256,
     layer_pattern="W" * 2, sliding_window=32,
-    num_experts=4, num_experts_per_tok=2,
+    num_experts=4, num_experts_per_tok=2, moe_capacity_factor=0.0,
     attn_q_chunk=16, attn_kv_chunk=16, loss_chunk=16,
 )

@@ -20,6 +20,6 @@ SMOKE = ModelConfig(
     d_ff=96, vocab_size=256,
     layer_pattern="E" * 2,
     qk_norm=True,
-    num_experts=8, num_experts_per_tok=2,
+    num_experts=8, num_experts_per_tok=2, moe_capacity_factor=0.0,
     attn_q_chunk=16, attn_kv_chunk=16, loss_chunk=16,
 )

@@ -79,23 +79,35 @@ def cool(temp: Array, cfg: SAConfig, beta: Array) -> Array:
 
 
 def init_chain(C: Array, M: Array, key: Array, cfg: SAConfig,
-               identity: Optional[Array] = None) -> SAState:
+               identity: Optional[Array] = None,
+               n_valid: Optional[Array] = None) -> SAState:
     """identity: when given (seed_with='identity'), this chain starts from
     the scheduler's as-allocated order instead of a random permutation --
-    the greedy-initialisation variant the paper cites ([9])."""
+    the greedy-initialisation variant the paper cites ([9]).
+
+    n_valid: instance-batching support -- the chain works on a padded
+    (N, N) instance whose first ``n_valid`` slots are real; the start
+    permutation keeps real processes on real nodes and padded slots on
+    themselves (see ``qap.masked_random_permutation``)."""
     n = C.shape[0]
-    p = identity if identity is not None else qap.random_permutation(key, n)
+    if identity is not None:
+        p = identity
+    elif n_valid is None:
+        p = qap.random_permutation(key, n)
+    else:
+        p = qap.masked_random_permutation(key, n, n_valid)
     f = qap.objective(C, M, p)
     t0 = initial_temperature(f, cfg.mu, cfg.phi)
     return SAState(p=p, f=f, best_p=p, best_f=f, temp=t0)
 
 
 def temperature_step(C: Array, M: Array, state: SAState, key: Array,
-                     cfg: SAConfig, beta: Array) -> SAState:
+                     cfg: SAConfig, beta: Array,
+                     n_valid: Optional[Array] = None) -> SAState:
     """One temperature level: sequential candidate scan with acceptance cap."""
     n = state.p.shape[0]
     kpair, kacc = jax.random.split(key)
-    pairs = qap.random_swap_pairs(kpair, cfg.max_neighbors, n)
+    pairs = qap.random_swap_pairs(kpair, cfg.max_neighbors, n, n_valid)
     us = jax.random.uniform(kacc, (cfg.max_neighbors,))
 
     def body(carry, inputs):
@@ -127,39 +139,49 @@ def _adopt_best(state: SAState, best_p: Array, best_f: Array) -> SAState:
                           best_f=jnp.minimum(best_f, state.best_f))
 
 
-def _chain_round(C, M, state, key, cfg: SAConfig, beta):
+def _chain_round(C, M, state, key, cfg: SAConfig, beta,
+                 n_valid: Optional[Array] = None):
     """iters_per_exchange temperature steps for one chain."""
     keys = jax.random.split(key, cfg.iters_per_exchange)
     def step(s, k):
-        return temperature_step(C, M, s, k, cfg, beta), None
+        return temperature_step(C, M, s, k, cfg, beta, n_valid), None
     state, _ = jax.lax.scan(step, state, keys)
     return state
 
 
-def make_beta(C: Array, M: Array, key: Array, cfg: SAConfig) -> Array:
+def make_beta(C: Array, M: Array, key: Array, cfg: SAConfig,
+              n_valid: Optional[Array] = None) -> Array:
     """Cauchy beta from T0/Tf and the total number of coolings."""
     n = C.shape[0]
-    f0 = qap.objective(C, M, qap.random_permutation(key, n))
+    if n_valid is None:
+        p0 = qap.random_permutation(key, n)
+    else:
+        p0 = qap.masked_random_permutation(key, n, n_valid)
+    f0 = qap.objective(C, M, p0)
     t0 = initial_temperature(f0, cfg.mu, cfg.phi)
     n_cool = cfg.num_exchanges * cfg.iters_per_exchange
     return (t0 - cfg.t_final) / (n_cool * t0 * cfg.t_final)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "num_processes", "exchange"))
-def run_psa(C: Array, M: Array, key: Array, cfg: SAConfig,
-            num_processes: int = 4, exchange: bool = True
-            ) -> Tuple[Array, Array, Array]:
-    """Parallel SA on a (num_processes, solvers) chain grid (single host).
+def _psa_impl(C: Array, M: Array, key: Array, cfg: SAConfig,
+              num_processes: int, exchange: bool,
+              n_valid: Optional[Array]) -> Tuple[Array, Array, Array]:
+    """Shared PSA body for the single-instance and instance-batched paths.
 
-    Returns (best_perm, best_f, history) where history[r] is the global best
-    objective after exchange round r.
+    With ``n_valid`` the instance is treated as padded: flows touching
+    padded slots are zeroed once up front, start permutations and candidate
+    swaps stay inside the valid prefix, so the plain objective/delta remain
+    exact and the returned permutation maps real processes to real nodes.
     """
+    if n_valid is not None:
+        C = qap.mask_flows(C, n_valid)
     kinit, kbeta, krun = jax.random.split(key, 3)
-    beta = make_beta(C, M, kbeta, cfg)
+    beta = make_beta(C, M, kbeta, cfg, n_valid)
 
     chain_keys = jax.random.split(kinit, num_processes * cfg.solvers) \
         .reshape(num_processes, cfg.solvers, 2)
-    init = jax.vmap(jax.vmap(lambda k: init_chain(C, M, k, cfg)))(chain_keys)
+    init = jax.vmap(jax.vmap(
+        lambda k: init_chain(C, M, k, cfg, n_valid=n_valid)))(chain_keys)
     if cfg.seed_with == "identity":
         # chain 0 of every process starts from the as-allocated order
         n = C.shape[0]
@@ -174,7 +196,7 @@ def run_psa(C: Array, M: Array, key: Array, cfg: SAConfig,
         keys = jax.random.split(key, num_processes * cfg.solvers) \
             .reshape(num_processes, cfg.solvers, 2)
         state = jax.vmap(jax.vmap(
-            lambda s, k: _chain_round(C, M, s, k, cfg, beta)))(state, keys)
+            lambda s, k: _chain_round(C, M, s, k, cfg, beta, n_valid)))(state, keys)
         gbest_f = state.best_f.min()
         flat = state.best_f.reshape(-1)
         gbest_p = state.best_p.reshape(-1, state.best_p.shape[-1])[jnp.argmin(flat)]
@@ -191,3 +213,34 @@ def run_psa(C: Array, M: Array, key: Array, cfg: SAConfig,
     i = jnp.argmin(flat_f)
     best_p = state.best_p.reshape(-1, state.best_p.shape[-1])[i]
     return best_p, flat_f[i], history
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "num_processes", "exchange"))
+def run_psa(C: Array, M: Array, key: Array, cfg: SAConfig,
+            num_processes: int = 4, exchange: bool = True,
+            n_valid: Optional[Array] = None) -> Tuple[Array, Array, Array]:
+    """Parallel SA on a (num_processes, solvers) chain grid (single host).
+
+    Returns (best_perm, best_f, history) where history[r] is the global best
+    objective after exchange round r.  ``n_valid`` restricts the search to a
+    padded instance's valid prefix (see ``_psa_impl``).
+    """
+    return _psa_impl(C, M, key, cfg, num_processes, exchange, n_valid)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "num_processes", "exchange"))
+def run_psa_batch(Cs: Array, Ms: Array, keys: Array, cfg: SAConfig,
+                  num_processes: int = 4, exchange: bool = True,
+                  n_valid: Optional[Array] = None
+                  ) -> Tuple[Array, Array, Array]:
+    """Instance-batched PSA: a leading vmap axis over independent instances.
+
+    Cs, Ms: (B, N, N) padded instances; keys: (B, 2) one PRNG key per
+    instance; n_valid: optional (B,) valid orders (None = all full size).
+    Returns (best_perms (B, N), best_fs (B,), history (B, num_exchanges)),
+    where entry b equals ``run_psa(Cs[b], Ms[b], keys[b], ..., n_valid[b])``
+    — the batch axis changes throughput, not results.
+    """
+    return qap.vmap_instances(
+        lambda c, m, k, nv: _psa_impl(c, m, k, cfg, num_processes, exchange,
+                                      nv), Cs, Ms, keys, n_valid)

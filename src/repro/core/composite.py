@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,24 +32,27 @@ def _resolve_solvers(cfg: CompositeConfig, n: int) -> int:
 
 
 def seed_population(C: Array, M: Array, key: Array, cfg: CompositeConfig,
-                    num_processes: int) -> genetic.GAState:
+                    num_processes: int,
+                    n_valid: Optional[Array] = None) -> genetic.GAState:
     """Stage 1: per-process SA chains, NO exchanges, one chain per slot."""
     n = C.shape[0]
     solvers = _resolve_solvers(cfg, n)
     sa_cfg = annealing.SAConfig(**{**cfg.sa.__dict__, "solvers": solvers})
 
     kinit, kbeta, krun = jax.random.split(key, 3)
-    beta = annealing.make_beta(C, M, kbeta, sa_cfg)
+    beta = annealing.make_beta(C, M, kbeta, sa_cfg, n_valid)
     chain_keys = jax.random.split(kinit, num_processes * solvers) \
         .reshape(num_processes, solvers, 2)
     state = jax.vmap(jax.vmap(
-        lambda k: annealing.init_chain(C, M, k, sa_cfg)))(chain_keys)
+        lambda k: annealing.init_chain(C, M, k, sa_cfg,
+                                       n_valid=n_valid)))(chain_keys)
 
     def round_step(st, key):
         keys = jax.random.split(key, num_processes * solvers) \
             .reshape(num_processes, solvers, 2)
         st = jax.vmap(jax.vmap(
-            lambda s, k: annealing._chain_round(C, M, s, k, sa_cfg, beta)))(st, keys)
+            lambda s, k: annealing._chain_round(C, M, s, k, sa_cfg, beta,
+                                                n_valid)))(st, keys)
         return st, None
 
     round_keys = jax.random.split(krun, sa_cfg.num_exchanges)
@@ -57,16 +60,19 @@ def seed_population(C: Array, M: Array, key: Array, cfg: CompositeConfig,
     return genetic.GAState(pop=state.best_p, fit=state.best_f)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "num_processes"))
-def run_pca(C: Array, M: Array, key: Array, cfg: CompositeConfig,
-            num_processes: int = 4) -> Tuple[Array, Array, Array]:
-    """Composite algorithm.  Returns (best_perm, best_f, ga_history)."""
+def _pca_impl(C: Array, M: Array, key: Array, cfg: CompositeConfig,
+              num_processes: int, n_valid: Optional[Array]
+              ) -> Tuple[Array, Array, Array]:
+    """Shared PCA body for single-instance and instance-batched paths."""
+    if n_valid is not None:
+        C = qap.mask_flows(C, n_valid)
     kseed, krun = jax.random.split(key)
-    state = seed_population(C, M, kseed, cfg, num_processes)
+    state = seed_population(C, M, kseed, cfg, num_processes, n_valid)
 
     def gen_step(st, key):
         keys = jax.random.split(key, num_processes)
-        st = jax.vmap(lambda s, k: genetic.breed(C, M, s, k, cfg.ga))(st, keys)
+        st = jax.vmap(
+            lambda s, k: genetic.breed(C, M, s, k, cfg.ga, n_valid))(st, keys)
         bp, bf = jax.vmap(genetic.island_best)(st)
         mig_p, mig_f = jnp.roll(bp, 1, axis=0), jnp.roll(bf, 1, axis=0)
         st = jax.vmap(genetic.receive_migrants)(st, mig_p, mig_f)
@@ -78,3 +84,26 @@ def run_pca(C: Array, M: Array, key: Array, cfg: CompositeConfig,
     bp, bf = jax.vmap(genetic.island_best)(state)
     i = jnp.argmin(bf)
     return bp[i], bf[i], history
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "num_processes"))
+def run_pca(C: Array, M: Array, key: Array, cfg: CompositeConfig,
+            num_processes: int = 4,
+            n_valid: Optional[Array] = None) -> Tuple[Array, Array, Array]:
+    """Composite algorithm.  Returns (best_perm, best_f, ga_history)."""
+    return _pca_impl(C, M, key, cfg, num_processes, n_valid)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "num_processes"))
+def run_pca_batch(Cs: Array, Ms: Array, keys: Array, cfg: CompositeConfig,
+                  num_processes: int = 4,
+                  n_valid: Optional[Array] = None
+                  ) -> Tuple[Array, Array, Array]:
+    """Instance-batched PCA: leading vmap axis over independent instances.
+
+    Cs, Ms: (B, N, N); keys: (B, 2); n_valid: optional (B,).  Entry b
+    equals ``run_pca(Cs[b], Ms[b], keys[b], ..., n_valid[b])``.
+    """
+    return qap.vmap_instances(
+        lambda c, m, k, nv: _pca_impl(c, m, k, cfg, num_processes, nv),
+        Cs, Ms, keys, n_valid)

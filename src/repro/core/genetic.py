@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -64,43 +64,75 @@ class GAState(NamedTuple):
 # Genetic operators (all fully vectorised; validity property-tested).
 # ----------------------------------------------------------------------------
 
-def order_crossover(key: Array, p1: Array, p2: Array) -> Array:
+def order_crossover(key: Array, p1: Array, p2: Array,
+                    n_valid: Optional[Array] = None) -> Array:
     """OX: child keeps p1[c1:c2]; remaining positions are filled with p2's
-    genes in p2-order starting at c2 (cyclically), skipping duplicates."""
+    genes in p2-order starting at c2 (cyclically), skipping duplicates.
+
+    With ``n_valid`` (instance batching) both parents must be identity on
+    the padded tail; the crossover then acts on the valid prefix only and
+    the child inherits the same invariant.
+    """
     n = p1.shape[0]
     k1, k2 = jax.random.split(key)
-    c1 = jax.random.randint(k1, (), 0, n)
-    c2 = jax.random.randint(k2, (), 0, n)
-    c1, c2 = jnp.minimum(c1, c2), jnp.maximum(c1, c2)
+    if n_valid is None:
+        c1 = jax.random.randint(k1, (), 0, n)
+        c2 = jax.random.randint(k2, (), 0, n)
+        c1, c2 = jnp.minimum(c1, c2), jnp.maximum(c1, c2)
 
-    pos = jnp.arange(n)
-    seg_mask = (pos >= c1) & (pos < c2)                  # positions from p1
-    gene_in_seg = jnp.zeros(n, jnp.bool_).at[p1].set(seg_mask)
+        pos = jnp.arange(n)
+        seg_mask = (pos >= c1) & (pos < c2)              # positions from p1
+        gene_in_seg = jnp.zeros(n, jnp.bool_).at[p1].set(seg_mask)
 
-    # Rotate so filling starts at c2 (classic OX order).
-    rot = jnp.roll(pos, -c2)                             # position sequence
-    genes = p2[rot]                                      # p2 genes from c2 on
-    keep = ~gene_in_seg[genes]                           # genes to place
-    avail = ~seg_mask[rot]                               # positions to fill
+        # Rotate so filling starts at c2 (classic OX order).
+        rot = jnp.roll(pos, -c2)                         # position sequence
+        genes = p2[rot]                                  # p2 genes from c2 on
+        keep = ~gene_in_seg[genes]                       # genes to place
+        avail = ~seg_mask[rot]                           # positions to fill
+        fill = 0
+    else:
+        nv = jnp.maximum(n_valid, 1)
+        c1 = jax.random.randint(k1, (), 0, nv)
+        c2 = jax.random.randint(k2, (), 0, nv)
+        c1, c2 = jnp.minimum(c1, c2), jnp.maximum(c1, c2)
+
+        pos = jnp.arange(n)
+        validp = pos < nv
+        seg_mask = (pos >= c1) & (pos < c2)              # always inside prefix
+        gene_in_seg = jnp.zeros(n, jnp.bool_).at[p1].set(seg_mask)
+
+        # Cyclic rotation of the *valid* prefix only; padded slots map to
+        # themselves so their (pad) genes are excluded below.
+        rot = jnp.where(validp, (pos + c2) % nv, pos)
+        genes = p2[rot]
+        keep = ~gene_in_seg[genes] & validp
+        avail = ~seg_mask[rot] & validp
+        fill = jnp.where(validp, 0, pos)                 # pad tail = identity
 
     # rank-matched scatter: r-th kept gene -> r-th available position
     gene_rank = jnp.cumsum(keep) - 1
     pos_rank = jnp.cumsum(avail) - 1
     pos_by_rank = jnp.zeros(n, jnp.int32).at[jnp.where(avail, pos_rank, n - 1)] \
         .set(jnp.where(avail, rot, 0), mode="drop")
-    child = jnp.where(seg_mask, p1, 0)
+    child = jnp.where(seg_mask, p1, fill)
     child = child.at[jnp.where(keep, pos_by_rank[gene_rank], n)] \
         .set(jnp.where(keep, genes, 0), mode="drop")
     return child.astype(p1.dtype)
 
 
-def swap_mutation(key: Array, p: Array, p_mutation: float) -> Array:
+def swap_mutation(key: Array, p: Array, p_mutation: float,
+                  n_valid: Optional[Array] = None) -> Array:
     """Expected p_mutation * N swap mutations via a fixed MAX_MUT budget."""
     n = p.shape[0]
-    gate_p = jnp.minimum(p_mutation * n / MAX_MUT, 1.0)
+    if n_valid is None:
+        gate_p = jnp.minimum(p_mutation * n / MAX_MUT, 1.0)
+        hi = n
+    else:
+        gate_p = jnp.minimum(p_mutation * n_valid / MAX_MUT, 1.0)
+        hi = jnp.maximum(n_valid, 1)
     ki, kj, ku = jax.random.split(key, 3)
-    ii = jax.random.randint(ki, (MAX_MUT,), 0, n)
-    jj = jax.random.randint(kj, (MAX_MUT,), 0, n)
+    ii = jax.random.randint(ki, (MAX_MUT,), 0, hi)
+    jj = jax.random.randint(kj, (MAX_MUT,), 0, hi)
     us = jax.random.uniform(ku, (MAX_MUT,))
 
     def body(pp, t):
@@ -130,18 +162,22 @@ def _resolve(cfg: GAConfig, n: int) -> Tuple[int, int]:
     return pop, off
 
 
-def init_island(C: Array, M: Array, key: Array, cfg: GAConfig) -> GAState:
+def init_island(C: Array, M: Array, key: Array, cfg: GAConfig,
+                n_valid: Optional[Array] = None) -> GAState:
     n = C.shape[0]
     pop_size, _ = _resolve(cfg, n)
-    pop = qap.random_permutations(key, pop_size, n)
+    if n_valid is None:
+        pop = qap.random_permutations(key, pop_size, n)
+    else:
+        pop = qap.masked_random_permutations(key, pop_size, n, n_valid)
     if cfg.seed_identity:
         pop = pop.at[0].set(jnp.arange(n, dtype=pop.dtype))
     fit = ops.qap_objective(C, M, pop)
     return GAState(pop=pop, fit=fit)
 
 
-def breed(C: Array, M: Array, state: GAState, key: Array, cfg: GAConfig
-          ) -> GAState:
+def breed(C: Array, M: Array, state: GAState, key: Array, cfg: GAConfig,
+          n_valid: Optional[Array] = None) -> GAState:
     """One generation on one island (paper steps 2-5)."""
     pop_actual = state.pop.shape[0]   # composite may seed pop != graph order
     n_off = cfg.n_offspring if cfg.n_offspring > 0 else max(pop_actual // 2, 1)
@@ -160,11 +196,13 @@ def breed(C: Array, M: Array, state: GAState, key: Array, cfg: GAConfig
 
     xkeys = jax.random.split(kx, n_off)
     do_x = jax.random.uniform(kxp, (n_off,)) < cfg.p_crossover
-    children = jax.vmap(order_crossover)(xkeys, par1, par2)
+    children = jax.vmap(
+        lambda k, a, b: order_crossover(k, a, b, n_valid))(xkeys, par1, par2)
     children = jnp.where(do_x[:, None], children, par1)
 
     mkeys = jax.random.split(kmut, n_off)
-    children = jax.vmap(lambda k, p: swap_mutation(k, p, cfg.p_mutation))(mkeys, children)
+    children = jax.vmap(
+        lambda k, p: swap_mutation(k, p, cfg.p_mutation, n_valid))(mkeys, children)
     child_fit = ops.qap_objective(C, M, children)
 
     # Replace the worst n_off individuals with the descendants (paper step 4).
@@ -188,21 +226,19 @@ def island_best(state: GAState) -> Tuple[Array, Array]:
     return state.pop[i], state.fit[i]
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "num_processes"))
-def run_pga(C: Array, M: Array, key: Array, cfg: GAConfig,
-            num_processes: int = 4) -> Tuple[Array, Array, Array]:
-    """Island PGA with ring exchange (single-host vmap form).
-
-    Returns (best_perm, best_f, history) -- history[g] = global best per
-    generation.  The mesh-distributed form lives in ``core.distributed``.
-    """
+def _pga_impl(C: Array, M: Array, key: Array, cfg: GAConfig,
+              num_processes: int, n_valid: Optional[Array]
+              ) -> Tuple[Array, Array, Array]:
+    """Shared PGA body for single-instance and instance-batched paths."""
+    if n_valid is not None:
+        C = qap.mask_flows(C, n_valid)
     kinit, krun = jax.random.split(key)
     init_keys = jax.random.split(kinit, num_processes)
-    state = jax.vmap(lambda k: init_island(C, M, k, cfg))(init_keys)
+    state = jax.vmap(lambda k: init_island(C, M, k, cfg, n_valid))(init_keys)
 
     def gen_step(st, key):
         keys = jax.random.split(key, num_processes)
-        st = jax.vmap(lambda s, k: breed(C, M, s, k, cfg))(st, keys)
+        st = jax.vmap(lambda s, k: breed(C, M, s, k, cfg, n_valid))(st, keys)
         bp, bf = jax.vmap(island_best)(st)
         # Ring migration: island i receives the best of island i-1.
         mig_p, mig_f = jnp.roll(bp, 1, axis=0), jnp.roll(bf, 1, axis=0)
@@ -215,3 +251,31 @@ def run_pga(C: Array, M: Array, key: Array, cfg: GAConfig,
     bp, bf = jax.vmap(island_best)(state)
     i = jnp.argmin(bf)
     return bp[i], bf[i], history
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "num_processes"))
+def run_pga(C: Array, M: Array, key: Array, cfg: GAConfig,
+            num_processes: int = 4,
+            n_valid: Optional[Array] = None) -> Tuple[Array, Array, Array]:
+    """Island PGA with ring exchange (single-host vmap form).
+
+    Returns (best_perm, best_f, history) -- history[g] = global best per
+    generation.  The mesh-distributed form lives in ``core.distributed``.
+    ``n_valid`` restricts the search to a padded instance's valid prefix.
+    """
+    return _pga_impl(C, M, key, cfg, num_processes, n_valid)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "num_processes"))
+def run_pga_batch(Cs: Array, Ms: Array, keys: Array, cfg: GAConfig,
+                  num_processes: int = 4,
+                  n_valid: Optional[Array] = None
+                  ) -> Tuple[Array, Array, Array]:
+    """Instance-batched PGA: leading vmap axis over independent instances.
+
+    Cs, Ms: (B, N, N); keys: (B, 2); n_valid: optional (B,).  Entry b
+    equals ``run_pga(Cs[b], Ms[b], keys[b], ..., n_valid[b])``.
+    """
+    return qap.vmap_instances(
+        lambda c, m, k, nv: _pga_impl(c, m, k, cfg, num_processes, nv),
+        Cs, Ms, keys, n_valid)

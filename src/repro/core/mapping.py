@@ -8,6 +8,7 @@ functional (1), within a time budget set by the algorithm config.
 """
 from __future__ import annotations
 
+import functools
 import time
 from dataclasses import dataclass
 from typing import Optional
@@ -24,11 +25,13 @@ ALGORITHMS = ("psa", "pga", "pca", "identity")
 
 
 @jax.jit
-def _polish_round(C: Array, M: Array, p: Array, f: Array, key: Array):
+def _polish_round(C: Array, M: Array, p: Array, f: Array, key: Array,
+                  n_valid: Optional[Array] = None):
     """One batched 2-swap descent round: evaluate K random swaps against the
-    current permutation, apply the best if it improves."""
+    current permutation, apply the best if it improves.  With ``n_valid``
+    (padded instances) candidate swaps stay inside the valid prefix."""
     n = p.shape[0]
-    pairs = qap.random_swap_pairs(key, 256, n)
+    pairs = qap.random_swap_pairs(key, 256, n, n_valid)
     deltas = qap.swap_delta_batch(C, M, p, pairs)
     i = jnp.argmin(deltas)
     better = deltas[i] < -1e-9
@@ -37,22 +40,37 @@ def _polish_round(C: Array, M: Array, p: Array, f: Array, key: Array):
     return p_new, jnp.where(better, f + deltas[i], f)
 
 
-def polish(C: Array, M: Array, p: Array, key: Array, rounds: int = 200
-           ) -> tuple:
+def polish(C: Array, M: Array, p: Array, key: Array, rounds: int = 200,
+           n_valid: Optional[Array] = None) -> tuple:
     """Greedy batched 2-swap local search (beyond-paper refinement, in the
     spirit of the Kernighan-Lin hybridisation the paper cites [15, 16]).
 
     Cheap relative to SA/GA (each round is one batched delta kernel call)
     and strictly non-increasing; applied as a final stage by default."""
+    if n_valid is not None:
+        C = qap.mask_flows(C, n_valid)
     f = qap.objective(C, M, p)
 
     def body(carry, k):
         pp, ff = carry
-        pp, ff = _polish_round(C, M, pp, ff, k)
+        pp, ff = _polish_round(C, M, pp, ff, k, n_valid)
         return (pp, ff), None
 
     (p, f), _ = jax.lax.scan(body, (p, f), jax.random.split(key, rounds))
     return p, f
+
+
+@functools.partial(jax.jit, static_argnames=("rounds",))
+def polish_batch(Cs: Array, Ms: Array, ps: Array, keys: Array,
+                 rounds: int = 200, n_valid: Optional[Array] = None) -> tuple:
+    """Instance-batched ``polish``: Cs/Ms (B, N, N), ps (B, N), keys (B, 2),
+    n_valid optional (B,).  Used by the serving engine so batched solves get
+    the same final 2-swap refinement ``find_mapping`` applies."""
+    if n_valid is None:
+        return jax.vmap(lambda c, m, p, k: polish(c, m, p, k, rounds)
+                        )(Cs, Ms, ps, keys)
+    return jax.vmap(lambda c, m, p, k, nv: polish(c, m, p, k, rounds, nv)
+                    )(Cs, Ms, ps, keys, n_valid)
 
 
 @dataclass

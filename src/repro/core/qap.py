@@ -15,7 +15,7 @@ performance-critical paths have Pallas TPU kernels in ``repro.kernels``.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +32,78 @@ def objective(C: Array, M: Array, p: Array) -> Array:
         Mp = M[p][:, p]          # (N, N) gather rows then columns
         return jnp.sum(C * Mp)
     return jax.vmap(lambda q: objective(C, M, q))(p)
+
+
+def masked_weights(valid: Array, dtype=jnp.float32) -> Array:
+    """Pair weight matrix W[k, l] = valid[k] * valid[l] for masked objectives."""
+    w = valid.astype(dtype)
+    return w[:, None] * w[None, :]
+
+
+def masked_objective(C: Array, M: Array, p: Array, valid: Array) -> Array:
+    """Objective restricted to valid positions (instance batching support).
+
+    ``valid`` is a boolean (N,) mask over process slots; flow terms where
+    either endpoint is a padded slot are excluded, so padded nodes never
+    enter the objective.  Equivalent to ``objective(C * W, M, p)`` with
+    ``W = valid outer valid``; ``p`` may carry leading batch dimensions.
+    """
+    return objective(C * masked_weights(valid, C.dtype), M, p)
+
+
+def masked_swap_delta(C: Array, M: Array, p: Array, a: Array, b: Array,
+                      valid: Array) -> Array:
+    """Increment of ``masked_objective`` after swapping positions a and b.
+
+    Correctness/reporting path: the solver hot loops instead zero-pad ``C``
+    once up front (see ``annealing.run_psa_batch``) so the plain O(N)
+    ``swap_delta`` stays exact.
+    """
+    return swap_delta(C * masked_weights(valid, C.dtype), M, p, a, b)
+
+
+def valid_mask(n: int, n_valid: Array) -> Array:
+    """Boolean (n,) mask selecting the first ``n_valid`` slots (traceable)."""
+    return jnp.arange(n) < n_valid
+
+
+def mask_flows(C: Array, n_valid: Array) -> Array:
+    """Zero every flow touching a padded slot, making the plain objective /
+    delta of the padded instance equal the masked one."""
+    return C * masked_weights(valid_mask(C.shape[0], n_valid), C.dtype)
+
+
+def masked_random_permutation(key: Array, n: int, n_valid: Array) -> Array:
+    """Permutation of [0, n) that is uniformly random on the first ``n_valid``
+    slots and identity on the padded tail.
+
+    Real processes land only on real nodes and padded slots map to
+    themselves — the feasibility invariant the batched solvers maintain
+    (their moves never cross the valid/padded boundary).
+    """
+    idx = jnp.arange(n, dtype=jnp.int32)
+    x = jax.random.uniform(key, (n,))
+    sort_keys = jnp.where(idx < n_valid, x, 1.0 + idx.astype(jnp.float32))
+    return jnp.argsort(sort_keys).astype(jnp.int32)
+
+
+def masked_random_permutations(key: Array, batch: int, n: int,
+                               n_valid: Array) -> Array:
+    keys = jax.random.split(key, batch)
+    return jax.vmap(lambda k: masked_random_permutation(k, n, n_valid))(keys)
+
+
+def vmap_instances(impl, Cs: Array, Ms: Array, keys: Array,
+                   n_valid: Optional[Array]):
+    """Shared instance-axis vmap for the batched solver entry points.
+
+    ``impl(C, M, key, n_valid_or_None)`` is mapped over the leading axis of
+    Cs/Ms/keys (and n_valid when given), so entry b of the result equals the
+    per-instance call on slice b.
+    """
+    if n_valid is None:
+        return jax.vmap(lambda c, m, k: impl(c, m, k, None))(Cs, Ms, keys)
+    return jax.vmap(impl)(Cs, Ms, keys, n_valid)
 
 
 def swap_positions(p: Array, a: Array, b: Array) -> Array:
@@ -105,9 +177,24 @@ def pair_from_index(idx: Array, n: int) -> Tuple[Array, Array]:
     return a, b
 
 
-def random_swap_pairs(key: Array, k: int, n: int) -> Array:
-    """(k, 2) random distinct position pairs."""
-    num = (n * (n - 1)) // 2
-    idx = jax.random.randint(key, (k,), 0, num)
-    a, b = pair_from_index(idx, n)
+def random_swap_pairs(key: Array, k: int, n: int,
+                      n_valid: Optional[Array] = None) -> Array:
+    """(k, 2) random distinct position pairs.
+
+    With ``n_valid`` (a traceable scalar) pairs are drawn only among the
+    first ``n_valid`` positions, so batched solvers never move a real
+    process onto a padded node.  Order-0/1 instances have no meaningful
+    swap; they get the degenerate pair (0, 0), a no-op exchange.
+    """
+    if n_valid is None:
+        num = (n * (n - 1)) // 2
+        idx = jax.random.randint(key, (k,), 0, num)
+        a, b = pair_from_index(idx, n)
+    else:
+        nv = jnp.maximum(n_valid, 2)
+        num = (nv * (nv - 1)) // 2
+        idx = jax.random.randint(key, (k,), 0, num)
+        a, b = pair_from_index(idx, nv)
+        a = jnp.where(n_valid >= 2, a, 0)
+        b = jnp.where(n_valid >= 2, b, 0)
     return jnp.stack([a, b], axis=-1)

@@ -23,7 +23,7 @@ from repro.topology import hlocost                             # noqa: E402
 from repro.train import optimizer as opt_lib                  # noqa: E402
 from repro.train.step import (make_decode_step, make_prefill_step,  # noqa: E402
                               make_train_step)
-from repro.launch.mesh import make_production_mesh             # noqa: E402
+from repro.launch.mesh import activate_mesh, make_production_mesh  # noqa: E402
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                             "artifacts", "dryrun")
@@ -91,7 +91,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     model = Model(cfg)
     t0 = time.time()
 
-    with sh.use_rules(rules), jax.set_mesh(mesh):
+    with sh.use_rules(rules), activate_mesh(mesh):
         decls = model.decls()
         aparams = model.abstract()
         pspecs = sh.resolve_tree(model.specs(), rules)

@@ -19,7 +19,12 @@ from typing import Optional, Sequence, Tuple
 import numpy as np
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # newer jax exposes explicit axis types
+    from jax.sharding import AxisType
+except ImportError:  # older jax: positional mesh construction only
+    AxisType = None
 
 
 def production_shape(multi_pod: bool = False) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
@@ -30,14 +35,28 @@ def production_shape(multi_pod: bool = False) -> Tuple[Tuple[int, ...], Tuple[st
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape, axes = production_shape(multi_pod)
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_mesh_with_devices(devices: Sequence, shape: Tuple[int, ...],
                            axes: Tuple[str, ...]) -> Mesh:
     dev = np.asarray(devices, dtype=object).reshape(shape)
     return Mesh(dev, axes)
+
+
+def activate_mesh(mesh: Mesh):
+    """Context manager making ``mesh`` ambient, across jax versions:
+    ``jax.set_mesh`` (new) -> ``jax.sharding.use_mesh`` -> the Mesh object
+    itself (jax <= 0.4 context-manager protocol)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    use_mesh = getattr(jax.sharding, "use_mesh", None)
+    if use_mesh is not None:
+        return use_mesh(mesh)
+    return mesh
 
 
 def make_local_mesh(axes: Tuple[str, ...] = ("data", "model")) -> Mesh:

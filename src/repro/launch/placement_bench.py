@@ -25,7 +25,7 @@ from repro import configs                                   # noqa: E402
 from repro.core import annealing, genetic                    # noqa: E402
 from repro.launch import placement as pl                     # noqa: E402
 from repro.launch.dryrun import lower_cell                   # noqa: E402
-from repro.launch.mesh import make_production_mesh           # noqa: E402
+from repro.launch.mesh import activate_mesh, make_production_mesh  # noqa: E402
 from repro.models.api import Model, batch_partition_specs, input_specs  # noqa: E402
 from repro.models.config import shape_cell                   # noqa: E402
 from repro.parallel import sharding as sh                    # noqa: E402
@@ -48,7 +48,7 @@ def compile_cell(arch: str, shape_name: str, multi_pod: bool):
         rules = dict(rules)
         rules["batch"] = None
     model = Model(cfg)
-    with sh.use_rules(rules), jax.set_mesh(mesh):
+    with sh.use_rules(rules), activate_mesh(mesh):
         aparams = model.abstract()
         pspecs = sh.resolve_tree(model.specs(), rules)
         psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,

@@ -32,7 +32,7 @@ from repro.train import checkpoint as ckpt_lib
 from repro.train import data as data_lib
 from repro.train import optimizer as opt_lib
 from repro.train.step import make_train_step
-from .mesh import make_local_mesh
+from .mesh import activate_mesh, make_local_mesh
 
 
 def train(cfg: ModelConfig, *, steps: int, global_batch: int, seq_len: int,
@@ -53,7 +53,7 @@ def train(cfg: ModelConfig, *, steps: int, global_batch: int, seq_len: int,
         seed=seed, frontend=cfg.frontend,
         frontend_dim=FRONTEND_DIMS.get(cfg.frontend, 0))
 
-    with sh.use_rules(rules), jax.set_mesh(mesh):
+    with sh.use_rules(rules), activate_mesh(mesh):
         pspecs = sh.resolve_tree(model.specs(), rules)
         psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
                            is_leaf=lambda x: isinstance(x, P))

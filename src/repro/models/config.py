@@ -47,6 +47,11 @@ class ModelConfig:
     # shards; "scatter" combines on the expert side first, so the EP
     # reduction moves a k-times-smaller (tokens, d) tensor (SPerf, cell C)
     moe_combine: str = "gather"
+    # expert-buffer capacity factor; <= 0 means dropless (capacity = group
+    # size, no token overflow).  Capped capacity trades tokens for memory —
+    # fine for training, but dropped tokens make a token's output depend on
+    # the rest of the batch, so serving/smoke configs run dropless.
+    moe_capacity_factor: float = 1.25
 
     # --- SSM / RWKV -------------------------------------------------------
     mamba_d_state: int = 16

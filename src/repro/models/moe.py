@@ -7,9 +7,11 @@ einsums sharded over the 'ep' axis (expert parallelism), and combined back
 with the router weights.  The group->expert buffer resharding is where GSPMD
 emits the all-to-all; FLOPs scale with top_k, not num_experts.
 
-Capacity: cap = tokens_per_group * top_k / E * capacity_factor; overflow
-tokens are dropped (standard Switch behaviour) -- the combine step simply
-contributes zero for dropped tokens.
+Capacity: cap = tokens_per_group * top_k / E * cfg.moe_capacity_factor;
+overflow tokens are dropped (standard Switch behaviour) -- the combine step
+simply contributes zero for dropped tokens.  A factor <= 0 selects dropless
+mode (cap = group size): more memory, but a token's output no longer depends
+on the rest of the batch, which serving/smoke configs require.
 """
 from __future__ import annotations
 
@@ -24,9 +26,6 @@ from .config import ModelConfig
 from .param import PDecl
 
 Array = jax.Array
-
-CAPACITY_FACTOR = 1.25
-
 
 def moe_decls(cfg: ModelConfig) -> Dict[str, PDecl]:
     d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
@@ -60,7 +59,10 @@ def moe_apply(params, x: Array, cfg: ModelConfig, num_groups: int = 1) -> Array:
     w, ids = jax.lax.top_k(probs, k)                           # (g, tg, k)
     w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
 
-    cap = int(tg * k / e * CAPACITY_FACTOR) + 1
+    if cfg.moe_capacity_factor <= 0:
+        cap = tg          # dropless: worst case, every token picks one expert
+    else:
+        cap = min(int(tg * k / e * cfg.moe_capacity_factor) + 1, tg)
 
     def dispatch_group(xg, idg, wg_):
         # xg (tg, d); idg/wg_ (tg, k)

@@ -213,17 +213,23 @@ def _fusion_result_bytes(comp: Computation, default: float) -> float:
 
 def _dot_flops(inst: Instruction, comp: Computation) -> float:
     result_elems = float(np.prod(_first_shape_dims(inst.type_str) or [0]))
-    lhs_m = re.match(r"\s*%?([\w\.\-]+)", inst.args)
+    # Scheduled modules print operand types inline ("f32[8,64]{1,0} %lhs");
+    # match the first %name and fall back to the inline type if the symbol
+    # table misses it.
+    lhs_m = re.search(r"(?:(\w+\[[\d,]*\](?:\{[^}]*\})?)\s+)?%([\w\.\-]+)",
+                      inst.args) or re.match(r"\s*([\w\.\-]+)()", inst.args)
     contract = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.attrs)
     if not lhs_m or not contract or result_elems == 0:
         return 0.0
-    lhs_type = comp.symbols.get(lhs_m.group(1))
-    if lhs_type is None:
+    lhs_type = comp.symbols.get(lhs_m.group(2) or lhs_m.group(1)) or lhs_m.group(1)
+    if not lhs_type:
         return 0.0
     lhs_dims = _first_shape_dims(lhs_type)
     k = 1.0
     for d in contract.group(1).split(","):
         if d:
+            if int(d) >= len(lhs_dims):
+                return 0.0
             k *= lhs_dims[int(d)]
     return 2.0 * result_elems * k
 

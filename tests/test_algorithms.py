@@ -3,7 +3,10 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # optional test dependency
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import annealing, composite, genetic, instances, mapping, qap
 

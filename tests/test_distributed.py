@@ -54,7 +54,7 @@ SCRIPT = textwrap.dedent("""
     assert float(f) <= float(f4) * 1.25 + 1e-6
 
     # Ring exchange correctness: ppermute moves data to the next island.
-    from jax import shard_map
+    from repro.core.distributed import shard_map   # version-compat wrapper
     from jax.sharding import PartitionSpec as P
     def ring_fn(x):
         return jax.lax.ppermute(x, "proc", [(i, (i + 1) % 8) for i in range(8)])

@@ -1,0 +1,256 @@
+"""Batched mapping engine: batch==sequential equality, cache, padding."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import annealing, composite, genetic, qap
+from repro.serve.mapper import MapRequest, MappingEngine
+
+SA_SMALL = annealing.SAConfig(max_neighbors=10, iters_per_exchange=8,
+                              num_exchanges=4, solvers=4)
+GA_SMALL = genetic.GAConfig(generations=15, pop_size=12)
+
+
+def _instance(n, seed):
+    rng = np.random.default_rng(seed)
+    C = rng.integers(0, 10, (n, n)).astype(np.float32)
+    M = rng.integers(1, 10, (n, n)).astype(np.float32)
+    C, M = C + C.T, M + M.T
+    np.fill_diagonal(C, 0)
+    np.fill_diagonal(M, 0)
+    return C, M
+
+
+def _padded_batch(sizes, bucket, seed0=0):
+    B = len(sizes)
+    Cs = np.zeros((B, bucket, bucket), np.float32)
+    Ms = np.zeros((B, bucket, bucket), np.float32)
+    for i, n in enumerate(sizes):
+        C, M = _instance(n, seed0 + i)
+        Cs[i, :n, :n] = C
+        Ms[i, :n, :n] = M
+    keys = jnp.stack([jax.random.PRNGKey(10 + i) for i in range(B)])
+    return (jnp.asarray(Cs), jnp.asarray(Ms),
+            jnp.asarray(sizes, jnp.int32), keys)
+
+
+# -------------------------------------------------- (a) batch == sequential
+def test_psa_batch_matches_per_instance_bitwise():
+    """Batched solve of B padded instances must equal per-instance run_psa
+    under the same keys — objectives bitwise, permutations elementwise."""
+    sizes = [8, 12, 16, 16]
+    Cs, Ms, nvs, keys = _padded_batch(sizes, bucket=16)
+    bp, bf, bhist = annealing.run_psa_batch(Cs, Ms, keys, SA_SMALL,
+                                            num_processes=2, n_valid=nvs)
+    for i, n in enumerate(sizes):
+        p, f, hist = annealing.run_psa(Cs[i], Ms[i], keys[i], SA_SMALL,
+                                       num_processes=2, n_valid=nvs[i])
+        assert np.asarray(bf)[i].tobytes() == np.asarray(f).tobytes()
+        np.testing.assert_array_equal(np.asarray(bp)[i], np.asarray(p))
+        np.testing.assert_array_equal(np.asarray(bhist)[i], np.asarray(hist))
+
+
+def test_pga_and_pca_batch_match_per_instance():
+    sizes = [10, 14]
+    Cs, Ms, nvs, keys = _padded_batch(sizes, bucket=16, seed0=5)
+    bp, bf, _ = genetic.run_pga_batch(Cs, Ms, keys, GA_SMALL,
+                                      num_processes=2, n_valid=nvs)
+    for i, n in enumerate(sizes):
+        p, f, _ = genetic.run_pga(Cs[i], Ms[i], keys[i], GA_SMALL,
+                                  num_processes=2, n_valid=nvs[i])
+        assert np.asarray(bf)[i].tobytes() == np.asarray(f).tobytes()
+        np.testing.assert_array_equal(np.asarray(bp)[i], np.asarray(p))
+
+    cfg = composite.CompositeConfig(
+        sa=annealing.SAConfig(max_neighbors=6, iters_per_exchange=4,
+                              num_exchanges=2, solvers=0),
+        ga=GA_SMALL)
+    bp, bf, _ = composite.run_pca_batch(Cs, Ms, keys, cfg,
+                                        num_processes=2, n_valid=nvs)
+    for i, n in enumerate(sizes):
+        p, f, _ = composite.run_pca(Cs[i], Ms[i], keys[i], cfg,
+                                    num_processes=2, n_valid=nvs[i])
+        assert np.asarray(bf)[i].tobytes() == np.asarray(f).tobytes()
+        np.testing.assert_array_equal(np.asarray(bp)[i], np.asarray(p))
+
+
+def test_batched_solutions_feasible_and_costs_exact():
+    """The valid prefix is a permutation of the real nodes, the padded tail
+    is untouched, and the reported objective equals the unpadded cost."""
+    sizes = [6, 9, 12]
+    bucket = 16
+    Cs, Ms, nvs, keys = _padded_batch(sizes, bucket, seed0=20)
+    bp, bf, _ = annealing.run_psa_batch(Cs, Ms, keys, SA_SMALL,
+                                        num_processes=2, n_valid=nvs)
+    for i, n in enumerate(sizes):
+        perm = np.asarray(bp)[i]
+        assert sorted(perm[:n].tolist()) == list(range(n))
+        np.testing.assert_array_equal(perm[n:], np.arange(n, bucket))
+        f_unpadded = float(qap.objective(Cs[i][:n, :n], Ms[i][:n, :n],
+                                         jnp.asarray(perm[:n])))
+        assert f_unpadded == pytest.approx(float(np.asarray(bf)[i]), rel=1e-6)
+
+
+# ----------------------------------------------------------- (b) LRU cache
+def test_cache_hit_skips_solver_and_returns_identical_perm():
+    eng = MappingEngine(num_processes=2, sa_cfg=SA_SMALL)
+    C, M = _instance(12, 3)
+    r1 = eng.map_one(C, M, "psa", job_id="first", seed=0)
+    calls_after_first = eng.stats.solver_calls
+    assert not r1.cached and calls_after_first == 1
+
+    # Same instance, different seed: served from cache, no solver invoked.
+    r2 = eng.map_one(C, M, "psa", job_id="second", seed=41)
+    assert r2.cached
+    assert eng.stats.solver_calls == calls_after_first
+    assert eng.stats.cache_hits == 1
+    np.testing.assert_array_equal(r1.perm, r2.perm)
+    assert r1.objective == r2.objective
+
+
+def test_cache_eviction_lru():
+    eng = MappingEngine(num_processes=2, sa_cfg=SA_SMALL, cache_size=2)
+    insts = [_instance(8, s) for s in range(3)]
+    for i, (C, M) in enumerate(insts):
+        eng.map_one(C, M, "psa", job_id=f"j{i}")
+    # Instance 0 was evicted (capacity 2); re-requesting it solves again.
+    calls = eng.stats.solver_calls
+    r = eng.map_one(*insts[0], "psa", job_id="re0")
+    assert not r.cached and eng.stats.solver_calls == calls + 1
+
+
+def test_duplicate_requests_in_one_flush_solved_once():
+    eng = MappingEngine(num_processes=2, sa_cfg=SA_SMALL)
+    C, M = _instance(10, 7)
+    eng.submit(MapRequest(job_id="a", C=C, M=M, seed=1))
+    eng.submit(MapRequest(job_id="b", C=C, M=M, seed=2))
+    out = eng.flush()
+    assert eng.stats.solver_calls == 1
+    np.testing.assert_array_equal(out["a"].perm, out["b"].perm)
+
+
+# ---------------------------------------------------- (c) padding invariance
+def test_bucket_padding_preserves_feasible_mapping_cost():
+    """Embedding any feasible mapping into a padded bucket never changes
+    its cost: masked objective of the padded instance == plain objective
+    of the original."""
+    rng = np.random.default_rng(11)
+    for n, bucket in [(5, 8), (12, 32), (30, 32)]:
+        C, M = _instance(n, n)
+        Cp = np.zeros((bucket, bucket), np.float32)
+        Mp = rng.uniform(0, 50, (bucket, bucket)).astype(np.float32)
+        Cp[:n, :n] = C
+        Mp[:n, :n] = M                    # pad region of M is arbitrary junk
+        for trial in range(5):
+            p = rng.permutation(n).astype(np.int32)
+            p_embedded = np.concatenate([p, np.arange(n, bucket, dtype=np.int32)])
+            valid = jnp.arange(bucket) < n
+            f_masked = float(qap.masked_objective(
+                jnp.asarray(Cp), jnp.asarray(Mp), jnp.asarray(p_embedded), valid))
+            f_plain = float(qap.objective(jnp.asarray(C), jnp.asarray(M),
+                                          jnp.asarray(p)))
+            assert f_masked == pytest.approx(f_plain, rel=1e-6)
+
+
+def test_masked_swap_delta_matches_masked_recompute():
+    rng = np.random.default_rng(4)
+    n, bucket = 9, 16
+    C, M = _instance(n, 2)
+    Cp = np.zeros((bucket, bucket), np.float32)
+    Mp = rng.uniform(0, 20, (bucket, bucket)).astype(np.float32)
+    Cp[:n, :n] = C
+    Mp[:n, :n] = M
+    valid = jnp.arange(bucket) < n
+    p = jnp.asarray(np.concatenate([rng.permutation(n),
+                                    np.arange(n, bucket)]).astype(np.int32))
+    for a, b in [(0, 5), (2, 8), (3, 4)]:
+        d = float(qap.masked_swap_delta(jnp.asarray(Cp), jnp.asarray(Mp),
+                                        p, a, b, valid))
+        f0 = float(qap.masked_objective(jnp.asarray(Cp), jnp.asarray(Mp), p, valid))
+        f1 = float(qap.masked_objective(jnp.asarray(Cp), jnp.asarray(Mp),
+                                        qap.swap_positions(p, a, b), valid))
+        assert d == pytest.approx(f1 - f0, abs=1e-3)
+
+
+# ------------------------------------------------------------- engine misc
+def test_engine_buckets_mixed_sizes():
+    eng = MappingEngine(buckets=(16, 32), num_processes=2, sa_cfg=SA_SMALL)
+    for i, n in enumerate([4, 10, 20, 30]):
+        C, M = _instance(n, 30 + i)
+        eng.submit(MapRequest(job_id=f"j{i}", C=C, M=M, seed=i))
+    out = eng.flush()
+    assert out["j0"].bucket == 16 and out["j1"].bucket == 16
+    assert out["j2"].bucket == 32 and out["j3"].bucket == 32
+    assert eng.stats.solver_batches == 2     # one dispatch per bucket
+    for i, n in enumerate([4, 10, 20, 30]):
+        r = out[f"j{i}"]
+        assert r.n == n and len(r.perm) == n
+        assert sorted(r.perm.tolist()) == list(range(n))
+        assert r.objective <= r.baseline + 1e-6
+
+
+def test_engine_oversize_falls_back_to_exact():
+    eng = MappingEngine(buckets=(8,), num_processes=2, sa_cfg=SA_SMALL)
+    C, M = _instance(12, 9)
+    r = eng.map_one(C, M, "psa")
+    assert r.bucket is None
+    assert sorted(r.perm.tolist()) == list(range(12))
+    assert r.objective <= r.baseline + 1e-6
+
+
+def test_engine_never_worse_than_identity():
+    # An already-optimal layout must come back unharmed.
+    eng = MappingEngine(num_processes=2, sa_cfg=SA_SMALL)
+    n = 2
+    C = np.zeros((n, n), np.float32)
+    C[0, 1] = C[1, 0] = 5.0
+    M = np.ones((n, n), np.float32)
+    np.fill_diagonal(M, 0)
+    r = eng.map_one(C, M, "psa")
+    assert r.objective == pytest.approx(r.baseline)
+
+
+def test_cached_perm_immune_to_caller_mutation():
+    eng = MappingEngine(num_processes=2, sa_cfg=SA_SMALL)
+    C, M = _instance(10, 13)
+    r1 = eng.map_one(C, M, "psa", job_id="a")
+    r1.perm[:] = 0                       # caller scribbles over its copy
+    r2 = eng.map_one(C, M, "psa", job_id="b")
+    assert r2.cached
+    assert sorted(r2.perm.tolist()) == list(range(10))
+
+
+def test_batch_solvers_handle_order_one_instance():
+    # An order-1 instance padded into a batch must come back feasible.
+    Cs, Ms, nvs, keys = _padded_batch([1, 8], bucket=8, seed0=40)
+    bp, _, _ = annealing.run_psa_batch(Cs, Ms, keys, SA_SMALL,
+                                       num_processes=2, n_valid=nvs)
+    perm = np.asarray(bp)[0]
+    assert perm[0] == 0 and (perm[1:] == np.arange(1, 8)).all()
+
+
+def test_solve_placements_batched_api():
+    from repro.launch import placement as pl
+    insts = []
+    for n, s in [(6, 0), (10, 1), (6, 0)]:     # includes a duplicate shape
+        insts.append(_instance(n, s))
+    results = pl.solve_placements(insts, "psa")
+    assert len(results) == 3
+    for (C, M), res in zip(insts, results):
+        n = C.shape[0]
+        assert sorted(res.perm.tolist()) == list(range(n))
+        assert res.cost_after <= res.cost_before + 1e-6
+    # per-instance path agrees with the batched path on the same instance
+    single = pl.solve_placement(*insts[1], "psa")
+    assert single.cost_after == results[1].cost_after
+    np.testing.assert_array_equal(single.perm, results[1].perm)
+
+
+def test_engine_rejects_bad_requests():
+    eng = MappingEngine()
+    C, M = _instance(8, 0)
+    with pytest.raises(ValueError):
+        eng.submit(MapRequest(job_id="x", C=C, M=M, algorithm="nope"))
+    with pytest.raises(ValueError):
+        eng.submit(MapRequest(job_id="x", C=C[:4], M=M))

@@ -119,7 +119,10 @@ def test_placement_identity_when_already_optimal():
 
 
 # ------------------------------------------------------- property invariants
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # optional test dependency
+    from _hypothesis_compat import given, settings, st
 
 
 @settings(max_examples=20, deadline=None)
