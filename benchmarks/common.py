@@ -8,6 +8,7 @@ Set REPRO_BENCH_SCALE=1.0 on a real machine for full budgets.
 """
 from __future__ import annotations
 
+import json
 import os
 import time
 from typing import Callable, Dict, List, Tuple
@@ -61,3 +62,24 @@ def sa_budget(num_exchanges: int = 50, ipe: int = 100, neighbors: int = 50,
 
 def ga_budget(generations: int = 200, pop: int = 0) -> genetic.GAConfig:
     return genetic.GAConfig(generations=scaled(generations, 5), pop_size=pop)
+
+
+def write_bench_json(path: str, section: str, payload: Dict) -> None:
+    """Merge one benchmark's results into a machine-readable JSON file.
+
+    Each benchmark owns a top-level ``section`` key; existing sections
+    written by other benchmarks are preserved, so CI can run several
+    benchmarks and upload one artifact (``BENCH_mapper.json``) whose
+    history tracks the perf trajectory.
+    """
+    data: Dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            data = {}                     # corrupt/partial file: start over
+    data[section] = payload
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")

@@ -7,6 +7,10 @@ the (processes, solvers) chain grid) beats solving the same instances one
 ``run_psa`` call at a time.  Both paths run the identical SA budget, so
 the comparison is pure dispatch/batching efficiency.
 
+Results are also merged into a machine-readable JSON file (``--json``,
+default ``BENCH_mapper.json``) under the ``"throughput"`` key; CI uploads
+it as an artifact so the perf trajectory accumulates run over run.
+
 Usage:
     PYTHONPATH=src python benchmarks/mapper_throughput.py
     PYTHONPATH=src python benchmarks/mapper_throughput.py --dry-run   # CI smoke
@@ -22,6 +26,11 @@ import jax.numpy as jnp
 
 from repro.core import annealing
 from repro.serve.mapper import MapRequest, MappingEngine
+
+try:                                     # package form (benchmarks.run)
+    from . import common
+except ImportError:                      # direct script invocation
+    import common
 
 
 def random_instance(n: int, seed: int):
@@ -113,6 +122,8 @@ def main():
     ap.add_argument("--num-exchanges", type=int, default=3)
     ap.add_argument("--solvers", type=int, default=4)
     ap.add_argument("--num-processes", type=int, default=2)
+    ap.add_argument("--json", default="BENCH_mapper.json",
+                    help="merge results into this JSON file ('' disables)")
     ap.add_argument("--dry-run", action="store_true",
                     help="tiny shapes, one repeat: CI smoke test")
     args = ap.parse_args()
@@ -141,6 +152,23 @@ def main():
     print(f"batched solve   : {t_batch:.4f} s  ({B / t_batch:8.1f} mappings/s)")
     print(f"engine flush    : {t_engine:.4f} s  ({B / t_engine:8.1f} mappings/s)")
     print(f"speedup (batched vs sequential): {t_seq / t_batch:.2f}x")
+    if args.json:
+        common.write_bench_json(args.json, "throughput", {
+            "config": {"batch": B, "n": args.n, "bucket": args.bucket,
+                       "neighbors": cfg.max_neighbors,
+                       "iters_per_exchange": cfg.iters_per_exchange,
+                       "num_exchanges": cfg.num_exchanges,
+                       "solvers": cfg.solvers,
+                       "num_processes": args.num_processes,
+                       "repeats": args.repeats, "dry_run": args.dry_run},
+            "sequential_s": t_seq, "batched_s": t_batch,
+            "engine_s": t_engine,
+            "sequential_mappings_per_s": B / t_seq,
+            "batched_mappings_per_s": B / t_batch,
+            "engine_mappings_per_s": B / t_engine,
+            "speedup_batched_vs_sequential": t_seq / t_batch,
+        })
+        print(f"wrote {args.json} [throughput]")
     if args.dry_run:
         print("dry-run OK")
 

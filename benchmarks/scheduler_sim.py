@@ -1,0 +1,297 @@
+"""Job-stream scheduler simulation: allocate -> map -> run -> release.
+
+End-to-end measurement of the async mapping service inside the loop the
+paper targets (an Uberun-style resource manager): jobs arrive as a Poisson
+stream with mixed sizes, each job is allocated a free-node subset of a
+live :class:`~repro.serve.cluster.ClusterState`, its induced system
+subgraph is mapped by the :class:`~repro.serve.mapper.MappingEngine`, the
+job "runs" for its service time, and its nodes are released for the next
+arrival.
+
+Two mapping paths over the *same* job stream:
+
+  * ``async``  -- futures + background flusher: the scheduler keeps
+    admitting jobs while mappings are in flight, so same-bucket arrivals
+    coalesce into batched solves.
+  * ``sequential`` -- the seed path: every job blocks on its own
+    submit+flush before the next job is admitted.
+
+Reported per path: mapped-jobs/sec and p50/p99 mapping latency (submit ->
+future resolution).  Results are merged into ``BENCH_mapper.json`` under
+the ``"scheduler_sim"`` key (CI artifact; see ``--json``).
+
+Usage:
+    PYTHONPATH=src python benchmarks/scheduler_sim.py             # 50 jobs
+    PYTHONPATH=src python benchmarks/scheduler_sim.py --dry-run   # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import heapq
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import annealing, instances
+from repro.serve.cluster import ClusterState
+from repro.serve.mapper import MapRequest, MappingEngine
+
+try:                                     # package form (benchmarks.run)
+    from . import common
+except ImportError:                      # direct script invocation
+    import common
+
+
+@dataclass(frozen=True)
+class Job:
+    job_id: str
+    size: int
+    C: np.ndarray              # (size, size) flow matrix
+    arrival_s: float           # offset from stream start
+    run_s: float               # service time once mapped
+
+
+def make_stream(num_jobs: int, sizes: Tuple[int, ...], weights: Tuple[float, ...],
+                arrival_rate: float, run_s: float, seed: int) -> List[Job]:
+    """Poisson arrivals, mixed job sizes, ring + random sparse flows."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    jobs = []
+    for i in range(num_jobs):
+        t += float(rng.exponential(1.0 / arrival_rate))
+        n = int(rng.choice(sizes, p=np.asarray(weights) / sum(weights)))
+        C = np.zeros((n, n), np.float32)
+        for k in range(n):                         # heavy ring traffic
+            C[k, (k + 1) % n] = C[(k + 1) % n, k] = 100.0
+        extra = rng.random((n, n)) < 0.1           # sparse background flows
+        C += np.triu(extra * rng.integers(1, 10, (n, n)), 1).astype(np.float32)
+        C = np.triu(C, 1) + np.triu(C, 1).T
+        jobs.append(Job(job_id=f"job{i}", size=n, C=C, arrival_s=t,
+                        run_s=float(run_s * (0.5 + rng.random()))))
+    return jobs
+
+
+def _drain_completions(cluster: ClusterState, running: list,
+                       now: float) -> None:
+    while running and running[0][0] <= now:
+        _, job_id = heapq.heappop(running)
+        cluster.release(job_id)
+
+
+def run_stream(jobs: List[Job], cluster: ClusterState, engine: MappingEngine,
+               algorithm: str, deadline_ms: Optional[float],
+               use_flusher: bool) -> Dict[str, float]:
+    """Drive one full stream through allocate -> map -> run -> release."""
+    running: list = []               # heap of (release_monotonic, job_id)
+    in_flight: list = []             # (job, alloc, future, t_submit)
+    latencies: Dict[str, float] = {}
+    improvements: List[float] = []
+
+    def settle(entry, block: bool) -> bool:
+        job, alloc, fut, t_sub = entry
+        if not block and not fut.done():
+            return False
+        resp = fut.result(timeout=600)
+        resolved = fut.resolved_at or time.monotonic()
+        latencies[job.job_id] = resolved - t_sub
+        improvements.append(resp.improvement)
+        # the job starts running when its mapping resolved, not when this
+        # loop happened to poll -- otherwise the async path holds nodes an
+        # extra inter-arrival gap and its throughput is underreported
+        heapq.heappush(running, (resolved + job.run_s, job.job_id))
+        return True
+
+    t0 = time.monotonic()
+    for job in jobs:
+        # pace the Poisson stream in wall time
+        lag = t0 + job.arrival_s - time.monotonic()
+        if lag > 0:
+            time.sleep(lag)
+        # admission: free nodes may be held by running jobs (wait for the
+        # next completion) or by jobs whose mapping is still in flight
+        # (wait for the future to resolve, then for the run to finish)
+        while True:
+            in_flight = [e for e in in_flight if not settle(e, block=False)]
+            _drain_completions(cluster, running, time.monotonic())
+            alloc = cluster.allocate(job.job_id, job.size)
+            if alloc is not None:
+                break
+            if not running and not in_flight:
+                raise RuntimeError(
+                    f"{job.job_id} (size {job.size}) can never fit")
+            if running:
+                wait = max(running[0][0] - time.monotonic(), 0.0)
+                time.sleep(min(wait + 1e-4, 0.02))
+            else:
+                time.sleep(0.002)
+        t_sub = time.monotonic()
+        fut = engine.submit(MapRequest(
+            job_id=job.job_id, C=job.C, M=alloc.M_sub, algorithm=algorithm,
+            seed=int(job.job_id[3:]), deadline_ms=deadline_ms))
+        entry = (job, alloc, fut, t_sub)
+        if use_flusher:
+            in_flight.append(entry)
+        else:
+            engine.flush()               # the seed path: block per job
+            settle(entry, block=True)
+    for entry in in_flight:
+        settle(entry, block=True)
+    wall = time.monotonic() - t0
+    while running:                       # let the last jobs finish
+        _drain_completions(cluster, running, running[0][0])
+
+    lat_ms = np.array(sorted(latencies.values())) * 1e3
+    return {
+        "jobs": len(jobs),
+        "wall_s": wall,
+        "mapped_jobs_per_s": len(jobs) / wall,
+        "map_latency_p50_ms": float(np.percentile(lat_ms, 50)),
+        "map_latency_p99_ms": float(np.percentile(lat_ms, 99)),
+        "mean_improvement": float(np.mean(improvements)),
+        "cache_hits": engine.stats.cache_hits,
+        "warm_starts": engine.stats.warm_starts,
+        "solver_batches": engine.stats.solver_batches,
+        "deadline_flushes": engine.stats.deadline_flushes,
+        "full_bucket_flushes": engine.stats.full_bucket_flushes,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--jobs", type=int, default=50)
+    ap.add_argument("--grid", type=int, nargs=3, default=(4, 4, 8),
+                    metavar=("X", "Y", "Z"), help="cluster node grid")
+    ap.add_argument("--sizes", type=int, nargs="+", default=(8, 16, 24, 32))
+    ap.add_argument("--weights", type=float, nargs="+",
+                    default=(4.0, 3.0, 2.0, 1.0))
+    ap.add_argument("--arrival-rate", type=float, default=40.0,
+                    help="Poisson arrivals per second")
+    ap.add_argument("--run-s", type=float, default=0.1,
+                    help="mean job service time after mapping")
+    ap.add_argument("--algorithm", default="psa")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline for the engine's policy")
+    ap.add_argument("--flush-deadline-ms", type=float, default=30.0)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--neighbors", type=int, default=24)
+    ap.add_argument("--iters-per-exchange", type=int, default=12)
+    ap.add_argument("--num-exchanges", type=int, default=6)
+    ap.add_argument("--solvers", type=int, default=8)
+    ap.add_argument("--polish-rounds", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default="BENCH_mapper.json",
+                    help="merge results into this JSON file ('' disables)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny stream + cluster: CI smoke test")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        # 16 nodes hosting a few jobs at once (single size bucket), so
+        # same-bucket arrivals actually coalesce into batched dispatches
+        args.jobs, args.grid = 8, (2, 2, 4)
+        args.sizes, args.weights = (6, 8), (3.0, 1.0)
+        args.arrival_rate, args.run_s = 200.0, 0.02
+        args.neighbors, args.iters_per_exchange = 4, 2
+        args.num_exchanges, args.solvers, args.polish_rounds = 2, 2, 4
+        args.max_batch = 4
+    if len(args.sizes) != len(args.weights):
+        ap.error("--sizes and --weights must have the same length")
+
+    M = instances.grid_distance_matrix(tuple(args.grid))
+    if max(args.sizes) > M.shape[0]:
+        ap.error(f"largest job ({max(args.sizes)}) exceeds cluster "
+                 f"({M.shape[0]} nodes)")
+    sa_cfg = annealing.SAConfig(max_neighbors=args.neighbors,
+                                iters_per_exchange=args.iters_per_exchange,
+                                num_exchanges=args.num_exchanges,
+                                solvers=args.solvers)
+    jobs = make_stream(args.jobs, tuple(args.sizes), tuple(args.weights),
+                       args.arrival_rate, args.run_s, args.seed)
+    buckets = tuple(sorted(set(int(2 ** np.ceil(np.log2(s)))
+                               for s in args.sizes)))
+
+    def fresh_engine():
+        return MappingEngine(buckets=buckets, num_processes=2,
+                             sa_cfg=sa_cfg, polish_rounds=args.polish_rounds,
+                             flush_deadline_ms=args.flush_deadline_ms,
+                             max_batch=args.max_batch)
+
+    print(f"{args.jobs} jobs over {M.shape[0]} nodes "
+          f"({args.grid[0]}x{args.grid[1]}x{args.grid[2]}), sizes "
+          f"{tuple(args.sizes)}, {args.arrival_rate}/s arrivals")
+
+    # Untimed warmup: with pad_batches the engine only ever dispatches
+    # power-of-two wave sizes up to max_batch, so pre-compiling
+    # {1, 2, ..., max_batch} x {cold, warm} per bucket covers every
+    # program both timed paths will run -- neither path is charged jit
+    # compile time.
+    def _rand_sym(b: int, seed: int) -> np.ndarray:
+        rngw = np.random.default_rng(seed)
+        A = rngw.integers(1, 5, (b, b)).astype(np.float32)
+        A = A + A.T
+        np.fill_diagonal(A, 0)
+        return A
+
+    warm = fresh_engine()
+    wave = 1
+    max_wave = 1 << (args.max_batch - 1).bit_length()
+    while wave <= max_wave:
+        for b in buckets:
+            Mw = _rand_sym(b, seed=1000 + 7 * b + wave)
+            for phase in (0, 1):          # cold trace, then warm trace
+                for j in range(wave):
+                    warm.submit(MapRequest(
+                        job_id=f"w{b}-{wave}-{phase}-{j}",
+                        C=_rand_sym(b, 2000 + 13 * b + 31 * wave
+                                    + 7 * phase + j),
+                        M=Mw, algorithm=args.algorithm,
+                        deadline_ms=args.deadline_ms))
+                warm.flush()
+        wave *= 2
+    del warm
+
+    results = {}
+    for name, use_flusher in (("sequential", False), ("async", True)):
+        eng = fresh_engine()
+        cluster = ClusterState(M)
+        if use_flusher:
+            eng.start()
+        try:
+            results[name] = run_stream(jobs, cluster, eng, args.algorithm,
+                                       args.deadline_ms, use_flusher)
+        finally:
+            if use_flusher:
+                eng.stop()
+        r = results[name]
+        print(f"{name:>10}: {r['mapped_jobs_per_s']:7.2f} mapped-jobs/s, "
+              f"p50 {r['map_latency_p50_ms']:7.1f} ms, "
+              f"p99 {r['map_latency_p99_ms']:7.1f} ms, "
+              f"batches {r['solver_batches']}, warm {r['warm_starts']}")
+
+    speedup = (results["async"]["mapped_jobs_per_s"]
+               / results["sequential"]["mapped_jobs_per_s"])
+    print(f"async vs sequential throughput: {speedup:.2f}x")
+
+    if args.json:
+        common.write_bench_json(args.json, "scheduler_sim", {
+            "config": {"jobs": args.jobs, "grid": list(args.grid),
+                       "sizes": list(args.sizes),
+                       "arrival_rate": args.arrival_rate,
+                       "run_s": args.run_s, "algorithm": args.algorithm,
+                       "deadline_ms": args.deadline_ms,
+                       "flush_deadline_ms": args.flush_deadline_ms,
+                       "max_batch": args.max_batch,
+                       "dry_run": args.dry_run},
+            "sequential": results["sequential"],
+            "async": results["async"],
+            "throughput_speedup": speedup,
+        })
+        print(f"wrote {args.json} [scheduler_sim]")
+    if args.dry_run:
+        print("dry-run OK")
+
+
+if __name__ == "__main__":
+    main()

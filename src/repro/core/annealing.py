@@ -163,15 +163,45 @@ def make_beta(C: Array, M: Array, key: Array, cfg: SAConfig,
     return (t0 - cfg.t_final) / (n_cool * t0 * cfg.t_final)
 
 
+def seed_chain0(C: Array, M: Array, init, chain_key: Array, cfg,
+                num_processes: int, init_perm: Array, init_chain_fn):
+    """Seed chain 0 of every process from a warm-start permutation.
+
+    Generalizes the ``seed_with="identity"`` path: ``init_perm`` is any
+    feasible permutation (e.g. a cached near-miss solution).  A negative
+    first entry is the "no warm start" sentinel — the chain-0 states
+    already in ``init`` are kept (random, or identity when the config's
+    own seeding already ran), so a cold instance inside a warm batch
+    solves bitwise-identically to a cold-only batch.
+    """
+    n = C.shape[0]
+    use = init_perm[0] >= 0
+    perm = jnp.where(use, init_perm.astype(jnp.int32),
+                     jnp.arange(n, dtype=jnp.int32))
+    seeded = init_chain_fn(C, M, chain_key, cfg, identity=perm)
+    return jax.tree.map(
+        lambda all_, one: all_.at[:, 0].set(jnp.where(
+            use, jnp.broadcast_to(one, (num_processes,) + one.shape),
+            all_[:, 0])),
+        init, seeded)
+
+
 def _psa_impl(C: Array, M: Array, key: Array, cfg: SAConfig,
               num_processes: int, exchange: bool,
-              n_valid: Optional[Array]) -> Tuple[Array, Array, Array]:
+              n_valid: Optional[Array],
+              init_perm: Optional[Array] = None
+              ) -> Tuple[Array, Array, Array]:
     """Shared PSA body for the single-instance and instance-batched paths.
 
     With ``n_valid`` the instance is treated as padded: flows touching
     padded slots are zeroed once up front, start permutations and candidate
     swaps stay inside the valid prefix, so the plain objective/delta remain
     exact and the returned permutation maps real processes to real nodes.
+
+    With ``init_perm`` (warm start) chain 0 of every process starts from the
+    given permutation instead of a random one, so ``best_f`` can never end
+    above ``F(init_perm)`` — warm-started solves are no worse than their
+    seed on any budget (see ``seed_chain0``).
     """
     if n_valid is not None:
         C = qap.mask_flows(C, n_valid)
@@ -191,6 +221,11 @@ def _psa_impl(C: Array, M: Array, key: Array, cfg: SAConfig,
             lambda all_, one: all_.at[:, 0].set(
                 jnp.broadcast_to(one, (num_processes,) + one.shape)),
             init, ident)
+    if init_perm is not None:
+        # layered on top of the config's own seeding: a -1 sentinel row
+        # keeps the chain-0 state the config produced (random or identity)
+        init = seed_chain0(C, M, init, chain_keys[0, 0], cfg,
+                           num_processes, init_perm, init_chain)
 
     def round_step(state, key):
         keys = jax.random.split(key, num_processes * cfg.solvers) \
@@ -218,29 +253,36 @@ def _psa_impl(C: Array, M: Array, key: Array, cfg: SAConfig,
 @functools.partial(jax.jit, static_argnames=("cfg", "num_processes", "exchange"))
 def run_psa(C: Array, M: Array, key: Array, cfg: SAConfig,
             num_processes: int = 4, exchange: bool = True,
-            n_valid: Optional[Array] = None) -> Tuple[Array, Array, Array]:
+            n_valid: Optional[Array] = None,
+            init_perm: Optional[Array] = None) -> Tuple[Array, Array, Array]:
     """Parallel SA on a (num_processes, solvers) chain grid (single host).
 
     Returns (best_perm, best_f, history) where history[r] is the global best
     objective after exchange round r.  ``n_valid`` restricts the search to a
-    padded instance's valid prefix (see ``_psa_impl``).
+    padded instance's valid prefix (see ``_psa_impl``); ``init_perm``
+    warm-starts chain 0 of every process from a given permutation.
     """
-    return _psa_impl(C, M, key, cfg, num_processes, exchange, n_valid)
+    return _psa_impl(C, M, key, cfg, num_processes, exchange, n_valid,
+                     init_perm)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "num_processes", "exchange"))
 def run_psa_batch(Cs: Array, Ms: Array, keys: Array, cfg: SAConfig,
                   num_processes: int = 4, exchange: bool = True,
-                  n_valid: Optional[Array] = None
+                  n_valid: Optional[Array] = None,
+                  init_perm: Optional[Array] = None
                   ) -> Tuple[Array, Array, Array]:
     """Instance-batched PSA: a leading vmap axis over independent instances.
 
     Cs, Ms: (B, N, N) padded instances; keys: (B, 2) one PRNG key per
-    instance; n_valid: optional (B,) valid orders (None = all full size).
-    Returns (best_perms (B, N), best_fs (B,), history (B, num_exchanges)),
-    where entry b equals ``run_psa(Cs[b], Ms[b], keys[b], ..., n_valid[b])``
-    — the batch axis changes throughput, not results.
+    instance; n_valid: optional (B,) valid orders (None = all full size);
+    init_perm: optional (B, N) warm-start permutations (a negative first
+    entry leaves that instance cold).  Returns (best_perms (B, N), best_fs
+    (B,), history (B, num_exchanges)), where entry b equals
+    ``run_psa(Cs[b], Ms[b], keys[b], ..., n_valid[b], init_perm[b])`` — the
+    batch axis changes throughput, not results.
     """
     return qap.vmap_instances(
-        lambda c, m, k, nv: _psa_impl(c, m, k, cfg, num_processes, exchange,
-                                      nv), Cs, Ms, keys, n_valid)
+        lambda c, m, k, nv, ip: _psa_impl(c, m, k, cfg, num_processes,
+                                          exchange, nv, ip),
+        Cs, Ms, keys, n_valid, init_perm)

@@ -33,8 +33,14 @@ def _resolve_solvers(cfg: CompositeConfig, n: int) -> int:
 
 def seed_population(C: Array, M: Array, key: Array, cfg: CompositeConfig,
                     num_processes: int,
-                    n_valid: Optional[Array] = None) -> genetic.GAState:
-    """Stage 1: per-process SA chains, NO exchanges, one chain per slot."""
+                    n_valid: Optional[Array] = None,
+                    init_perm: Optional[Array] = None) -> genetic.GAState:
+    """Stage 1: per-process SA chains, NO exchanges, one chain per slot.
+
+    ``init_perm`` warm-starts chain 0 of every process (the same
+    generalization of ``seed_with="identity"`` as ``annealing``); the
+    chain's best-so-far then carries the seed into the GA populations.
+    """
     n = C.shape[0]
     solvers = _resolve_solvers(cfg, n)
     sa_cfg = annealing.SAConfig(**{**cfg.sa.__dict__, "solvers": solvers})
@@ -46,6 +52,10 @@ def seed_population(C: Array, M: Array, key: Array, cfg: CompositeConfig,
     state = jax.vmap(jax.vmap(
         lambda k: annealing.init_chain(C, M, k, sa_cfg,
                                        n_valid=n_valid)))(chain_keys)
+    if init_perm is not None:
+        state = annealing.seed_chain0(C, M, state, chain_keys[0, 0], sa_cfg,
+                                      num_processes, init_perm,
+                                      annealing.init_chain)
 
     def round_step(st, key):
         keys = jax.random.split(key, num_processes * solvers) \
@@ -61,13 +71,15 @@ def seed_population(C: Array, M: Array, key: Array, cfg: CompositeConfig,
 
 
 def _pca_impl(C: Array, M: Array, key: Array, cfg: CompositeConfig,
-              num_processes: int, n_valid: Optional[Array]
+              num_processes: int, n_valid: Optional[Array],
+              init_perm: Optional[Array] = None
               ) -> Tuple[Array, Array, Array]:
     """Shared PCA body for single-instance and instance-batched paths."""
     if n_valid is not None:
         C = qap.mask_flows(C, n_valid)
     kseed, krun = jax.random.split(key)
-    state = seed_population(C, M, kseed, cfg, num_processes, n_valid)
+    state = seed_population(C, M, kseed, cfg, num_processes, n_valid,
+                            init_perm)
 
     def gen_step(st, key):
         keys = jax.random.split(key, num_processes)
@@ -89,21 +101,27 @@ def _pca_impl(C: Array, M: Array, key: Array, cfg: CompositeConfig,
 @functools.partial(jax.jit, static_argnames=("cfg", "num_processes"))
 def run_pca(C: Array, M: Array, key: Array, cfg: CompositeConfig,
             num_processes: int = 4,
-            n_valid: Optional[Array] = None) -> Tuple[Array, Array, Array]:
-    """Composite algorithm.  Returns (best_perm, best_f, ga_history)."""
-    return _pca_impl(C, M, key, cfg, num_processes, n_valid)
+            n_valid: Optional[Array] = None,
+            init_perm: Optional[Array] = None) -> Tuple[Array, Array, Array]:
+    """Composite algorithm.  Returns (best_perm, best_f, ga_history).
+    ``init_perm`` warm-starts the stage-1 SA chains (see
+    ``seed_population``)."""
+    return _pca_impl(C, M, key, cfg, num_processes, n_valid, init_perm)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "num_processes"))
 def run_pca_batch(Cs: Array, Ms: Array, keys: Array, cfg: CompositeConfig,
                   num_processes: int = 4,
-                  n_valid: Optional[Array] = None
+                  n_valid: Optional[Array] = None,
+                  init_perm: Optional[Array] = None
                   ) -> Tuple[Array, Array, Array]:
     """Instance-batched PCA: leading vmap axis over independent instances.
 
-    Cs, Ms: (B, N, N); keys: (B, 2); n_valid: optional (B,).  Entry b
-    equals ``run_pca(Cs[b], Ms[b], keys[b], ..., n_valid[b])``.
+    Cs, Ms: (B, N, N); keys: (B, 2); n_valid: optional (B,); init_perm:
+    optional (B, N) warm starts (negative first entry = cold).  Entry b
+    equals ``run_pca(Cs[b], Ms[b], keys[b], ..., n_valid[b], init_perm[b])``.
     """
     return qap.vmap_instances(
-        lambda c, m, k, nv: _pca_impl(c, m, k, cfg, num_processes, nv),
-        Cs, Ms, keys, n_valid)
+        lambda c, m, k, nv, ip: _pca_impl(c, m, k, cfg, num_processes, nv,
+                                          ip),
+        Cs, Ms, keys, n_valid, init_perm)

@@ -163,7 +163,12 @@ def _resolve(cfg: GAConfig, n: int) -> Tuple[int, int]:
 
 
 def init_island(C: Array, M: Array, key: Array, cfg: GAConfig,
-                n_valid: Optional[Array] = None) -> GAState:
+                n_valid: Optional[Array] = None,
+                init_perm: Optional[Array] = None) -> GAState:
+    """``init_perm`` (warm start) places a given feasible permutation in
+    population slot 0, generalizing ``seed_identity``; a negative first
+    entry is the "no warm start" sentinel and keeps the member slot 0
+    already holds (random, or identity under ``seed_identity``)."""
     n = C.shape[0]
     pop_size, _ = _resolve(cfg, n)
     if n_valid is None:
@@ -172,6 +177,10 @@ def init_island(C: Array, M: Array, key: Array, cfg: GAConfig,
         pop = qap.masked_random_permutations(key, pop_size, n, n_valid)
     if cfg.seed_identity:
         pop = pop.at[0].set(jnp.arange(n, dtype=pop.dtype))
+    if init_perm is not None:
+        use = init_perm[0] >= 0
+        seeded = jnp.where(use, init_perm.astype(pop.dtype), pop[0])
+        pop = pop.at[0].set(seeded)
     fit = ops.qap_objective(C, M, pop)
     return GAState(pop=pop, fit=fit)
 
@@ -209,6 +218,18 @@ def breed(C: Array, M: Array, state: GAState, key: Array, cfg: GAConfig,
     worst = jnp.argsort(state.fit)[-n_off:]
     pop = state.pop.at[worst].set(children)
     fit = state.fit.at[worst].set(child_fit)
+    # Elitism guard: with n_off == pop_size every member (including the
+    # best) is replaced and the island best could regress; reinstate the
+    # previous best over the new worst in that case.  A bitwise no-op
+    # whenever the best survived the replacement, i.e. all n_off < pop
+    # configs -- and what makes the warm-start never-worse-than-seed
+    # guarantee hold for every config.
+    prev_i = jnp.argmin(state.fit)
+    prev_p, prev_f = state.pop[prev_i], state.fit[prev_i]
+    worst_new = jnp.argmax(fit)
+    lost = prev_f < fit.min()
+    pop = pop.at[worst_new].set(jnp.where(lost, prev_p, pop[worst_new]))
+    fit = fit.at[worst_new].set(jnp.where(lost, prev_f, fit[worst_new]))
     return GAState(pop=pop, fit=fit)
 
 
@@ -227,14 +248,21 @@ def island_best(state: GAState) -> Tuple[Array, Array]:
 
 
 def _pga_impl(C: Array, M: Array, key: Array, cfg: GAConfig,
-              num_processes: int, n_valid: Optional[Array]
+              num_processes: int, n_valid: Optional[Array],
+              init_perm: Optional[Array] = None
               ) -> Tuple[Array, Array, Array]:
-    """Shared PGA body for single-instance and instance-batched paths."""
+    """Shared PGA body for single-instance and instance-batched paths.
+
+    ``init_perm`` seeds slot 0 of every island; ``breed``'s elitism guard
+    then guarantees the final best is no worse than the seed's objective
+    for every config (even total-replacement ones).
+    """
     if n_valid is not None:
         C = qap.mask_flows(C, n_valid)
     kinit, krun = jax.random.split(key)
     init_keys = jax.random.split(kinit, num_processes)
-    state = jax.vmap(lambda k: init_island(C, M, k, cfg, n_valid))(init_keys)
+    state = jax.vmap(
+        lambda k: init_island(C, M, k, cfg, n_valid, init_perm))(init_keys)
 
     def gen_step(st, key):
         keys = jax.random.split(key, num_processes)
@@ -256,26 +284,31 @@ def _pga_impl(C: Array, M: Array, key: Array, cfg: GAConfig,
 @functools.partial(jax.jit, static_argnames=("cfg", "num_processes"))
 def run_pga(C: Array, M: Array, key: Array, cfg: GAConfig,
             num_processes: int = 4,
-            n_valid: Optional[Array] = None) -> Tuple[Array, Array, Array]:
+            n_valid: Optional[Array] = None,
+            init_perm: Optional[Array] = None) -> Tuple[Array, Array, Array]:
     """Island PGA with ring exchange (single-host vmap form).
 
     Returns (best_perm, best_f, history) -- history[g] = global best per
     generation.  The mesh-distributed form lives in ``core.distributed``.
-    ``n_valid`` restricts the search to a padded instance's valid prefix.
+    ``n_valid`` restricts the search to a padded instance's valid prefix;
+    ``init_perm`` warm-starts slot 0 of every island.
     """
-    return _pga_impl(C, M, key, cfg, num_processes, n_valid)
+    return _pga_impl(C, M, key, cfg, num_processes, n_valid, init_perm)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "num_processes"))
 def run_pga_batch(Cs: Array, Ms: Array, keys: Array, cfg: GAConfig,
                   num_processes: int = 4,
-                  n_valid: Optional[Array] = None
+                  n_valid: Optional[Array] = None,
+                  init_perm: Optional[Array] = None
                   ) -> Tuple[Array, Array, Array]:
     """Instance-batched PGA: leading vmap axis over independent instances.
 
-    Cs, Ms: (B, N, N); keys: (B, 2); n_valid: optional (B,).  Entry b
-    equals ``run_pga(Cs[b], Ms[b], keys[b], ..., n_valid[b])``.
+    Cs, Ms: (B, N, N); keys: (B, 2); n_valid: optional (B,); init_perm:
+    optional (B, N) warm starts (negative first entry = cold).  Entry b
+    equals ``run_pga(Cs[b], Ms[b], keys[b], ..., n_valid[b], init_perm[b])``.
     """
     return qap.vmap_instances(
-        lambda c, m, k, nv: _pga_impl(c, m, k, cfg, num_processes, nv),
-        Cs, Ms, keys, n_valid)
+        lambda c, m, k, nv, ip: _pga_impl(c, m, k, cfg, num_processes, nv,
+                                          ip),
+        Cs, Ms, keys, n_valid, init_perm)

@@ -94,16 +94,22 @@ def masked_random_permutations(key: Array, batch: int, n: int,
 
 
 def vmap_instances(impl, Cs: Array, Ms: Array, keys: Array,
-                   n_valid: Optional[Array]):
+                   n_valid: Optional[Array],
+                   init_perm: Optional[Array] = None):
     """Shared instance-axis vmap for the batched solver entry points.
 
-    ``impl(C, M, key, n_valid_or_None)`` is mapped over the leading axis of
-    Cs/Ms/keys (and n_valid when given), so entry b of the result equals the
-    per-instance call on slice b.
+    ``impl(C, M, key, n_valid_or_None, init_perm_or_None)`` is mapped over
+    the leading axis of Cs/Ms/keys (and n_valid / init_perm when given), so
+    entry b of the result equals the per-instance call on slice b.
+
+    ``init_perm`` is the warm-start batch: row b seeds instance b's search
+    (see the solvers' ``init_perm``); a row whose first entry is negative
+    means "no warm start for this instance" and leaves it solving cold.
     """
-    if n_valid is None:
-        return jax.vmap(lambda c, m, k: impl(c, m, k, None))(Cs, Ms, keys)
-    return jax.vmap(impl)(Cs, Ms, keys, n_valid)
+    nv_axis = None if n_valid is None else 0
+    ip_axis = None if init_perm is None else 0
+    return jax.vmap(impl, in_axes=(0, 0, 0, nv_axis, ip_axis))(
+        Cs, Ms, keys, n_valid, init_perm)
 
 
 def swap_positions(p: Array, a: Array, b: Array) -> Array:

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -29,7 +29,7 @@ import jax
 from jax.sharding import Mesh
 
 from repro.core import annealing, genetic, mapping as mapping_lib
-from repro.serve.mapper import MapRequest, MappingEngine
+from repro.serve.mapper import MapFuture, MapRequest, MappingEngine
 from repro.topology import hlocost, tpu, traffic as traffic_lib
 from .mesh import make_mesh_with_devices
 
@@ -88,6 +88,18 @@ def get_engine() -> MappingEngine:
     return _ENGINE
 
 
+def reset_engine() -> None:
+    """Tear down the module-global engine (stop its flusher, drop cache and
+    stats).  Test fixtures call this so one test's cache/stats can never
+    leak into another; the next ``get_engine()`` builds a fresh one."""
+    global _ENGINE
+    if _ENGINE is not None:
+        # unconditionally: stop() also drains a never-started engine's
+        # queue, so no caller is left blocked on an unresolved future
+        _ENGINE.stop()
+        _ENGINE = None
+
+
 def _seed_from_key(key) -> int:
     if key is None:
         return 0
@@ -116,9 +128,7 @@ def solve_placement(c: np.ndarray, m: np.ndarray, algorithm: str = "psa",
                                     algorithm=algorithm,
                                     seed=_seed_from_key(key),
                                     cache_seed=key is not None)
-        return PlacementResult(perm=resp.perm, cost_before=resp.baseline,
-                               cost_after=resp.objective, algorithm=algorithm,
-                               seconds=resp.seconds)
+        return _result_from_response(resp)
     res = mapping_lib.find_mapping(
         c, m, algorithm, key=key,
         num_processes=4 if num_processes is None else num_processes,
@@ -128,26 +138,52 @@ def solve_placement(c: np.ndarray, m: np.ndarray, algorithm: str = "psa",
                            seconds=res.seconds)
 
 
+def _result_from_response(resp) -> PlacementResult:
+    return PlacementResult(perm=resp.perm, cost_before=resp.baseline,
+                           cost_after=resp.objective,
+                           algorithm=resp.algorithm, seconds=resp.seconds)
+
+
+def submit_placement(c: np.ndarray, m: np.ndarray, algorithm: str = "psa",
+                     key=None, job_id: str = "plc",
+                     deadline_ms: Optional[float] = None) -> MapFuture:
+    """Streaming form: queue one placement on the shared engine and return
+    its :class:`MapFuture` immediately.  With the engine's flusher running
+    (``get_engine().start()``) the future resolves when its bucket fills
+    or the flush deadline passes; otherwise the caller flushes explicitly.
+    ``future.result()`` yields the :class:`MapResponse`; wrap it with
+    ``placement_result`` for the launcher-facing record."""
+    eng = get_engine()
+    return eng.submit(MapRequest(job_id=job_id, C=np.asarray(c),
+                                 M=np.asarray(m), algorithm=algorithm,
+                                 seed=_seed_from_key(key),
+                                 cache_seed=key is not None,
+                                 deadline_ms=deadline_ms))
+
+
+def placement_result(future: MapFuture,
+                     timeout: Optional[float] = None) -> PlacementResult:
+    """Resolve a ``submit_placement`` future into a :class:`PlacementResult`."""
+    return _result_from_response(future.result(timeout))
+
+
 def solve_placements(instances: Sequence[Tuple[np.ndarray, np.ndarray]],
                      algorithm: str = "psa", key=None
                      ) -> Tuple[PlacementResult, ...]:
-    """Batched form: queue every (c, m) instance and flush once, so all
-    same-bucket placements ride one accelerator dispatch."""
+    """Batched form over the future-based API: queue every (c, m) instance,
+    flush once so all same-bucket placements ride one accelerator dispatch,
+    and collect each result from its future."""
     eng = get_engine()
     seed = _seed_from_key(key)
+    futures = []
     for i, (c, m) in enumerate(instances):
-        eng.submit(MapRequest(job_id=f"plc{i}", C=np.asarray(c),
-                              M=np.asarray(m), algorithm=algorithm,
-                              seed=seed + i, cache_seed=key is not None))
-    out = eng.flush()
-    results = []
-    for i, (c, m) in enumerate(instances):
-        resp = out[f"plc{i}"]
-        results.append(PlacementResult(
-            perm=resp.perm, cost_before=resp.baseline,
-            cost_after=resp.objective, algorithm=algorithm,
-            seconds=resp.seconds))
-    return tuple(results)
+        futures.append(eng.submit(
+            MapRequest(job_id=f"plc{i}", C=np.asarray(c), M=np.asarray(m),
+                       algorithm=algorithm, seed=seed + i,
+                       cache_seed=key is not None)))
+    if not eng.running:
+        eng.flush()
+    return tuple(_result_from_response(f.result()) for f in futures)
 
 
 def apply_placement(mesh: Mesh, perm: np.ndarray) -> Mesh:

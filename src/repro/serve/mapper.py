@@ -1,22 +1,39 @@
-"""Instance-batched mapping service: the resource-manager-facing engine.
+"""Async, deadline-aware mapping service: the resource-manager-facing engine.
 
 The paper's premise is that mapping requests arrive as a *stream* while
-resources are being scheduled, so the solver must answer in bounded time.
-The seed solvers jit-compile and solve exactly one (C, M) instance per
-call, leaving the accelerator idle between requests.  This engine closes
-that gap:
+resources are being scheduled, so the solver must answer within the
+resource manager's timeout.  The engine is built around that contract:
 
-  1. mapping requests (one per job) are queued via :meth:`MappingEngine.submit`;
-  2. each instance is padded to the smallest size *bucket* (default
-     32/64/128) so a handful of compiled programs cover every job shape;
-  3. :meth:`MappingEngine.flush` groups the queue by (bucket, algorithm)
-     and dispatches whole groups through the batched entry points
+  1. :meth:`MappingEngine.submit` is non-blocking and returns a
+     :class:`MapFuture`; the caller (a scheduler allocation loop) keeps
+     admitting jobs while solves are in flight and collects each mapping
+     with ``future.result()``.
+  2. A background *flusher* thread (``start()`` / ``stop()``) dispatches a
+     (bucket, algorithm, budget-tier) group as soon as it fills
+     (``max_batch``) or when the oldest queued request is about to exceed
+     ``flush_deadline_ms`` -- so latency is bounded without giving up
+     batching.  ``flush()`` remains available for synchronous use and is
+     bitwise-equivalent: the flusher runs the very same code path on the
+     same drained queue.
+  3. A :class:`DeadlinePolicy` picks algorithm + solver budget per request
+     (paper S5: SA meets tight resource-manager timeouts, the composite
+     algorithm buys accuracy when there is slack): requests may carry a
+     ``deadline_ms`` and/or ``algorithm="auto"``.
+  4. Each instance is padded to the smallest size *bucket* (default
+     32/64/128) and whole groups dispatch through the batched entry points
      ``annealing.run_psa_batch`` / ``genetic.run_pga_batch`` /
      ``composite.run_pca_batch`` -- one accelerator program solves B
-     instances at once (a leading vmap axis over the (processes, solvers)
-     chain grid);
-  4. an LRU cache keyed by an instance digest serves repeated job shapes
-     without re-solving.
+     instances at once.
+  5. A two-tier store serves repeats: the *exact* tier is an LRU keyed by
+     the full instance digest (same instance => cached permutation, no
+     solve); the *shape* tier remembers the latest solution per
+     (order, system-graph) digest, and a near-miss -- same nodes and
+     topology, different flows -- warm-starts the new solve by seeding the
+     solver chains with the cached permutation (``init_perm``), which the
+     solvers guarantee never ends worse than the seed.
+
+Queue, cache, and stats are thread-safe; solves are serialized by a
+dispatch lock so the flusher and synchronous callers can coexist.
 
 Padding is exact, not approximate: flows touching padded slots are zeroed
 and the batched solvers keep real processes on real nodes (see
@@ -27,9 +44,10 @@ per-instance runners in ``tests/test_mapper.py``.
 from __future__ import annotations
 
 import hashlib
+import threading
 import time
 from collections import OrderedDict
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -41,6 +59,9 @@ from repro.core import annealing, composite, genetic, mapping as mapping_lib
 DEFAULT_BUCKETS = (32, 64, 128)
 
 ALGORITHMS = ("psa", "pga", "pca")
+AUTO = "auto"                       # algorithm chosen by the deadline policy
+
+TIERS = ("default", "tight")
 
 
 @dataclass(frozen=True)
@@ -49,7 +70,12 @@ class MapRequest:
 
     ``cache_seed=True`` folds the seed into the cache digest: the same
     instance with a different seed then gets a fresh, independent solve
-    (best-of-k restart sweeps) instead of the shape-level cached one.
+    (best-of-k restart sweeps) instead of the shape-level cached one --
+    and near-miss warm starts are skipped so restarts stay independent.
+
+    ``deadline_ms`` is the resource manager's answer budget for this
+    request; with ``algorithm="auto"`` the engine's
+    :class:`DeadlinePolicy` picks algorithm and solver budget from it.
     """
     job_id: str
     C: np.ndarray              # (n, n) flow matrix
@@ -57,6 +83,7 @@ class MapRequest:
     algorithm: str = "psa"
     seed: int = 0
     cache_seed: bool = False
+    deadline_ms: Optional[float] = None
 
 
 @dataclass
@@ -65,11 +92,14 @@ class MapResponse:
     perm: np.ndarray           # (n,) process -> node
     objective: float           # F(perm)
     baseline: float            # F(identity)
-    algorithm: str
+    algorithm: str             # resolved algorithm (policy applied)
     n: int
     bucket: Optional[int]      # padded size (None = solved at exact size)
     cached: bool
-    seconds: float             # wall time of the flush that produced it
+    seconds: float             # amortized wall time: group wall / batch_size
+    batch_size: int = 1        # requests served by the dispatch (0 = cached)
+    tier: str = "default"      # solver budget tier the policy picked
+    warm_start: bool = False   # solve was seeded from a near-miss cache hit
 
     @property
     def improvement(self) -> float:
@@ -78,40 +108,158 @@ class MapResponse:
         return (self.baseline - self.objective) / self.baseline
 
 
+class MapFuture:
+    """Handle for one submitted request; resolved by a flush (either the
+    background flusher thread or an explicit :meth:`MappingEngine.flush`)."""
+
+    __slots__ = ("_event", "_response", "_exception", "resolved_at")
+
+    def __init__(self) -> None:
+        self._event = threading.Event()
+        self._response: Optional[MapResponse] = None
+        self._exception: Optional[BaseException] = None
+        self.resolved_at: Optional[float] = None   # time.monotonic() stamp
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> MapResponse:
+        if not self._event.wait(timeout):
+            raise TimeoutError("mapping future not resolved within timeout")
+        if self._exception is not None:
+            raise self._exception
+        assert self._response is not None
+        return self._response
+
+    def exception(self, timeout: Optional[float] = None
+                  ) -> Optional[BaseException]:
+        if not self._event.wait(timeout):
+            raise TimeoutError("mapping future not resolved within timeout")
+        return self._exception
+
+    def _resolve(self, response: MapResponse) -> None:
+        self._response = response
+        self.resolved_at = time.monotonic()
+        self._event.set()
+
+    def _fail(self, exc: BaseException) -> None:
+        self._exception = exc
+        self.resolved_at = time.monotonic()
+        self._event.set()
+
+
+@dataclass(frozen=True)
+class DeadlinePolicy:
+    """Deadline -> (algorithm, solver-budget tier), after paper S5.
+
+    Under tight timeouts only SA answers in time at useful quality, so
+    ``deadline_ms <= tight_ms`` maps to PSA on the reduced "tight" budget;
+    with real slack (``deadline_ms >= slack_ms``) the composite algorithm
+    is worth its extra cost; in between, PSA on the default budget.
+    An explicit (non-"auto") algorithm is honored -- the deadline then
+    only selects the budget tier.
+    """
+    tight_ms: float = 200.0
+    slack_ms: float = 2000.0
+
+    def resolve(self, algorithm: str,
+                deadline_ms: Optional[float]) -> Tuple[str, str]:
+        tier = "tight" if (deadline_ms is not None
+                           and deadline_ms <= self.tight_ms) else "default"
+        if algorithm != AUTO:
+            return algorithm, tier
+        if deadline_ms is None:
+            return "psa", "default"
+        if tier == "tight":
+            return "psa", "tight"
+        if deadline_ms >= self.slack_ms:
+            return "pca", "default"
+        return "psa", "default"
+
+
 @dataclass
 class EngineStats:
     submitted: int = 0
     cache_hits: int = 0
+    warm_starts: int = 0       # solves seeded from a shape-tier near miss
     solver_batches: int = 0    # batched dispatches issued
     solver_calls: int = 0      # instances that went through a solver
+    full_bucket_flushes: int = 0   # flusher waves triggered by a full group
+    deadline_flushes: int = 0      # flusher waves triggered by the deadline
+
+
+@dataclass
+class _Pending:
+    """A queued request plus everything the flusher needs to serve it."""
+    req: MapRequest
+    future: MapFuture
+    algorithm: str             # resolved by the deadline policy
+    tier: str
+    t_submit: float            # time.monotonic()
+
+
+def _tighten_sa(cfg: annealing.SAConfig) -> annealing.SAConfig:
+    """Reduced-budget SA for the tight deadline tier (~1/4 the work)."""
+    return replace(cfg,
+                   num_exchanges=max(1, cfg.num_exchanges // 2),
+                   solvers=max(1, cfg.solvers // 2))
+
+
+def _tighten_ga(cfg: genetic.GAConfig) -> genetic.GAConfig:
+    return replace(cfg, generations=max(1, cfg.generations // 2))
 
 
 class MappingEngine:
-    """Queue -> bucket -> batched solve -> LRU cache.
+    """submit -> future; queue -> bucket -> batched solve -> two-tier cache.
 
     One engine instance is meant to live for the whole scheduler process;
     compiled programs are reused across flushes because bucket shapes and
-    configs are stable.
+    configs are stable.  Call :meth:`start` to run the background flusher
+    (or use the engine as a context manager); without it the engine
+    behaves synchronously via :meth:`flush`.
     """
 
     def __init__(self, buckets: Sequence[int] = DEFAULT_BUCKETS,
                  cache_size: int = 256, num_processes: int = 2,
                  sa_cfg: Optional[annealing.SAConfig] = None,
                  ga_cfg: Optional[genetic.GAConfig] = None,
-                 polish_rounds: int = 200):
+                 polish_rounds: int = 200,
+                 flush_deadline_ms: float = 20.0,
+                 max_batch: int = 32,
+                 policy: Optional[DeadlinePolicy] = None,
+                 warm_start: bool = True,
+                 pad_batches: bool = True):
         self.buckets = tuple(sorted(int(b) for b in buckets))
         if not self.buckets:
             raise ValueError("need at least one size bucket")
         self.cache_size = int(cache_size)
         self.num_processes = int(num_processes)
         self.polish_rounds = int(polish_rounds)
+        self.flush_deadline_ms = float(flush_deadline_ms)
+        self.max_batch = int(max_batch)
+        self.policy = policy or DeadlinePolicy()
+        self.warm_start = bool(warm_start)
+        self.pad_batches = bool(pad_batches)
         self.sa_cfg = sa_cfg or annealing.SAConfig(
             max_neighbors=25, iters_per_exchange=30, num_exchanges=20,
             solvers=8)
         self.ga_cfg = ga_cfg or genetic.GAConfig(generations=80, pop_size=32)
-        self._queue: List[MapRequest] = []
+        self._tier_cfgs = {
+            "default": (self.sa_cfg, self.ga_cfg),
+            "tight": (_tighten_sa(self.sa_cfg), _tighten_ga(self.ga_cfg)),
+        }
+        self._queue: List[_Pending] = []
+        # Exact tier: full-instance digest -> (perm, objective).
         self._cache: "OrderedDict[str, Tuple[np.ndarray, float]]" = OrderedDict()
+        # Shape tier: (order, system-graph) digest -> latest perm; a hit
+        # with different flows warm-starts the solve instead of serving it.
+        self._shape_cache: "OrderedDict[str, np.ndarray]" = OrderedDict()
         self.stats = EngineStats()
+        self._lock = threading.RLock()          # queue / cache / stats
+        self._cond = threading.Condition(self._lock)
+        self._dispatch_lock = threading.Lock()  # serializes solves
+        self._flusher: Optional[threading.Thread] = None
+        self._stop = False
 
     # ------------------------------------------------------------- plumbing
     def bucket_for(self, n: int) -> Optional[int]:
@@ -121,19 +269,33 @@ class MappingEngine:
                 return b
         return None                      # oversize: solved at exact size
 
-    def digest(self, req: MapRequest) -> str:
-        """Cache key: the instance and everything that shapes its solution
-        (algorithm + solver budgets).  The seed is excluded by default --
-        repeated job shapes are served from cache regardless of the
-        request's key -- unless the request opts in via ``cache_seed``."""
+    def digest(self, req: MapRequest, algorithm: Optional[str] = None,
+               tier: str = "default") -> str:
+        """Exact-tier cache key: the instance and everything that shapes its
+        solution (resolved algorithm + budget tier).  The seed is excluded
+        by default -- repeated job shapes are served from cache regardless
+        of the request's key -- unless the request opts in via
+        ``cache_seed``."""
+        algorithm = algorithm or req.algorithm
+        sa_cfg, ga_cfg = self._tier_cfgs[tier]
         h = hashlib.sha1()
         C = np.ascontiguousarray(req.C, dtype=np.float32)
         M = np.ascontiguousarray(req.M, dtype=np.float32)
         seed_part = f"|s{req.seed}" if req.cache_seed else ""
-        h.update(f"{C.shape[0]}|{req.algorithm}|{self.num_processes}|"
-                 f"{self.polish_rounds}|{self.sa_cfg}|{self.ga_cfg}"
+        h.update(f"{C.shape[0]}|{algorithm}|{tier}|{self.num_processes}|"
+                 f"{self.polish_rounds}|{sa_cfg}|{ga_cfg}"
                  f"{seed_part}".encode())
         h.update(C.tobytes())
+        h.update(M.tobytes())
+        return h.hexdigest()
+
+    def shape_digest(self, req: MapRequest) -> str:
+        """Shape-tier key: order + system graph only (flows excluded), so a
+        job of the same size on the same allocated topology is a near miss
+        even when its traffic pattern differs."""
+        M = np.ascontiguousarray(req.M, dtype=np.float32)
+        h = hashlib.sha1()
+        h.update(f"{M.shape[0]}|".encode())
         h.update(M.tobytes())
         return h.hexdigest()
 
@@ -143,74 +305,258 @@ class MappingEngine:
             self._cache.move_to_end(key)
         return hit
 
-    def _cache_put(self, key: str, perm: np.ndarray, objective: float) -> None:
+    def _cache_put(self, key: str, shape_key: str, perm: np.ndarray,
+                   objective: float) -> None:
         # Store a private copy: responses hand out arrays the caller may
         # mutate, and a poisoned entry would serve every future hit.
-        self._cache[key] = (np.array(perm, copy=True), objective)
+        perm = np.array(perm, copy=True)
+        self._cache[key] = (perm, objective)
         self._cache.move_to_end(key)
         while len(self._cache) > self.cache_size:
             self._cache.popitem(last=False)
+        self._shape_cache[shape_key] = perm
+        self._shape_cache.move_to_end(shape_key)
+        while len(self._shape_cache) > self.cache_size:
+            self._shape_cache.popitem(last=False)
+
+    def _warm_perm(self, req: MapRequest) -> Optional[np.ndarray]:
+        """Shape-tier near-miss lookup (call under the lock).
+
+        ``cache_seed`` requests skip it so best-of-k restart sweeps stay
+        independent solves rather than all descending from one seed.
+        """
+        if not self.warm_start or req.cache_seed or req.C.shape[0] < 2:
+            return None
+        return self._shape_cache.get(self.shape_digest(req))
 
     # ------------------------------------------------------------------ API
-    def submit(self, req: MapRequest) -> None:
-        if req.algorithm not in ALGORITHMS:
-            raise ValueError(f"algorithm must be one of {ALGORITHMS}")
+    def submit(self, req: MapRequest) -> MapFuture:
+        """Queue one request; non-blocking.  Returns the request's future,
+        resolved by the background flusher (when started) or by the next
+        explicit :meth:`flush`."""
+        if req.algorithm not in ALGORITHMS + (AUTO,):
+            raise ValueError(
+                f"algorithm must be one of {ALGORITHMS + (AUTO,)}")
         if req.C.shape != req.M.shape or req.C.shape[0] != req.C.shape[1]:
             raise ValueError("C and M must be square and same order")
-        self.stats.submitted += 1
-        self._queue.append(req)
+        for name, a in (("C", req.C), ("M", req.M)):
+            if not np.issubdtype(np.asarray(a).dtype, np.number) or \
+                    np.iscomplexobj(a):
+                # reject here, in the caller's thread: a digest/cast error
+                # inside the flusher would otherwise surface nowhere
+                raise ValueError(f"{name} must be a real numeric matrix")
+        algorithm, tier = self.policy.resolve(req.algorithm, req.deadline_ms)
+        pending = _Pending(req=req, future=MapFuture(), algorithm=algorithm,
+                           tier=tier, t_submit=time.monotonic())
+        with self._cond:
+            self.stats.submitted += 1
+            self._queue.append(pending)
+            self._cond.notify_all()
+        return pending.future
 
     def flush(self) -> Dict[str, MapResponse]:
-        """Solve everything queued; returns {job_id: response}."""
-        queue, self._queue = self._queue, []
-        responses: Dict[str, MapResponse] = {}
-
-        # Cache pass + group misses by (bucket, algorithm); identical
-        # instances inside one flush are solved once and shared.
-        groups: Dict[Tuple[Optional[int], str], "OrderedDict[str, List[MapRequest]]"] = {}
-        for req in queue:
-            key = self.digest(req)
-            hit = self._cache_get(key)
-            if hit is not None:
-                perm, objective = hit
-                self.stats.cache_hits += 1
-                responses[req.job_id] = self._respond(
-                    req, perm, objective, bucket=self.bucket_for(req.C.shape[0]),
-                    cached=True, seconds=0.0)
-                continue
-            g = groups.setdefault((self.bucket_for(req.C.shape[0]),
-                                   req.algorithm), OrderedDict())
-            g.setdefault(key, []).append(req)
-
-        for (bucket, algorithm), by_digest in groups.items():
-            t0 = time.perf_counter()
-            reqs = [rs[0] for rs in by_digest.values()]
-            if bucket is None:
-                solved = [self._solve_exact(r) for r in reqs]
-            else:
-                solved = self._solve_bucket(bucket, algorithm, reqs)
-            seconds = time.perf_counter() - t0
-            for key, (perm, objective) in zip(by_digest, solved):
-                self._cache_put(key, perm, objective)
-                for req in by_digest[key]:
-                    responses[req.job_id] = self._respond(
-                        req, perm, objective, bucket=bucket, cached=False,
-                        seconds=seconds)
-        return responses
+        """Solve everything queued; returns {job_id: response}.  Safe to
+        call with the flusher running -- each request is served exactly
+        once (whoever drains it from the queue resolves its future)."""
+        with self._cond:
+            pending, self._queue = self._queue, []
+        try:
+            return self._flush_pending(pending, raise_errors=True)
+        except BaseException as e:
+            for p in pending:                # no future may be left hanging
+                if not p.future.done():
+                    p.future._fail(e)
+            raise
 
     def map_one(self, C: np.ndarray, M: np.ndarray, algorithm: str = "psa",
                 job_id: str = "job", seed: int = 0,
-                cache_seed: bool = False) -> MapResponse:
-        """Convenience single-request path (still padded + cached)."""
-        self.submit(MapRequest(job_id=job_id, C=np.asarray(C),
-                               M=np.asarray(M), algorithm=algorithm,
-                               seed=seed, cache_seed=cache_seed))
-        return self.flush()[job_id]
+                cache_seed: bool = False,
+                deadline_ms: Optional[float] = None) -> MapResponse:
+        """Convenience single-request path (still padded + cached).  With
+        the flusher running this blocks on the future; otherwise it flushes
+        synchronously."""
+        fut = self.submit(MapRequest(job_id=job_id, C=np.asarray(C),
+                                     M=np.asarray(M), algorithm=algorithm,
+                                     seed=seed, cache_seed=cache_seed,
+                                     deadline_ms=deadline_ms))
+        if not self.running:
+            self.flush()
+        return fut.result()
+
+    # -------------------------------------------------------- async flusher
+    @property
+    def running(self) -> bool:
+        return self._flusher is not None and self._flusher.is_alive()
+
+    def start(self) -> "MappingEngine":
+        """Start the background flusher thread (idempotent)."""
+        with self._cond:
+            if self.running:
+                return self
+            self._stop = False
+            # created under the lock: two racing start() calls must not
+            # each spawn a flusher (stop() could then only join one)
+            self._flusher = threading.Thread(target=self._flush_loop,
+                                             name="mapper-flusher",
+                                             daemon=True)
+            self._flusher.start()
+        return self
+
+    def stop(self, flush_pending: bool = True) -> None:
+        """Stop the flusher; by default drain what is still queued so no
+        future is left unresolved."""
+        with self._cond:
+            self._stop = True
+            self._cond.notify_all()
+        if self._flusher is not None:
+            self._flusher.join()
+            self._flusher = None
+        if flush_pending:
+            self.flush()
+
+    def __enter__(self) -> "MappingEngine":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def _group_key(self, p: _Pending) -> Tuple[Optional[int], str, str]:
+        return (self.bucket_for(p.req.C.shape[0]), p.algorithm, p.tier)
+
+    def _take_ready_locked(self) -> Tuple[List[_Pending], Optional[float]]:
+        """Pick the requests the flusher should dispatch now (caller holds
+        the lock): every full group, plus every group holding a request
+        older than the flush deadline.  Groups that are neither stay queued
+        and keep batching -- a lone overdue straggler in one bucket must
+        not degrade other buckets' waves.  Returns (ready,
+        seconds_until_oldest_deadline); ready is empty while nothing is
+        due."""
+        if not self._queue:
+            return [], None
+        now = time.monotonic()
+        deadline_s = self.flush_deadline_ms / 1000.0
+        counts: Dict[Tuple[Optional[int], str, str], int] = {}
+        overdue = set()
+        for p in self._queue:
+            k = self._group_key(p)
+            counts[k] = counts.get(k, 0) + 1
+            if now - p.t_submit >= deadline_s:
+                overdue.add(k)
+        full = {k for k, c in counts.items() if c >= self.max_batch}
+        take = full | overdue
+        if take:
+            ready = [p for p in self._queue if self._group_key(p) in take]
+            self._queue = [p for p in self._queue
+                           if self._group_key(p) not in take]
+            self.stats.full_bucket_flushes += len(full)
+            self.stats.deadline_flushes += len(overdue - full)
+            return ready, None
+        oldest = min(p.t_submit for p in self._queue)
+        return [], deadline_s - (now - oldest)
+
+    def _flush_loop(self) -> None:
+        while True:
+            with self._cond:
+                while not self._stop and not self._queue:
+                    self._cond.wait()
+                if self._stop:
+                    ready, self._queue = self._queue, []
+                else:
+                    ready, wait_s = self._take_ready_locked()
+                    if not ready:
+                        self._cond.wait(timeout=wait_s)
+                        continue
+            if ready:
+                try:
+                    self._flush_pending(ready, raise_errors=False)
+                except BaseException as e:   # never let the flusher die with
+                    for p in ready:          # unresolved futures behind it
+                        if not p.future.done():
+                            p.future._fail(e)
+            with self._cond:
+                if self._stop and not self._queue:
+                    return
 
     # ---------------------------------------------------------- solve paths
-    def _respond(self, req: MapRequest, perm: np.ndarray, objective: float,
-                 bucket: Optional[int], cached: bool, seconds: float
-                 ) -> MapResponse:
+    def _flush_pending(self, pending: List[_Pending], raise_errors: bool
+                       ) -> Dict[str, MapResponse]:
+        """Serve a drained slice of the queue: cache pass, grouped batched
+        solves, future resolution.  The single code path used by both the
+        synchronous ``flush()`` and the background flusher, so the two are
+        bitwise-equivalent on the same drained set."""
+        responses: Dict[str, MapResponse] = {}
+        if not pending:
+            return responses
+        # Cache pass + group misses by (bucket, algorithm, tier); identical
+        # instances inside one wave are solved once & shared.  Runs before
+        # the dispatch lock so a pure cache hit is never serialized behind
+        # an unrelated in-flight solve.
+        groups: Dict[Tuple[Optional[int], str, str],
+                     "OrderedDict[str, List[_Pending]]"] = {}
+        with self._lock:
+            for p in pending:
+                key = self.digest(p.req, p.algorithm, p.tier)
+                hit = self._cache_get(key)
+                if hit is not None:
+                    perm, objective = hit
+                    self.stats.cache_hits += 1
+                    resp = self._respond(
+                        p, perm, objective,
+                        bucket=self.bucket_for(p.req.C.shape[0]),
+                        cached=True, seconds=0.0, batch_size=0)
+                    responses[p.req.job_id] = resp
+                    p.future._resolve(resp)
+                    continue
+                g = groups.setdefault(self._group_key(p), OrderedDict())
+                g.setdefault(key, []).append(p)
+        if not groups:
+            return responses
+        with self._dispatch_lock:
+            first_error: Optional[BaseException] = None
+            for (bucket, algorithm, tier), by_digest in groups.items():
+                heads = [ps[0] for ps in by_digest.values()]
+                try:
+                    t0 = time.perf_counter()
+                    with self._lock:
+                        warms = [self._warm_perm(p.req) for p in heads]
+                    if bucket is None:
+                        solved = [self._solve_exact(p.req, algorithm, tier, w)
+                                  for p, w in zip(heads, warms)]
+                    else:
+                        solved = self._solve_bucket(
+                            bucket, algorithm, tier,
+                            [p.req for p in heads], warms)
+                    seconds = time.perf_counter() - t0
+                except Exception as e:       # fail this group's futures only
+                    for ps in by_digest.values():
+                        for p in ps:
+                            p.future._fail(e)
+                    first_error = first_error or e
+                    continue
+                total = sum(len(ps) for ps in by_digest.values())
+                per_instance = seconds / max(total, 1)
+                with self._lock:
+                    self.stats.warm_starts += sum(w is not None
+                                                  for w in warms)
+                    for key, (perm, objective), w, p0 in zip(
+                            by_digest, solved, warms, heads):
+                        self._cache_put(key, self.shape_digest(p0.req),
+                                        perm, objective)
+                        for p in by_digest[key]:
+                            resp = self._respond(
+                                p, perm, objective, bucket=bucket,
+                                cached=False, seconds=per_instance,
+                                batch_size=total, warm_start=w is not None)
+                            responses[p.req.job_id] = resp
+                            p.future._resolve(resp)
+            if first_error is not None and raise_errors:
+                raise first_error
+        return responses
+
+    def _respond(self, p: _Pending, perm: np.ndarray, objective: float,
+                 bucket: Optional[int], cached: bool, seconds: float,
+                 batch_size: int, warm_start: bool = False) -> MapResponse:
+        req = p.req
         n = req.C.shape[0]
         baseline = float((np.asarray(req.C, np.float64)
                           * np.asarray(req.M, np.float64)).sum())
@@ -219,17 +565,54 @@ class MappingEngine:
             perm, objective = np.arange(n, dtype=np.int32), baseline
         return MapResponse(job_id=req.job_id, perm=np.array(perm, copy=True),
                            objective=float(objective), baseline=baseline,
-                           algorithm=req.algorithm, n=n, bucket=bucket,
-                           cached=cached, seconds=seconds)
+                           algorithm=p.algorithm, n=n, bucket=bucket,
+                           cached=cached, seconds=seconds,
+                           batch_size=batch_size, tier=p.tier,
+                           warm_start=warm_start)
 
-    def _solve_bucket(self, bucket: int, algorithm: str,
-                      reqs: List[MapRequest]
+    def _init_perm_batch(self, reqs: List[MapRequest], bucket: int,
+                         warms: List[Optional[np.ndarray]],
+                         Bp: Optional[int] = None) -> Optional[np.ndarray]:
+        """Warm-start rows padded to the bucket; all-(-1) rows mark cold
+        instances (the solvers' no-warm sentinel) and cover any dummy
+        batch-padding rows.  None when nothing in the batch has a near
+        miss, keeping the cold path untouched."""
+        if all(w is None for w in warms):
+            return None
+        ips = np.full((Bp or len(reqs), bucket), -1, np.int32)
+        for i, (req, w) in enumerate(zip(reqs, warms)):
+            if w is None:
+                continue
+            n = req.C.shape[0]
+            ips[i, :n] = w
+            ips[i, n:] = np.arange(n, bucket, dtype=np.int32)
+        return ips
+
+    def _solve_bucket(self, bucket: int, algorithm: str, tier: str,
+                      reqs: List[MapRequest],
+                      warms: List[Optional[np.ndarray]]
                       ) -> List[Tuple[np.ndarray, float]]:
-        """Pad every request to ``bucket`` and dispatch one batched solve."""
+        """Pad every request to ``bucket`` and dispatch one batched solve.
+
+        The instance axis is itself padded to the next power of two and
+        oversized waves are chunked at ``max_batch`` (``pad_batches``), so
+        a long-lived service compiles at most log2(max_batch)+1 programs
+        per bucket instead of one per distinct wave size; vmap rows are
+        independent, so real rows are bitwise-unaffected and the dummy
+        rows are dropped.
+        """
+        if self.pad_batches and len(reqs) > self.max_batch:
+            out = []
+            for i in range(0, len(reqs), self.max_batch):
+                out.extend(self._solve_bucket(
+                    bucket, algorithm, tier, reqs[i:i + self.max_batch],
+                    warms[i:i + self.max_batch]))
+            return out
         B = len(reqs)
-        Cs = np.zeros((B, bucket, bucket), np.float32)
-        Ms = np.zeros((B, bucket, bucket), np.float32)
-        nvs = np.zeros(B, np.int32)
+        Bp = 1 << (B - 1).bit_length() if self.pad_batches else B
+        Cs = np.zeros((Bp, bucket, bucket), np.float32)
+        Ms = np.zeros((Bp, bucket, bucket), np.float32)
+        nvs = np.zeros(Bp, np.int32)
         keys = []
         for i, req in enumerate(reqs):
             n = req.C.shape[0]
@@ -237,17 +620,23 @@ class MappingEngine:
             Ms[i, :n, :n] = req.M
             nvs[i] = n
             keys.append(jax.random.PRNGKey(req.seed))
+        for j in range(B, Bp):             # dummy rows replicate instance 0
+            Cs[j], Ms[j], nvs[j] = Cs[0], Ms[0], nvs[0]
+            keys.append(jax.random.PRNGKey(0))
         Cs_j, Ms_j, nvs_j = jnp.asarray(Cs), jnp.asarray(Ms), jnp.asarray(nvs)
-        perms, fs = self._dispatch(algorithm, Cs_j, Ms_j, jnp.stack(keys),
-                                   nvs_j)
+        ips = self._init_perm_batch(reqs, bucket, warms, Bp)
+        ips_j = None if ips is None else jnp.asarray(ips)
+        perms, fs = self._dispatch(algorithm, tier, Cs_j, Ms_j,
+                                   jnp.stack(keys), nvs_j, ips_j)
         if self.polish_rounds > 0:
             # Same final 2-swap refinement find_mapping applies, batched and
             # mask-aware so swaps never cross the valid/padded boundary.
             pkeys = jnp.stack([jax.random.fold_in(k, 7) for k in keys])
             perms, fs = mapping_lib.polish_batch(
                 Cs_j, Ms_j, perms, pkeys, self.polish_rounds, nvs_j)
-        self.stats.solver_batches += 1
-        self.stats.solver_calls += B
+        with self._lock:
+            self.stats.solver_batches += 1
+            self.stats.solver_calls += B
         perms = np.asarray(perms)
         fs = np.asarray(fs)
         out = []
@@ -263,39 +652,47 @@ class MappingEngine:
             out.append((perms[i, :n].astype(np.int32), float(fs[i])))
         return out
 
-    def _solve_exact(self, req: MapRequest) -> Tuple[np.ndarray, float]:
-        """Oversize instances (> max bucket) run unpadded, one at a time."""
+    def _solve_exact(self, req: MapRequest, algorithm: str, tier: str,
+                     warm: Optional[np.ndarray] = None
+                     ) -> Tuple[np.ndarray, float]:
+        """Oversize instances (> max bucket) run unpadded, one at a time
+        (still warm-started from a shape-tier near miss when available)."""
+        sa_cfg, ga_cfg = self._tier_cfgs[tier]
         C = jnp.asarray(req.C, jnp.float32)
         M = jnp.asarray(req.M, jnp.float32)
         key = jax.random.PRNGKey(req.seed)
-        if req.algorithm == "psa":
-            p, f, _ = annealing.run_psa(C, M, key, self.sa_cfg,
-                                        self.num_processes)
-        elif req.algorithm == "pga":
-            p, f, _ = genetic.run_pga(C, M, key, self.ga_cfg,
-                                      self.num_processes)
+        ip = None if warm is None else jnp.asarray(warm, jnp.int32)
+        if algorithm == "psa":
+            p, f, _ = annealing.run_psa(C, M, key, sa_cfg,
+                                        self.num_processes, init_perm=ip)
+        elif algorithm == "pga":
+            p, f, _ = genetic.run_pga(C, M, key, ga_cfg,
+                                      self.num_processes, init_perm=ip)
         else:
             p, f, _ = composite.run_pca(
                 C, M, key, composite.CompositeConfig(
-                    sa=self.sa_cfg, ga=self.ga_cfg), self.num_processes)
+                    sa=sa_cfg, ga=ga_cfg), self.num_processes, init_perm=ip)
         if self.polish_rounds > 0:
             p, f = mapping_lib.polish(C, M, p, jax.random.fold_in(key, 7),
                                       self.polish_rounds)
-        self.stats.solver_batches += 1
-        self.stats.solver_calls += 1
+        with self._lock:
+            self.stats.solver_batches += 1
+            self.stats.solver_calls += 1
         return np.asarray(p, np.int32), float(f)
 
-    def _dispatch(self, algorithm: str, Cs, Ms, keys, nvs):
+    def _dispatch(self, algorithm: str, tier: str, Cs, Ms, keys, nvs, ips):
+        sa_cfg, ga_cfg = self._tier_cfgs[tier]
         if algorithm == "psa":
-            p, f, _ = annealing.run_psa_batch(Cs, Ms, keys, self.sa_cfg,
+            p, f, _ = annealing.run_psa_batch(Cs, Ms, keys, sa_cfg,
                                               self.num_processes,
-                                              n_valid=nvs)
+                                              n_valid=nvs, init_perm=ips)
         elif algorithm == "pga":
-            p, f, _ = genetic.run_pga_batch(Cs, Ms, keys, self.ga_cfg,
-                                            self.num_processes, n_valid=nvs)
+            p, f, _ = genetic.run_pga_batch(Cs, Ms, keys, ga_cfg,
+                                            self.num_processes, n_valid=nvs,
+                                            init_perm=ips)
         else:
             p, f, _ = composite.run_pca_batch(
                 Cs, Ms, keys, composite.CompositeConfig(
-                    sa=self.sa_cfg, ga=self.ga_cfg),
-                self.num_processes, n_valid=nvs)
+                    sa=sa_cfg, ga=ga_cfg),
+                self.num_processes, n_valid=nvs, init_perm=ips)
         return p, f

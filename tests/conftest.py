@@ -1,0 +1,14 @@
+"""Shared fixtures for the test suite."""
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def fresh_placement_engine():
+    """The launcher's mapping engine is a module global; reset it around
+    every test so one test's LRU cache, warm-start state, or stats can
+    never leak into another (and a started flusher thread never outlives
+    its test)."""
+    from repro.launch import placement
+    placement.reset_engine()
+    yield
+    placement.reset_engine()

@@ -1,0 +1,117 @@
+"""ClusterState: occupancy, induced subgraphs, allocation policies."""
+import numpy as np
+import pytest
+
+from repro.core import instances
+from repro.serve.cluster import Allocation, ClusterState
+
+
+def _grid_cluster(dims=(2, 2, 2), policy="compact"):
+    return ClusterState(instances.grid_distance_matrix(dims), policy=policy)
+
+
+def test_allocate_release_roundtrip_and_occupancy():
+    cl = _grid_cluster()
+    assert cl.num_free == 8 and cl.utilization == 0.0
+    a = cl.allocate("j1", 3)
+    assert a is not None and a.size == 3
+    assert cl.num_free == 5
+    b = cl.allocate("j2", 5)
+    assert b is not None and cl.num_free == 0 and cl.utilization == 1.0
+    # disjointness: no node handed to two jobs
+    assert not set(a.nodes.tolist()) & set(b.nodes.tolist())
+    assert cl.allocate("j3", 1) is None          # full: caller must wait
+    cl.release("j1")
+    assert cl.num_free == 3
+    c = cl.allocate("j3", 3)
+    assert c is not None and set(c.nodes.tolist()) == set(a.nodes.tolist())
+
+
+def test_induced_subgraph_matches_full_matrix():
+    M = instances.grid_distance_matrix((2, 2, 3))
+    cl = ClusterState(M)
+    cl.allocate("occupied", 5)                   # force a non-trivial subset
+    a = cl.allocate("j", 4)
+    np.testing.assert_array_equal(a.M_sub, M[np.ix_(a.nodes, a.nodes)])
+    # the subgraph is the job's own copy: mutating it can't corrupt M
+    a.M_sub[:] = -1
+    np.testing.assert_array_equal(cl.M, M)
+
+
+def test_compact_policy_is_tighter_than_first_fit_after_fragmentation():
+    """After fragmenting the free set, the compact policy must pick a
+    subset with no larger total internal distance than first-fit."""
+    M = instances.grid_distance_matrix((3, 3, 3))
+    rng = np.random.default_rng(0)
+    scattered = rng.choice(27, size=13, replace=False)  # occupied nodes
+    costs = {}
+    for policy in ("compact", "first_fit"):
+        cl = ClusterState(M, policy=policy)
+        for node in scattered:                   # fragment the free set
+            cl._free[node] = False
+        a = cl.allocate("j", 8)
+        costs[policy] = M[np.ix_(a.nodes, a.nodes)].sum()
+        assert not set(a.nodes.tolist()) & set(scattered.tolist())
+    assert costs["compact"] <= costs["first_fit"]
+
+
+def test_physical_mapping_translates_local_perm():
+    cl = _grid_cluster()
+    cl.allocate("other", 2)
+    a = cl.allocate("j", 4)
+    perm = np.array([2, 0, 3, 1], np.int32)
+    phys = a.physical(perm)
+    np.testing.assert_array_equal(phys, a.nodes[perm])
+    assert set(phys.tolist()) == set(a.nodes.tolist())
+
+
+def test_cluster_error_paths():
+    cl = _grid_cluster()
+    with pytest.raises(ValueError):
+        cl.allocate("j", 0)
+    with pytest.raises(ValueError):
+        cl.allocate("j", 99)
+    cl.allocate("j", 2)
+    with pytest.raises(ValueError):
+        cl.allocate("j", 2)                      # double allocation
+    with pytest.raises(KeyError):
+        cl.release("ghost")
+    with pytest.raises(ValueError):
+        ClusterState(np.zeros((3, 4), np.float32))
+    with pytest.raises(ValueError):
+        ClusterState(np.zeros((4, 4), np.float32), policy="nope")
+
+
+def test_allocation_lookup():
+    cl = _grid_cluster()
+    a = cl.allocate("j", 3)
+    assert cl.allocation("j") is a
+    assert cl.allocation("ghost") is None
+    cl.release("j")
+    assert cl.allocation("j") is None
+
+
+def test_cluster_drives_mapping_engine_subset_instances():
+    """End-to-end slice of the scheduler loop: allocate -> map the induced
+    subgraph -> translate to physical nodes -> release."""
+    from repro.core import annealing
+    from repro.serve.mapper import MappingEngine
+
+    cl = _grid_cluster((2, 2, 2))
+    cl.allocate("other", 3)                      # engine sees a true subset
+    a = cl.allocate("job", 4)
+    n = a.size
+    C = np.zeros((n, n), np.float32)
+    for k in range(n):
+        C[k, (k + 1) % n] = C[(k + 1) % n, k] = 10.0
+    eng = MappingEngine(num_processes=2,
+                        sa_cfg=annealing.SAConfig(
+                            max_neighbors=10, iters_per_exchange=8,
+                            num_exchanges=4, solvers=4))
+    r = eng.map_one(C, a.M_sub, "psa", job_id="job")
+    assert r.objective <= r.baseline + 1e-6
+    phys = a.physical(r.perm)
+    assert set(phys.tolist()) == set(a.nodes.tolist())
+    cl.release("job")
+    cl.release("other")
+    assert cl.num_free == 8

@@ -1,11 +1,12 @@
-"""Batched mapping engine: batch==sequential equality, cache, padding."""
+"""Batched mapping engine: batch==sequential equality, cache, padding,
+async futures/flusher, deadline policy, and warm starts."""
 import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.core import annealing, composite, genetic, qap
-from repro.serve.mapper import MapRequest, MappingEngine
+from repro.core import annealing, composite, genetic, instances, qap
+from repro.serve.mapper import (DeadlinePolicy, MapRequest, MappingEngine)
 
 SA_SMALL = annealing.SAConfig(max_neighbors=10, iters_per_exchange=8,
                               num_exchanges=4, solvers=4)
@@ -254,3 +255,257 @@ def test_engine_rejects_bad_requests():
         eng.submit(MapRequest(job_id="x", C=C, M=M, algorithm="nope"))
     with pytest.raises(ValueError):
         eng.submit(MapRequest(job_id="x", C=C[:4], M=M))
+    # non-numeric / complex matrices must be rejected in the caller's
+    # thread, not explode later inside the flusher
+    with pytest.raises(ValueError):
+        eng.submit(MapRequest(job_id="x", C=C.astype(np.complex64), M=M))
+    with pytest.raises(ValueError):
+        eng.submit(MapRequest(job_id="x", C=C.astype(object), M=M))
+
+
+# --------------------------------------------------- (d) futures + flusher
+def _engine(**kw):
+    kw.setdefault("num_processes", 2)
+    kw.setdefault("sa_cfg", SA_SMALL)
+    kw.setdefault("ga_cfg", GA_SMALL)
+    return MappingEngine(**kw)
+
+
+def test_async_flusher_matches_manual_flush_bitwise():
+    """Acceptance: for a fixed request set and seeds, MapFuture.result()
+    values equal a manual flush() of the same engine config."""
+    reqs = []
+    for i, n in enumerate([8, 12, 12, 20]):     # spans two default buckets
+        C, M = _instance(n, 100 + i)            # distinct instances
+        reqs.append(MapRequest(job_id=f"j{i}", C=C, M=M, seed=i))
+
+    ea = _engine(flush_deadline_ms=150.0)
+    ea.start()
+    futs = [ea.submit(r) for r in reqs]
+    async_out = {r.job_id: f.result(timeout=120) for r, f in zip(reqs, futs)}
+    ea.stop()
+
+    eb = _engine()
+    for r in reqs:
+        eb.submit(r)
+    sync_out = eb.flush()
+
+    for r in reqs:
+        a, b = async_out[r.job_id], sync_out[r.job_id]
+        assert np.float64(a.objective).tobytes() == \
+            np.float64(b.objective).tobytes()
+        np.testing.assert_array_equal(a.perm, b.perm)
+        assert a.bucket == b.bucket and a.algorithm == b.algorithm
+
+
+def test_flusher_dispatches_on_full_bucket_and_deadline():
+    # full bucket: three same-group requests with a huge deadline dispatch
+    # as soon as the group reaches max_batch
+    eng = _engine(flush_deadline_ms=60_000.0, max_batch=3)
+    eng.start()
+    futs = [eng.submit(MapRequest(job_id=f"b{i}", C=C, M=M, seed=i))
+            for i, (C, M) in enumerate(_instance(8, 70 + i)
+                                       for i in range(3))]
+    out = [f.result(timeout=120) for f in futs]
+    assert eng.stats.full_bucket_flushes >= 1
+    assert all(r.batch_size == 3 for r in out)
+
+    # deadline: a lone request (never a full group) still resolves
+    C, M = _instance(8, 80)
+    fut = eng.submit(MapRequest(job_id="lone", C=C, M=M))
+    r = fut.result(timeout=120)
+    assert eng.stats.deadline_flushes >= 1
+    assert sorted(r.perm.tolist()) == list(range(8))
+    eng.stop()
+
+
+def test_stop_flushes_pending_futures():
+    eng = _engine(flush_deadline_ms=60_000.0, max_batch=64)
+    eng.start()
+    C, M = _instance(10, 90)
+    fut = eng.submit(MapRequest(job_id="p", C=C, M=M))
+    eng.stop()                     # drains the queue; future must resolve
+    assert fut.done()
+    assert sorted(fut.result().perm.tolist()) == list(range(10))
+
+
+def test_map_one_blocks_on_running_flusher():
+    with _engine(flush_deadline_ms=10.0) as eng:
+        C, M = _instance(9, 91)
+        r = eng.map_one(C, M, "psa", job_id="m1")
+        assert sorted(r.perm.tolist()) == list(range(9))
+        assert r.objective <= r.baseline + 1e-6
+
+
+# ------------------------------------------------- (e) deadline-aware policy
+def test_deadline_policy_resolution():
+    pol = DeadlinePolicy(tight_ms=200.0, slack_ms=2000.0)
+    assert pol.resolve("auto", 50.0) == ("psa", "tight")
+    assert pol.resolve("auto", 500.0) == ("psa", "default")
+    assert pol.resolve("auto", 5000.0) == ("pca", "default")
+    assert pol.resolve("auto", None) == ("psa", "default")
+    # explicit algorithm honored; deadline only picks the budget tier
+    assert pol.resolve("pga", 50.0) == ("pga", "tight")
+    assert pol.resolve("pca", 5000.0) == ("pca", "default")
+
+
+def test_engine_applies_policy_and_tier_budget():
+    eng = _engine()
+    C, M = _instance(12, 21)
+    r = eng.map_one(C, M, "auto", job_id="t", deadline_ms=50.0)
+    assert r.algorithm == "psa" and r.tier == "tight"
+    assert sorted(r.perm.tolist()) == list(range(12))
+    # tight and default tiers are distinct cache entries (different budget)
+    r2 = eng.map_one(C, M, "psa", job_id="d")
+    assert not r2.cached and r2.tier == "default"
+
+
+# ------------------------------------------------------- (f) two-tier cache
+def test_cache_seed_semantics():
+    """Same instance + different seed => independent solve; repeating the
+    same seed => cache hit (the oversize/cache_seed satellite)."""
+    eng = _engine()
+    C, M = _instance(12, 33)
+    r1 = eng.map_one(C, M, "psa", job_id="s0", seed=0, cache_seed=True)
+    assert not r1.cached and eng.stats.solver_calls == 1
+    r2 = eng.map_one(C, M, "psa", job_id="s1", seed=1, cache_seed=True)
+    assert not r2.cached and eng.stats.solver_calls == 2
+    # restart sweeps must stay independent: no near-miss warm seeding
+    assert not r2.warm_start
+    r3 = eng.map_one(C, M, "psa", job_id="s1b", seed=1, cache_seed=True)
+    assert r3.cached and eng.stats.solver_calls == 2
+    np.testing.assert_array_equal(r2.perm, r3.perm)
+
+
+def test_warm_start_from_near_miss_shape():
+    """Same order + system graph, different flows: the shape tier seeds
+    the new solve instead of serving it."""
+    eng = _engine()
+    C1, M = _instance(12, 40)
+    C2, _ = _instance(12, 41)                   # same M, different flows
+    r1 = eng.map_one(C1, M, "psa", job_id="a")
+    assert not r1.warm_start
+    r2 = eng.map_one(C2, M, "psa", job_id="b")
+    assert not r2.cached and r2.warm_start
+    assert eng.stats.warm_starts == 1
+    assert sorted(r2.perm.tolist()) == list(range(12))
+
+
+def test_warm_start_never_worse_than_cold_known_optimum():
+    """Acceptance: warm-start never returns a worse objective than the cold
+    solve on the same budget (known-optimum make_taie orders)."""
+    inst = instances.make_taie(12)
+    C, M = jnp.asarray(inst.C), jnp.asarray(inst.M)
+    key = jax.random.PRNGKey(3)
+    cold_p, cold_f, _ = annealing.run_psa(C, M, key, SA_SMALL,
+                                          num_processes=2)
+    # seeded with its own cold solution: can only stay equal or improve
+    warm_p, warm_f, _ = annealing.run_psa(C, M, key, SA_SMALL,
+                                          num_processes=2, init_perm=cold_p)
+    assert float(warm_f) <= float(cold_f) + 1e-6
+    # seeded with the known optimum: must return the optimum
+    opt_p, opt_f, _ = annealing.run_psa(
+        C, M, key, SA_SMALL, num_processes=2,
+        init_perm=jnp.asarray(inst.opt_perm))
+    assert float(opt_f) == pytest.approx(inst.optimum, rel=1e-6)
+    assert float(opt_f) <= float(cold_f) + 1e-6
+    # same guarantee through the GA and composite warm paths
+    ga_f = genetic.run_pga(C, M, key, GA_SMALL, num_processes=2,
+                           init_perm=jnp.asarray(inst.opt_perm))[1]
+    assert float(ga_f) == pytest.approx(inst.optimum, rel=1e-6)
+    pca_f = composite.run_pca(
+        C, M, key, composite.CompositeConfig(
+            sa=annealing.SAConfig(max_neighbors=6, iters_per_exchange=4,
+                                  num_exchanges=2, solvers=0),
+            ga=GA_SMALL),
+        num_processes=2, init_perm=jnp.asarray(inst.opt_perm))[1]
+    assert float(pca_f) == pytest.approx(inst.optimum, rel=1e-6)
+    # total-replacement GA config (n_offspring == pop_size): the elitism
+    # guard must still keep the seeded optimum from regressing
+    ga_total = genetic.GAConfig(generations=10, pop_size=4, n_offspring=4)
+    gt_f = genetic.run_pga(C, M, key, ga_total, num_processes=2,
+                           init_perm=jnp.asarray(inst.opt_perm))[1]
+    assert float(gt_f) == pytest.approx(inst.optimum, rel=1e-6)
+
+
+def test_warm_sentinel_keeps_cold_rows_bitwise():
+    """A batch mixing warm and cold rows must leave the cold rows exactly
+    as a cold-only batch computes them (the -1 sentinel)."""
+    sizes = [10, 10]
+    Cs, Ms, nvs, keys = _padded_batch(sizes, bucket=16, seed0=60)
+    ip = np.full((2, 16), -1, np.int32)
+    ip[0, :10] = np.random.default_rng(0).permutation(10)
+    ip[0, 10:] = np.arange(10, 16)
+    wp, wf, _ = annealing.run_psa_batch(Cs, Ms, keys, SA_SMALL,
+                                        num_processes=2, n_valid=nvs,
+                                        init_perm=jnp.asarray(ip))
+    cp, cf, _ = annealing.run_psa_batch(Cs, Ms, keys, SA_SMALL,
+                                        num_processes=2, n_valid=nvs)
+    assert np.asarray(wf)[1].tobytes() == np.asarray(cf)[1].tobytes()
+    np.testing.assert_array_equal(np.asarray(wp)[1], np.asarray(cp)[1])
+
+    # the sentinel must also preserve the config's own seeding: under
+    # seed_with="identity" a cold row keeps the identity-seeded chain 0
+    from dataclasses import replace
+    sa_id = replace(SA_SMALL, seed_with="identity")
+    wi = annealing.run_psa_batch(Cs, Ms, keys, sa_id, num_processes=2,
+                                 n_valid=nvs, init_perm=jnp.asarray(ip))
+    ci = annealing.run_psa_batch(Cs, Ms, keys, sa_id, num_processes=2,
+                                 n_valid=nvs)
+    assert np.asarray(wi[1])[1].tobytes() == np.asarray(ci[1])[1].tobytes()
+    np.testing.assert_array_equal(np.asarray(wi[0])[1], np.asarray(ci[0])[1])
+
+
+def test_oversize_path_warm_start_and_cache_seed():
+    """bucket=None (n > max bucket): exact-size solve, warm starts, and
+    cache_seed semantics all apply to the oversize path too."""
+    eng = _engine(buckets=(8,))
+    C1, M = _instance(12, 9)
+    C2, _ = _instance(12, 10)
+    r1 = eng.map_one(C1, M, "psa", job_id="o1")
+    assert r1.bucket is None and not r1.warm_start
+    r2 = eng.map_one(C2, M, "psa", job_id="o2")
+    assert r2.bucket is None and r2.warm_start
+    assert sorted(r2.perm.tolist()) == list(range(12))
+    # cache_seed on the oversize path: distinct seeds solve independently
+    r3 = eng.map_one(C1, M, "psa", job_id="o3", seed=5, cache_seed=True)
+    assert r3.bucket is None and not r3.cached
+    r4 = eng.map_one(C1, M, "psa", job_id="o4", seed=5, cache_seed=True)
+    assert r4.cached
+
+
+# -------------------------------------------- (g) honest throughput figures
+def test_seconds_amortized_and_batch_size():
+    eng = _engine()
+    reqs = [MapRequest(job_id=f"j{i}", C=C, M=M, seed=i)
+            for i, (C, M) in enumerate(_instance(10, 110 + i)
+                                       for i in range(3))]
+    for r in reqs:
+        eng.submit(r)
+    out = eng.flush()
+    secs = {out[f"j{i}"].seconds for i in range(3)}
+    assert len(secs) == 1                  # same group => same amortized cost
+    assert all(out[f"j{i}"].batch_size == 3 for i in range(3))
+    assert secs.pop() > 0.0
+    # a cache hit costs no solver time and belongs to no dispatch
+    hit = eng.map_one(*_instance(10, 110), "psa", job_id="h")
+    assert hit.cached and hit.seconds == 0.0 and hit.batch_size == 0
+
+
+def test_batch_padding_pow2_is_bitwise_invisible():
+    """pad_batches pads the instance axis to the next power of two with
+    dummy rows; results must equal the unpadded dispatch bitwise."""
+    reqs = [MapRequest(job_id=f"j{i}", C=C, M=M, seed=i)
+            for i, (C, M) in enumerate(_instance(9, 130 + i)
+                                       for i in range(3))]
+    e1 = _engine(pad_batches=True)
+    e2 = _engine(pad_batches=False)
+    for r in reqs:
+        e1.submit(r)
+        e2.submit(r)
+    o1, o2 = e1.flush(), e2.flush()
+    for i in range(3):
+        a, b = o1[f"j{i}"], o2[f"j{i}"]
+        assert np.float64(a.objective).tobytes() == \
+            np.float64(b.objective).tobytes()
+        np.testing.assert_array_equal(a.perm, b.perm)

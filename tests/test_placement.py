@@ -109,6 +109,40 @@ def test_placement_improves_cross_pod_traffic():
     assert qap.is_permutation(jax.numpy.asarray(res.perm))
 
 
+def test_reset_engine_drains_queued_futures():
+    """A queued-but-unflushed placement future must not be left hanging
+    when the module-global engine is torn down (fixture teardown path)."""
+    rng = np.random.default_rng(0)
+    c = rng.random((6, 6)).astype(np.float32)
+    c = c + c.T
+    np.fill_diagonal(c, 0)
+    m = rng.random((6, 6)).astype(np.float32)
+    m = m + m.T
+    np.fill_diagonal(m, 0)
+    fut = pl.submit_placement(c, m, "psa", job_id="queued")
+    pl.reset_engine()
+    assert fut.done()
+    res = pl.placement_result(fut)
+    assert sorted(res.perm.tolist()) == list(range(6))
+
+
+def test_streaming_placement_futures_with_flusher():
+    """submit_placement + running flusher: futures resolve on the deadline
+    and match the synchronous result for the same instance and key."""
+    spec = tpu.PodSpec(side_x=2, side_y=1, num_pods=1)
+    m = tpu.distance_matrix(spec)
+    c = np.zeros((2, 2), np.float32)
+    c[0, 1] = 5.0
+    pl.get_engine().start()
+    try:
+        fut = pl.submit_placement(c, m, "psa", key=jax.random.PRNGKey(0),
+                                  job_id="s")
+        res = pl.placement_result(fut, timeout=120)
+    finally:
+        pl.get_engine().stop()
+    assert res.cost_after == pytest.approx(res.cost_before)
+
+
 def test_placement_identity_when_already_optimal():
     spec = tpu.PodSpec(side_x=2, side_y=1, num_pods=1)
     m = tpu.distance_matrix(spec)
