@@ -24,7 +24,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import annealing
+from repro.core import annealing, batch_sharded
 from repro.serve.mapper import MapRequest, MappingEngine
 
 try:                                     # package form (benchmarks.run)
@@ -57,7 +57,7 @@ def pad_batch(insts, bucket):
 
 
 def bench(batch: int, n: int, bucket: int, cfg: annealing.SAConfig,
-          num_processes: int, repeats: int):
+          num_processes: int, repeats: int, mesh=None):
     insts = [random_instance(n, 100 + i) for i in range(batch)]
     keys = jnp.stack([jax.random.PRNGKey(i) for i in range(batch)])
     Cs, Ms, nvs = pad_batch(insts, bucket)
@@ -79,8 +79,19 @@ def bench(batch: int, n: int, bucket: int, cfg: annealing.SAConfig,
         jax.block_until_ready(out)
         return out
 
-    run_seq()                      # compile both programs before timing
+    # --- mesh-sharded: same wave, instance axis over the mesh devices ---
+    def run_sharded():
+        out = batch_sharded.run_psa_batch_sharded(
+            Cs, Ms, keys, cfg, num_processes, n_valid=nvs, mesh=mesh)
+        jax.block_until_ready(out)
+        return out
+
+    run_seq()                      # compile all programs before timing
     run_batch()
+    t_sharded = None
+    if mesh is not None:
+        run_sharded()
+        t_sharded = min(_timed(run_sharded) for _ in range(repeats))
 
     t_seq = min(_timed(run_seq) for _ in range(repeats))
     t_batch = min(_timed(run_batch) for _ in range(repeats))
@@ -88,7 +99,7 @@ def bench(batch: int, n: int, bucket: int, cfg: annealing.SAConfig,
     # --- engine end-to-end (queue + pad + dispatch + cache admin) -------
     def run_engine():
         eng = MappingEngine(buckets=(bucket,), num_processes=num_processes,
-                            sa_cfg=cfg, polish_rounds=0)
+                            sa_cfg=cfg, polish_rounds=0, mesh=mesh)
         for i, (C, M) in enumerate(insts):
             eng.submit(MapRequest(job_id=f"j{i}", C=C, M=M, seed=i))
         return eng.flush()
@@ -101,8 +112,11 @@ def bench(batch: int, n: int, bucket: int, cfg: annealing.SAConfig,
     seq_f = np.array([float(f) for _, f in seq_out])
     batch_f = np.asarray(batch_out[1])
     assert np.array_equal(seq_f, batch_f), (seq_f, batch_f)
+    if mesh is not None:      # ...and neither does sharding the batch axis
+        sharded_f = np.asarray(run_sharded()[1])
+        assert np.array_equal(batch_f, sharded_f), (batch_f, sharded_f)
 
-    return t_seq, t_batch, t_engine
+    return t_seq, t_batch, t_engine, t_sharded
 
 
 def _timed(fn):
@@ -122,6 +136,10 @@ def main():
     ap.add_argument("--num-exchanges", type=int, default=3)
     ap.add_argument("--solvers", type=int, default=4)
     ap.add_argument("--num-processes", type=int, default=2)
+    ap.add_argument("--mesh-shape", type=int, default=None, metavar="N",
+                    help="also time the wave sharded over an N-device "
+                         "instance mesh (CPU: set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--json", default="BENCH_mapper.json",
                     help="merge results into this JSON file ('' disables)")
     ap.add_argument("--dry-run", action="store_true",
@@ -137,12 +155,23 @@ def main():
     if args.batch < 1 or args.repeats < 1:
         ap.error("--batch and --repeats must be >= 1")
 
+    mesh = None
+    if args.mesh_shape is not None:
+        from repro.launch.mesh import make_instance_mesh
+        if args.mesh_shape > jax.device_count():
+            ap.error(f"--mesh-shape {args.mesh_shape} exceeds the "
+                     f"{jax.device_count()} visible devices; on CPU set "
+                     "XLA_FLAGS=--xla_force_host_platform_device_count="
+                     f"{args.mesh_shape}")
+        mesh = make_instance_mesh(args.mesh_shape)
+
     cfg = annealing.SAConfig(max_neighbors=args.neighbors,
                              iters_per_exchange=args.iters_per_exchange,
                              num_exchanges=args.num_exchanges,
                              solvers=args.solvers)
-    t_seq, t_batch, t_engine = bench(args.batch, args.n, args.bucket, cfg,
-                                     args.num_processes, args.repeats)
+    t_seq, t_batch, t_engine, t_sharded = bench(
+        args.batch, args.n, args.bucket, cfg, args.num_processes,
+        args.repeats, mesh=mesh)
     B = args.batch
     print(f"instances: {B} x n={args.n} (bucket {args.bucket}), "
           f"SA budget: {cfg.max_neighbors} neighbors x "
@@ -150,16 +179,21 @@ def main():
           f"{cfg.solvers} solvers x {args.num_processes} processes")
     print(f"sequential loop : {t_seq:.4f} s  ({B / t_seq:8.1f} mappings/s)")
     print(f"batched solve   : {t_batch:.4f} s  ({B / t_batch:8.1f} mappings/s)")
+    if t_sharded is not None:
+        print(f"sharded solve   : {t_sharded:.4f} s  "
+              f"({B / t_sharded:8.1f} mappings/s)  "
+              f"[{args.mesh_shape}-device mesh]")
     print(f"engine flush    : {t_engine:.4f} s  ({B / t_engine:8.1f} mappings/s)")
     print(f"speedup (batched vs sequential): {t_seq / t_batch:.2f}x")
     if args.json:
-        common.write_bench_json(args.json, "throughput", {
+        payload = {
             "config": {"batch": B, "n": args.n, "bucket": args.bucket,
                        "neighbors": cfg.max_neighbors,
                        "iters_per_exchange": cfg.iters_per_exchange,
                        "num_exchanges": cfg.num_exchanges,
                        "solvers": cfg.solvers,
                        "num_processes": args.num_processes,
+                       "mesh_shape": args.mesh_shape,
                        "repeats": args.repeats, "dry_run": args.dry_run},
             "sequential_s": t_seq, "batched_s": t_batch,
             "engine_s": t_engine,
@@ -167,8 +201,14 @@ def main():
             "batched_mappings_per_s": B / t_batch,
             "engine_mappings_per_s": B / t_engine,
             "speedup_batched_vs_sequential": t_seq / t_batch,
-        })
-        print(f"wrote {args.json} [throughput]")
+        }
+        if t_sharded is not None:
+            payload["sharded_s"] = t_sharded
+            payload["sharded_mappings_per_s"] = B / t_sharded
+            payload["speedup_sharded_vs_batched"] = t_batch / t_sharded
+        section = "throughput" if mesh is None else "throughput_mesh"
+        common.write_bench_json(args.json, section, payload)
+        print(f"wrote {args.json} [{section}]")
     if args.dry_run:
         print("dry-run OK")
 

@@ -1,0 +1,119 @@
+"""Regenerate README.md's benchmark table from BENCH_mapper.json.
+
+The benchmarks (``mapper_throughput.py``, ``scheduler_sim.py``) merge
+machine-readable results into ``BENCH_mapper.json``; this script renders
+the sections it finds into a markdown table and splices it between the
+``BENCH_TABLE_START`` / ``BENCH_TABLE_END`` markers in ``README.md``.
+
+Usage:
+    PYTHONPATH=src python benchmarks/readme_table.py
+    PYTHONPATH=src python benchmarks/readme_table.py --check   # CI: no write
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+START = "<!-- BENCH_TABLE_START -->"
+END = "<!-- BENCH_TABLE_END -->"
+
+
+def _fmt(x, nd=2):
+    return f"{x:.{nd}f}" if isinstance(x, (int, float)) else "--"
+
+
+def render_table(data: dict) -> str:
+    rows = []
+    for key in ("throughput", "throughput_mesh"):
+        sec = data.get(key)
+        if not sec:
+            continue
+        cfg = sec.get("config", {})
+        mesh = cfg.get("mesh_shape")
+        label = "batched solve" if mesh is None else \
+            f"batched solve, {mesh}-device mesh"
+        what = (f"{cfg.get('batch', '?')} x n={cfg.get('n', '?')} "
+                f"(bucket {cfg.get('bucket', '?')})")
+        if mesh is None:
+            # baseline: the sequential per-instance loop
+            base = sec.get("sequential_mappings_per_s")
+            best = sec.get("batched_mappings_per_s")
+            speed = sec.get("speedup_batched_vs_sequential")
+        else:
+            # baseline: the single-device batched solve of the same wave
+            base = sec.get("batched_mappings_per_s")
+            best = sec.get("sharded_mappings_per_s")
+            speed = sec.get("speedup_sharded_vs_batched")
+        rows.append((label, what, _fmt(base, 1), _fmt(best, 1),
+                     _fmt(speed)))
+    for key in ("scheduler_sim", "scheduler_sim_mesh"):
+        sec = data.get(key)
+        if not sec:
+            continue
+        cfg = sec.get("config", {})
+        mesh = cfg.get("mesh_shape")
+        label = "scheduler stream (async)" if mesh is None else \
+            f"scheduler stream (async, {mesh}-device mesh)"
+        what = (f"{cfg.get('jobs', '?')} jobs, sizes "
+                f"{tuple(cfg.get('sizes', []))}, "
+                f"{cfg.get('arrival_rate', '?')}/s")
+        seq = sec.get("sequential", {})
+        asy = sec.get("async", {})
+        rows.append((label, what,
+                     _fmt(seq.get("mapped_jobs_per_s"), 1),
+                     _fmt(asy.get("mapped_jobs_per_s"), 1),
+                     _fmt(sec.get("throughput_speedup"))))
+    if not rows:
+        return "_No benchmark results recorded yet — run the commands above._"
+    out = ["| benchmark | workload | baseline (maps/s) | this path (maps/s) "
+           "| speedup |",
+           "|---|---|---|---|---|"]
+    out += [f"| {a} | {b} | {c} | {d} | {e}x |" for a, b, c, d, e in rows]
+    return "\n".join(out)
+
+
+def splice(readme: str, table: str) -> str:
+    try:
+        head, rest = readme.split(START, 1)
+        _, tail = rest.split(END, 1)
+    except ValueError:
+        raise SystemExit(f"README.md is missing the {START} / {END} markers")
+    return f"{head}{START}\n{table}\n{END}{tail}"
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default="BENCH_mapper.json")
+    ap.add_argument("--readme", default="README.md")
+    ap.add_argument("--check", action="store_true",
+                    help="render only; exit 1 if README would change")
+    args = ap.parse_args()
+
+    root = Path(__file__).resolve().parents[1]
+    json_path = root / args.json
+    readme_path = root / args.readme
+    data = {}
+    if json_path.exists():
+        data = json.loads(json_path.read_text())
+    table = render_table(data)
+    new = splice(readme_path.read_text(), table)   # validates the markers
+    if args.check:
+        if not json_path.exists():
+            # fresh checkout (the JSON is a CI artifact, not committed):
+            # only the markers and generator are checkable
+            print("no benchmark data; README markers OK")
+            return
+        if new != readme_path.read_text():
+            print("README.md benchmark table is out of date; rerun "
+                  "benchmarks/readme_table.py")
+            sys.exit(1)
+        print("README.md benchmark table up to date")
+        return
+    readme_path.write_text(new)
+    print(f"updated {args.readme} from {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,9 +20,17 @@ Reported per path: mapped-jobs/sec and p50/p99 mapping latency (submit ->
 future resolution).  Results are merged into ``BENCH_mapper.json`` under
 the ``"scheduler_sim"`` key (CI artifact; see ``--json``).
 
+With ``--mesh-shape N`` both engines dispatch their bucket waves sharded
+over an N-device instance mesh (``core.batch_sharded``) and results land
+under ``"scheduler_sim_mesh"`` instead, so sharded and unsharded runs can
+sit side by side in one JSON.  On a CPU-only box, emulate the devices
+first: ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+
 Usage:
     PYTHONPATH=src python benchmarks/scheduler_sim.py             # 50 jobs
     PYTHONPATH=src python benchmarks/scheduler_sim.py --dry-run   # CI smoke
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+        PYTHONPATH=src python benchmarks/scheduler_sim.py --mesh-shape 4
 """
 from __future__ import annotations
 
@@ -181,6 +189,10 @@ def main():
     ap.add_argument("--solvers", type=int, default=8)
     ap.add_argument("--polish-rounds", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh-shape", type=int, default=None, metavar="N",
+                    help="shard bucket waves over an N-device instance "
+                         "mesh (CPU: set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--json", default="BENCH_mapper.json",
                     help="merge results into this JSON file ('' disables)")
     ap.add_argument("--dry-run", action="store_true",
@@ -203,6 +215,16 @@ def main():
     if max(args.sizes) > M.shape[0]:
         ap.error(f"largest job ({max(args.sizes)}) exceeds cluster "
                  f"({M.shape[0]} nodes)")
+    mesh = None
+    if args.mesh_shape is not None:
+        import jax
+        from repro.launch.mesh import make_instance_mesh
+        if args.mesh_shape > jax.device_count():
+            ap.error(f"--mesh-shape {args.mesh_shape} exceeds the "
+                     f"{jax.device_count()} visible devices; on CPU set "
+                     "XLA_FLAGS=--xla_force_host_platform_device_count="
+                     f"{args.mesh_shape}")
+        mesh = make_instance_mesh(args.mesh_shape)
     sa_cfg = annealing.SAConfig(max_neighbors=args.neighbors,
                                 iters_per_exchange=args.iters_per_exchange,
                                 num_exchanges=args.num_exchanges,
@@ -216,11 +238,13 @@ def main():
         return MappingEngine(buckets=buckets, num_processes=2,
                              sa_cfg=sa_cfg, polish_rounds=args.polish_rounds,
                              flush_deadline_ms=args.flush_deadline_ms,
-                             max_batch=args.max_batch)
+                             max_batch=args.max_batch, mesh=mesh)
 
     print(f"{args.jobs} jobs over {M.shape[0]} nodes "
           f"({args.grid[0]}x{args.grid[1]}x{args.grid[2]}), sizes "
-          f"{tuple(args.sizes)}, {args.arrival_rate}/s arrivals")
+          f"{tuple(args.sizes)}, {args.arrival_rate}/s arrivals"
+          + (f", waves sharded over a {args.mesh_shape}-device mesh"
+             if mesh is not None else ""))
 
     # Untimed warmup: with pad_batches the engine only ever dispatches
     # power-of-two wave sizes up to max_batch, so pre-compiling
@@ -275,7 +299,9 @@ def main():
     print(f"async vs sequential throughput: {speedup:.2f}x")
 
     if args.json:
-        common.write_bench_json(args.json, "scheduler_sim", {
+        section = ("scheduler_sim" if mesh is None else
+                   "scheduler_sim_mesh")
+        common.write_bench_json(args.json, section, {
             "config": {"jobs": args.jobs, "grid": list(args.grid),
                        "sizes": list(args.sizes),
                        "arrival_rate": args.arrival_rate,
@@ -283,12 +309,13 @@ def main():
                        "deadline_ms": args.deadline_ms,
                        "flush_deadline_ms": args.flush_deadline_ms,
                        "max_batch": args.max_batch,
+                       "mesh_shape": args.mesh_shape,
                        "dry_run": args.dry_run},
             "sequential": results["sequential"],
             "async": results["async"],
             "throughput_speedup": speedup,
         })
-        print(f"wrote {args.json} [scheduler_sim]")
+        print(f"wrote {args.json} [{section}]")
     if args.dry_run:
         print("dry-run OK")
 

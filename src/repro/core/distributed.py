@@ -1,8 +1,8 @@
 """Mesh-distributed forms of the three mapping algorithms.
 
-The paper's MPI processes map onto mesh devices via ``shard_map`` (DESIGN.md
-S4): one device = one SA solver group / GA island.  Exchanges use JAX-native
-collectives instead of MPI:
+The paper's MPI processes map onto mesh devices via ``shard_map``
+(docs/DESIGN.md §4): one device = one SA solver group / GA island.
+Exchanges use JAX-native collectives instead of MPI:
 
   * PSA best-broadcast   -> ``lax.all_gather`` of (best_f, best_p) + argmin;
   * PGA ring migration   -> ``lax.ppermute`` with the ring permutation -- an

@@ -64,3 +64,23 @@ def make_local_mesh(axes: Tuple[str, ...] = ("data", "model")) -> Mesh:
     n = jax.device_count()
     shape = (1,) * (len(axes) - 1) + (n,)
     return make_mesh_with_devices(jax.devices(), shape, axes)
+
+
+def make_instance_mesh(num_devices: Optional[int] = None,
+                       axis: str = "instances") -> Mesh:
+    """1-D mesh for sharding a solver wave's *instance* axis
+    (``core.batch_sharded``, docs/DESIGN.md §7).
+
+    Takes the first ``num_devices`` devices (all of them by default).  On a
+    CPU-only box, ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    (set before jax initialises) emulates an N-device host so the sharded
+    dispatch path can be exercised and tested without accelerators.
+    """
+    avail = jax.devices()
+    n = len(avail) if num_devices is None else int(num_devices)
+    if n < 1 or n > len(avail):
+        raise ValueError(
+            f"num_devices={num_devices} not in [1, {len(avail)}] -- on CPU, "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=N before "
+            "jax initialises to emulate more devices")
+    return make_mesh_with_devices(avail[:n], (n,), (axis,))

@@ -75,29 +75,52 @@ _FAST_GA = genetic.GAConfig(generations=120, pop_size=64, seed_identity=True)
 
 
 _ENGINE: Optional[MappingEngine] = None
+_ENGINE_MESH: Optional[Mesh] = None
+_ENGINE_AXIS: str = "instances"
 
 
 def get_engine() -> MappingEngine:
     """Shared batched mapping engine for the launcher: repeated launches of
     the same job shape are served from its LRU cache, and concurrent
-    placements (``solve_placements``) are dispatched as one bucket batch."""
+    placements (``solve_placements``) are dispatched as one bucket batch.
+    ``configure_engine_mesh`` makes it dispatch waves mesh-sharded."""
     global _ENGINE
     if _ENGINE is None:
         _ENGINE = MappingEngine(num_processes=4, sa_cfg=_FAST_SA,
-                                ga_cfg=_FAST_GA)
+                                ga_cfg=_FAST_GA, mesh=_ENGINE_MESH,
+                                instance_axis=_ENGINE_AXIS)
     return _ENGINE
 
 
-def reset_engine() -> None:
-    """Tear down the module-global engine (stop its flusher, drop cache and
-    stats).  Test fixtures call this so one test's cache/stats can never
-    leak into another; the next ``get_engine()`` builds a fresh one."""
+def configure_engine_mesh(mesh: Optional[Mesh],
+                          instance_axis: str = "instances") -> None:
+    """Shard the shared engine's bucket waves over ``mesh``'s
+    ``instance_axis`` (``core.batch_sharded``); ``None`` restores the
+    single-device path.  Results are bitwise-identical either way, so this
+    is purely a throughput knob.  Rebuilds the engine (the mesh is fixed at
+    construction); any queued futures are drained first by ``stop()``."""
+    global _ENGINE_MESH, _ENGINE_AXIS
+    _ENGINE_MESH, _ENGINE_AXIS = mesh, instance_axis
+    _reset_engine_only()
+
+
+def _reset_engine_only() -> None:
     global _ENGINE
     if _ENGINE is not None:
         # unconditionally: stop() also drains a never-started engine's
         # queue, so no caller is left blocked on an unresolved future
         _ENGINE.stop()
         _ENGINE = None
+
+
+def reset_engine() -> None:
+    """Tear down the module-global engine (stop its flusher, drop cache and
+    stats) and restore the default (unsharded) mesh configuration.  Test
+    fixtures call this so one test's cache/stats/mesh can never leak into
+    another; the next ``get_engine()`` builds a fresh one."""
+    global _ENGINE_MESH, _ENGINE_AXIS
+    _ENGINE_MESH, _ENGINE_AXIS = None, "instances"
+    _reset_engine_only()
 
 
 def _seed_from_key(key) -> int:

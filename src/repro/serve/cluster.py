@@ -54,7 +54,21 @@ class Allocation:
 
 
 class ClusterState:
-    """Node occupancy + allocation over a fixed system graph."""
+    """Node occupancy + allocation over a fixed system graph.
+
+    Resource-manager integration: pair it with a
+    :class:`~repro.serve.mapper.MappingEngine` — allocate, map onto the
+    induced subgraph, translate the permutation back to physical nodes,
+    release when the job ends::
+
+        cluster = ClusterState(M_system)
+        alloc = cluster.allocate("job-0", size=32)     # None = queue it
+        fut = engine.submit(MapRequest(job_id="job-0",
+                                       C=flows, M=alloc.M_sub))
+        nodes = alloc.physical(fut.result().perm)      # process k -> node
+        ...                                            # job runs
+        cluster.release("job-0")
+    """
 
     def __init__(self, M: np.ndarray, policy: str = "compact"):
         M = np.asarray(M, np.float32)

@@ -32,8 +32,35 @@ resource manager's timeout.  The engine is built around that contract:
      solver chains with the cached permutation (``init_perm``), which the
      solvers guarantee never ends worse than the seed.
 
+  6. With a device ``mesh`` the engine shards each wave's instance axis
+     across ``mesh.shape[instance_axis]`` devices
+     (``core.batch_sharded.run_*_batch_sharded``): the wave is padded to a
+     multiple of the axis size, every device solves its local slice, and
+     results stay bitwise-equal to the single-device path -- batching
+     becomes real hardware parallelism instead of just dispatch
+     efficiency.
+
 Queue, cache, and stats are thread-safe; solves are serialized by a
 dispatch lock so the flusher and synchronous callers can coexist.
+
+Resource-manager integration (the paper's deployment loop; see
+``benchmarks/scheduler_sim.py`` for the full allocate -> map -> run ->
+release version)::
+
+    from repro.serve.cluster import ClusterState
+    from repro.serve.mapper import MapRequest, MappingEngine
+
+    cluster = ClusterState(M_system)          # machine distance matrix
+    with MappingEngine() as engine:           # starts the flusher thread
+        for job in scheduler_stream:
+            alloc = cluster.allocate(job.job_id, job.size)
+            fut = engine.submit(MapRequest(
+                job_id=job.job_id, C=job.traffic, M=alloc.M_sub,
+                algorithm="auto", deadline_ms=job.deadline_ms))
+            # ... keep admitting jobs; later:
+            resp = fut.result()               # process k -> local slot
+            nodes = alloc.physical(resp.perm)  # -> physical node ids
+            launch(job, nodes); cluster.release(job.job_id)
 
 Padding is exact, not approximate: flows touching padded slots are zeroed
 and the batched solvers keep real processes on real nodes (see
@@ -54,7 +81,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import annealing, composite, genetic, mapping as mapping_lib
+from repro.core import (annealing, batch_sharded, composite, genetic,
+                        mapping as mapping_lib)
 
 DEFAULT_BUCKETS = (32, 64, 128)
 
@@ -110,7 +138,16 @@ class MapResponse:
 
 class MapFuture:
     """Handle for one submitted request; resolved by a flush (either the
-    background flusher thread or an explicit :meth:`MappingEngine.flush`)."""
+    background flusher thread or an explicit :meth:`MappingEngine.flush`).
+
+    A scheduler loop typically keeps admitting jobs and polls ``done()``,
+    collecting each finished mapping with ``result(timeout)`` (which
+    re-raises the solve's exception, if any; ``exception()`` inspects it
+    without raising).  ``resolved_at`` is the ``time.monotonic()`` stamp of
+    resolution, so submit-to-resolve latency is
+    ``future.resolved_at - t_submit`` — this is what
+    ``benchmarks/scheduler_sim.py`` reports as mapping latency.
+    """
 
     __slots__ = ("_event", "_response", "_exception", "resolved_at")
 
@@ -217,6 +254,12 @@ class MappingEngine:
     configs are stable.  Call :meth:`start` to run the background flusher
     (or use the engine as a context manager); without it the engine
     behaves synchronously via :meth:`flush`.
+
+    With ``mesh`` (a ``jax.sharding.Mesh`` holding an ``instance_axis``
+    axis, e.g. from ``launch.mesh.make_instance_mesh``) every bucket wave
+    is dispatched with its instance axis sharded across the mesh devices
+    (``core.batch_sharded``) — bitwise-identical results, one wave solved
+    by N devices instead of one.
     """
 
     def __init__(self, buckets: Sequence[int] = DEFAULT_BUCKETS,
@@ -228,7 +271,9 @@ class MappingEngine:
                  max_batch: int = 32,
                  policy: Optional[DeadlinePolicy] = None,
                  warm_start: bool = True,
-                 pad_batches: bool = True):
+                 pad_batches: bool = True,
+                 mesh=None,
+                 instance_axis: str = batch_sharded.DEFAULT_AXIS):
         self.buckets = tuple(sorted(int(b) for b in buckets))
         if not self.buckets:
             raise ValueError("need at least one size bucket")
@@ -240,6 +285,16 @@ class MappingEngine:
         self.policy = policy or DeadlinePolicy()
         self.warm_start = bool(warm_start)
         self.pad_batches = bool(pad_batches)
+        # mesh: a jax.sharding.Mesh (or None).  Bucket waves then dispatch
+        # through core.batch_sharded, the instance axis sharded over
+        # mesh.shape[instance_axis]; results are bitwise-equal to the
+        # unsharded path, so the cache digest does not include the mesh.
+        if mesh is not None and instance_axis not in mesh.shape:
+            raise ValueError(
+                f"mesh has no axis {instance_axis!r}; "
+                f"axes: {tuple(mesh.shape)}")
+        self.mesh = mesh
+        self.instance_axis = instance_axis
         self.sa_cfg = sa_cfg or annealing.SAConfig(
             max_neighbors=25, iters_per_exchange=30, num_exchanges=20,
             solvers=8)
@@ -682,6 +737,9 @@ class MappingEngine:
 
     def _dispatch(self, algorithm: str, tier: str, Cs, Ms, keys, nvs, ips):
         sa_cfg, ga_cfg = self._tier_cfgs[tier]
+        if self.mesh is not None:
+            return self._dispatch_sharded(algorithm, sa_cfg, ga_cfg,
+                                          Cs, Ms, keys, nvs, ips)
         if algorithm == "psa":
             p, f, _ = annealing.run_psa_batch(Cs, Ms, keys, sa_cfg,
                                               self.num_processes,
@@ -695,4 +753,25 @@ class MappingEngine:
                 Cs, Ms, keys, composite.CompositeConfig(
                     sa=sa_cfg, ga=ga_cfg),
                 self.num_processes, n_valid=nvs, init_perm=ips)
+        return p, f
+
+    def _dispatch_sharded(self, algorithm: str, sa_cfg, ga_cfg,
+                          Cs, Ms, keys, nvs, ips):
+        """Mesh path: same wave, instance axis sharded over the mesh axis.
+        ``batch_sharded`` pads the wave to a multiple of the axis size and
+        trims the dummy rows, so callers see identical shapes and values."""
+        if algorithm == "psa":
+            p, f, _ = batch_sharded.run_psa_batch_sharded(
+                Cs, Ms, keys, sa_cfg, self.num_processes, n_valid=nvs,
+                init_perm=ips, mesh=self.mesh, axis=self.instance_axis)
+        elif algorithm == "pga":
+            p, f, _ = batch_sharded.run_pga_batch_sharded(
+                Cs, Ms, keys, ga_cfg, self.num_processes, n_valid=nvs,
+                init_perm=ips, mesh=self.mesh, axis=self.instance_axis)
+        else:
+            p, f, _ = batch_sharded.run_pca_batch_sharded(
+                Cs, Ms, keys, composite.CompositeConfig(
+                    sa=sa_cfg, ga=ga_cfg),
+                self.num_processes, n_valid=nvs, init_perm=ips,
+                mesh=self.mesh, axis=self.instance_axis)
         return p, f

@@ -1,0 +1,216 @@
+"""Mesh-sharded batch dispatch: sharded == unsharded bitwise, padding to
+mesh-multiple wave sizes, and the engine's mesh option.
+
+The single-device tests run the real shard_map path on a 1-device mesh
+(the code path is identical; only the axis size differs).  The genuinely
+multi-device equality check runs in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` -- the flag must be
+set before jax initialises, which the already-running test process cannot
+do -- unless the current process *already* sees multiple devices (the CI
+multi-device job), in which case it runs inline.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import annealing, batch_sharded, composite, genetic
+from repro.launch.mesh import make_instance_mesh
+from repro.serve.mapper import MapRequest, MappingEngine
+
+SA_SMALL = annealing.SAConfig(max_neighbors=6, iters_per_exchange=4,
+                              num_exchanges=3, solvers=2)
+GA_SMALL = genetic.GAConfig(generations=8, pop_size=8)
+
+
+def _instance(n, seed):
+    rng = np.random.default_rng(seed)
+    C = rng.integers(0, 10, (n, n)).astype(np.float32)
+    M = rng.integers(1, 10, (n, n)).astype(np.float32)
+    C, M = C + C.T, M + M.T
+    np.fill_diagonal(C, 0)
+    np.fill_diagonal(M, 0)
+    return C, M
+
+
+def _padded_batch(sizes, bucket, seed0=0):
+    B = len(sizes)
+    Cs = np.zeros((B, bucket, bucket), np.float32)
+    Ms = np.zeros((B, bucket, bucket), np.float32)
+    for i, n in enumerate(sizes):
+        C, M = _instance(n, seed0 + i)
+        Cs[i, :n, :n] = C
+        Ms[i, :n, :n] = M
+    keys = jnp.stack([jax.random.PRNGKey(10 + i) for i in range(B)])
+    return (jnp.asarray(Cs), jnp.asarray(Ms),
+            jnp.asarray(sizes, jnp.int32), keys)
+
+
+def _assert_bitwise(sharded, unsharded):
+    sp, sf, sh = sharded
+    up, uf, uh = unsharded
+    assert np.asarray(sf).tobytes() == np.asarray(uf).tobytes()
+    np.testing.assert_array_equal(np.asarray(sp), np.asarray(up))
+    np.testing.assert_array_equal(np.asarray(sh), np.asarray(uh))
+
+
+# ------------------------------------------------- sharded == unsharded
+def _equality_check(nshard):
+    """Shared body: all three solvers, mixed n_valid, warm starts, and a
+    wave size (5) that does not divide the mesh axis (forces padding)."""
+    mesh = make_instance_mesh(nshard)
+    sizes = [6, 8, 8, 5, 7]
+    Cs, Ms, nvs, keys = _padded_batch(sizes, bucket=8)
+    ips = np.full((len(sizes), 8), -1, np.int32)   # warm rows 0 and 3
+    for i in (0, 3):
+        n = sizes[i]
+        ips[i, :n] = np.roll(np.arange(n), 1)
+        ips[i, n:] = np.arange(n, 8)
+    ips = jnp.asarray(ips)
+
+    _assert_bitwise(
+        batch_sharded.run_psa_batch_sharded(
+            Cs, Ms, keys, SA_SMALL, 2, n_valid=nvs, init_perm=ips,
+            mesh=mesh),
+        annealing.run_psa_batch(Cs, Ms, keys, SA_SMALL, 2, n_valid=nvs,
+                                init_perm=ips))
+    _assert_bitwise(
+        batch_sharded.run_pga_batch_sharded(
+            Cs, Ms, keys, GA_SMALL, 2, n_valid=nvs, mesh=mesh),
+        genetic.run_pga_batch(Cs, Ms, keys, GA_SMALL, 2, n_valid=nvs))
+    pca_cfg = composite.CompositeConfig(sa=SA_SMALL, ga=GA_SMALL)
+    _assert_bitwise(
+        batch_sharded.run_pca_batch_sharded(
+            Cs, Ms, keys, pca_cfg, 2, n_valid=nvs, mesh=mesh),
+        composite.run_pca_batch(Cs, Ms, keys, pca_cfg, 2, n_valid=nvs))
+
+
+def test_sharded_matches_unsharded_single_device():
+    _equality_check(nshard=1)
+
+
+@pytest.mark.slow
+def test_sharded_matches_unsharded_multi_device():
+    """Bitwise equality on a real multi-device instance mesh."""
+    if jax.device_count() >= 4:
+        _equality_check(nshard=4)       # CI multi-device job: run inline
+        return
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH="src" + os.pathsep
+                          + os.environ.get("PYTHONPATH", ""))
+    proc = subprocess.run(
+        [sys.executable, __file__, "--multi-device-check"],
+        cwd=Path(__file__).resolve().parents[1], env=env,
+        capture_output=True, text=True, timeout=560)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "MULTI-DEVICE-OK" in proc.stdout, proc.stdout + proc.stderr
+
+
+# ------------------------------------------------------ padding helpers
+def test_round_up_to_multiple():
+    assert batch_sharded.round_up_to_multiple(5, 4) == 8
+    assert batch_sharded.round_up_to_multiple(8, 4) == 8
+    assert batch_sharded.round_up_to_multiple(1, 4) == 4
+    with pytest.raises(ValueError):
+        batch_sharded.round_up_to_multiple(3, 0)
+
+
+def test_pad_to_mesh_multiple_replicates_instance_zero():
+    sizes = [6, 8, 5]
+    Cs, Ms, nvs, keys = _padded_batch(sizes, bucket=8)
+    ips = jnp.asarray(np.full((3, 8), -1, np.int32))
+    pCs, pMs, pkeys, pnvs, pips, B = batch_sharded.pad_to_mesh_multiple(
+        Cs, Ms, keys, nvs, ips, multiple=4)
+    assert B == 3
+    for arr in (pCs, pMs, pkeys, pnvs, pips):
+        assert arr.shape[0] == 4
+    np.testing.assert_array_equal(np.asarray(pCs[3]), np.asarray(Cs[0]))
+    np.testing.assert_array_equal(np.asarray(pMs[3]), np.asarray(Ms[0]))
+    np.testing.assert_array_equal(np.asarray(pkeys[3]), np.asarray(keys[0]))
+    assert int(pnvs[3]) == sizes[0]
+    np.testing.assert_array_equal(np.asarray(pips[3]), np.asarray(ips[0]))
+
+
+def test_pad_to_mesh_multiple_noop_and_optional_args():
+    Cs, Ms, nvs, keys = _padded_batch([8, 8], bucket=8)
+    pCs, pMs, pkeys, pnvs, pips, B = batch_sharded.pad_to_mesh_multiple(
+        Cs, Ms, keys, None, None, multiple=2)
+    assert B == 2 and pCs is Cs and pnvs is None and pips is None
+    with pytest.raises(ValueError):
+        batch_sharded.pad_to_mesh_multiple(Cs[:0], Ms[:0], keys[:0],
+                                           None, None, multiple=2)
+
+
+def test_dispatch_rejects_unknown_axis():
+    mesh = make_instance_mesh(1)
+    Cs, Ms, nvs, keys = _padded_batch([8], bucket=8)
+    with pytest.raises(ValueError, match="no axis"):
+        batch_sharded.run_psa_batch_sharded(
+            Cs, Ms, keys, SA_SMALL, 2, n_valid=nvs, mesh=mesh,
+            axis="nope")
+
+
+# ------------------------------------------------------- engine integration
+def _engine_equality_check(nshard):
+    """Same request stream through a meshed and an unmeshed engine must
+    produce bitwise-identical permutations and objectives."""
+    mesh = make_instance_mesh(nshard)
+    reqs = []
+    M_shared = _instance(8, 99)[1]
+    for i in range(5):
+        C, _ = _instance(6 + (i % 2) * 2, 40 + i)
+        n = C.shape[0]
+        reqs.append(MapRequest(job_id=f"j{i}", C=C,
+                               M=M_shared[:n, :n], seed=i))
+    out = {}
+    for name, m in (("plain", None), ("mesh", mesh)):
+        eng = MappingEngine(buckets=(8,), num_processes=2,
+                            sa_cfg=SA_SMALL, polish_rounds=8, mesh=m)
+        for r in reqs:
+            eng.submit(r)
+        out[name] = eng.flush()
+    for jid in out["plain"]:
+        a, b = out["plain"][jid], out["mesh"][jid]
+        assert a.objective == b.objective
+        np.testing.assert_array_equal(a.perm, b.perm)
+        assert a.warm_start == b.warm_start
+
+
+def test_engine_mesh_matches_unsharded_engine():
+    _engine_equality_check(nshard=1)
+
+
+def test_engine_rejects_mesh_without_axis():
+    mesh = make_instance_mesh(1, axis="other")
+    with pytest.raises(ValueError, match="no axis"):
+        MappingEngine(mesh=mesh)
+
+
+def test_placement_configure_engine_mesh():
+    from repro.launch import placement
+    placement.configure_engine_mesh(make_instance_mesh(1))
+    try:
+        eng = placement.get_engine()
+        assert eng.mesh is not None
+        C, M = _instance(6, 3)
+        res = placement.solve_placement(C, M)
+        assert res.cost_after <= res.cost_before
+    finally:
+        placement.reset_engine()
+    assert placement.get_engine().mesh is None
+
+
+if __name__ == "__main__":
+    if "--multi-device-check" in sys.argv:
+        assert jax.device_count() >= 4, \
+            f"expected >=4 devices, got {jax.device_count()}"
+        _equality_check(nshard=4)
+        # engine-level too: meshed engine == plain engine, across devices
+        _engine_equality_check(nshard=4)
+        print("MULTI-DEVICE-OK")
