@@ -32,6 +32,19 @@ def get(n: int):
     return jnp.asarray(inst.C), jnp.asarray(inst.M), inst
 
 
+def random_instance(n: int, seed: int):
+    """Symmetric random (C, M) numpy pair with zero diagonals — the shared
+    instance recipe of the service benchmarks (mapper_throughput,
+    solver_hotloop)."""
+    rng = np.random.default_rng(seed)
+    C = rng.integers(0, 10, (n, n)).astype(np.float32)
+    M = rng.integers(1, 10, (n, n)).astype(np.float32)
+    C, M = C + C.T, M + M.T
+    np.fill_diagonal(C, 0)
+    np.fill_diagonal(M, 0)
+    return C, M
+
+
 def time_fn(fn: Callable, *args) -> Tuple[float, object]:
     # jit warmup run is included deliberately excluded: time steady-state
     out = fn(*args)

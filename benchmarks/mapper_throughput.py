@@ -33,14 +33,7 @@ except ImportError:                      # direct script invocation
     import common
 
 
-def random_instance(n: int, seed: int):
-    rng = np.random.default_rng(seed)
-    C = rng.integers(0, 10, (n, n)).astype(np.float32)
-    M = rng.integers(1, 10, (n, n)).astype(np.float32)
-    C, M = C + C.T, M + M.T
-    np.fill_diagonal(C, 0)
-    np.fill_diagonal(M, 0)
-    return C, M
+random_instance = common.random_instance
 
 
 def pad_batch(insts, bucket):

@@ -1,6 +1,7 @@
 """Regenerate README.md's benchmark table from BENCH_mapper.json.
 
-The benchmarks (``mapper_throughput.py``, ``scheduler_sim.py``) merge
+The benchmarks (``mapper_throughput.py``, ``scheduler_sim.py``,
+``solver_hotloop.py``) merge
 machine-readable results into ``BENCH_mapper.json``; this script renders
 the sections it finds into a markdown table and splices it between the
 ``BENCH_TABLE_START`` / ``BENCH_TABLE_END`` markers in ``README.md``.
@@ -65,6 +66,20 @@ def render_table(data: dict) -> str:
                      _fmt(seq.get("mapped_jobs_per_s"), 1),
                      _fmt(asy.get("mapped_jobs_per_s"), 1),
                      _fmt(sec.get("throughput_speedup"))))
+    sec = data.get("solver_hotloop")
+    if sec:
+        cfg = sec.get("config", {})
+        depth = sec.get("sequential_depth", {})
+        for key, solve in sorted(sec.get("solve", {}).items()):
+            # baseline: the sequential candidate scan; this path: the
+            # acceptance-event loop (bitwise-equal results)
+            rows.append((
+                f"SA hot loop ({key})",
+                (f"{cfg.get('batch', '?')}-wave, depth "
+                 f"{depth.get('scan', '?')} -> {depth.get('event', '?')}"),
+                _fmt(solve.get("scan", {}).get("maps_per_s"), 1),
+                _fmt(solve.get("event", {}).get("maps_per_s"), 1),
+                _fmt(solve.get("speedup_event_vs_scan"))))
     if not rows:
         return "_No benchmark results recorded yet — run the commands above._"
     out = ["| benchmark | workload | baseline (maps/s) | this path (maps/s) "

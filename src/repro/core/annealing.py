@@ -16,12 +16,24 @@ found candidate is broadcast to all processes"): chains are a `vmap` batch
 (``repro.core.distributed``).  Every ``iters_per_exchange`` temperature steps
 the globally best solution is adopted by all chains (Fig 4).
 
-Hardware adaptation (DESIGN.md S4): at one temperature the sequential
-algorithm examines up to ``max_neighbors`` candidates; since rejected
-candidates do not mutate the state, evaluating candidates against the current
-state and applying the first accepted one is *exactly* the sequential
-semantics, realised as a masked `lax.scan` (no data-dependent break on TPU).
-The acceptance cap per temperature is ``max_success``.
+Hardware adaptation (docs/DESIGN.md §4): at one temperature the sequential
+algorithm examines up to ``max_neighbors`` candidates and accepts at most
+``max_success`` of them.  Rejected candidates do not mutate the state, so
+between two acceptances every candidate is scored against the *same*
+permutation — the hot loop is therefore an **acceptance-event loop**
+(``cfg.loop="event"``, the default): evaluate a window of the remaining
+candidates' deltas in one wide batched call through
+``repro.kernels.ops.qap_delta`` (vectorized reference on CPU, the Pallas
+kernel on TPU), apply the first Metropolis-accepted candidate, and repeat.
+On TPU the window is the whole remaining candidate set — at most
+``max_success + 1`` wide rounds instead of a depth-``max_neighbors``
+sequential scan; on CPU a narrower window (``resolved_event_width``)
+avoids paying full re-evaluation per acceptance.  Because the candidate
+stream and acceptance uniforms are identical and the window only bounds
+how much is *evaluated* per round, the accept decisions — and hence the
+results — are bitwise-identical for every width and equal to the
+sequential candidate scan, which is retained as ``cfg.loop="scan"`` and
+serves as the golden reference (tests/test_hotloop.py).
 
 Temperature initialisation follows the UGR-Metaheuristics convention the
 paper adopts: ``T0 = mu * F(s0) / -ln(phi)`` with mu = phi = 0.3, and the
@@ -37,6 +49,8 @@ from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import ops as kernel_ops
 
 from . import qap
 
@@ -56,6 +70,11 @@ class SAConfig:
     num_exchanges: int = 50          # c;  total iterations = c * iters_per_exchange
     solvers: int = 125               # chains per process (Fig 5)
     seed_with: Optional[str] = None  # None | "greedy"  (initialisation variant)
+    loop: str = "event"              # "event" | "scan" hot-loop realisation
+                                     # (bitwise-identical; see module docstring)
+    event_width: Optional[int] = None  # candidates evaluated per wide round
+                                       # (None: backend default, see
+                                       # resolved_event_width)
 
 
 class SAState(NamedTuple):
@@ -101,15 +120,13 @@ def init_chain(C: Array, M: Array, key: Array, cfg: SAConfig,
     return SAState(p=p, f=f, best_p=p, best_f=f, temp=t0)
 
 
-def temperature_step(C: Array, M: Array, state: SAState, key: Array,
-                     cfg: SAConfig, beta: Array,
-                     n_valid: Optional[Array] = None) -> SAState:
-    """One temperature level: sequential candidate scan with acceptance cap."""
-    n = state.p.shape[0]
-    kpair, kacc = jax.random.split(key)
-    pairs = qap.random_swap_pairs(kpair, cfg.max_neighbors, n, n_valid)
-    us = jax.random.uniform(kacc, (cfg.max_neighbors,))
-
+def _candidate_scan(C: Array, M: Array, state: SAState, pairs: Array,
+                    us: Array, cfg: SAConfig):
+    """Golden reference hot loop (``cfg.loop="scan"``): a depth-
+    ``max_neighbors`` sequential candidate scan with acceptance cap.
+    Kept verbatim as the bitwise-equality oracle for the acceptance-event
+    loop (tests/test_hotloop.py) and as the old side of the
+    ``benchmarks/solver_hotloop.py`` comparison."""
     def body(carry, inputs):
         p, f, best_p, best_f, successes = carry
         ab, u = inputs
@@ -127,6 +144,110 @@ def temperature_step(C: Array, M: Array, state: SAState, key: Array,
     (p, f, best_p, best_f, _), _ = jax.lax.scan(
         body, (state.p, state.f, state.best_p, state.best_f, jnp.int32(0)),
         (pairs, us))
+    return p, f, best_p, best_f
+
+
+_CPU_EVENT_WIDTH = 6   # empirically balances wasted re-evaluation in the
+                       # acceptance-dense (hot) phase against extra rounds
+                       # in the sparse (cold) phase on the CPU backend
+
+
+def resolved_event_width(cfg: SAConfig) -> int:
+    """Candidates evaluated per wide acceptance-event round.
+
+    ``cfg.event_width`` when set; otherwise all ``max_neighbors``
+    candidates on TPU (one kernel launch covers every remaining
+    candidate, so the sequential depth per temperature level is at most
+    ``max_success + 1`` rounds) and a narrow ``_CPU_EVENT_WIDTH`` window
+    on CPU, where re-evaluating the full candidate set every round costs
+    more than it saves.  The width changes *only* how much is evaluated
+    per round — never which candidates are accepted — so results are
+    bitwise-identical for every width (tests/test_hotloop.py).
+    """
+    if cfg.event_width is not None:
+        if cfg.event_width < 1:
+            raise ValueError(f"event_width must be >= 1, got {cfg.event_width}")
+        return min(cfg.event_width, cfg.max_neighbors)
+    if jax.default_backend() == "tpu":
+        return cfg.max_neighbors
+    return min(_CPU_EVENT_WIDTH, cfg.max_neighbors)
+
+
+def _acceptance_event_loop(C: Array, M: Array, state: SAState, pairs: Array,
+                           us: Array, cfg: SAConfig):
+    """Acceptance-event hot loop (``cfg.loop="event"``, the default).
+
+    Each round scores a window of the remaining candidates against the
+    current permutation in one batched ``kernels.ops.qap_delta`` dispatch
+    (the whole remaining set on TPU — see ``resolved_event_width``),
+    applies the first still-unconsumed Metropolis-accepted candidate, and
+    advances past it; a round with no acceptance advances past its whole
+    window.  Rounds stop once every candidate is consumed or
+    ``max_success`` swaps landed, so the sequential depth per temperature
+    level is at most ``min(max_success, K) + ceil(K / width)`` rounds —
+    ``max_success + 1`` at full width — instead of ``K = max_neighbors``
+    scalar steps.  Rejected candidates never mutate state, so the accept
+    decisions (same candidate stream, same uniforms, same deltas bitwise
+    on the CPU reference path) — and therefore the results — are
+    identical to ``_candidate_scan`` for every window width.
+    """
+    k = cfg.max_neighbors
+    w = resolved_event_width(cfg)
+
+    def cond(carry):
+        _, _, _, _, start, successes = carry
+        return (start < k) & (successes < cfg.max_success)
+
+    def body(carry):
+        p, f, best_p, best_f, start, successes = carry
+        # Window [off, off+w): anchored at `start`, clamped so it never
+        # reads past the candidate list; rows before `start` (possible
+        # only after clamping) are masked out of the accept selection.
+        off = jnp.minimum(start, k - w)
+        wpairs = jax.lax.dynamic_slice(pairs, (off, jnp.int32(0)), (w, 2))
+        wus = jax.lax.dynamic_slice(us, (off,), (w,))
+        ds = kernel_ops.qap_delta(C, M, p, wpairs)
+        accept = (ds < 0) | (wus < jnp.exp(-ds / jnp.maximum(state.temp, 1e-9)))
+        live = accept & (off + jnp.arange(w, dtype=jnp.int32) >= start)
+        fire = live.any()
+        j = jnp.argmax(live)                    # first accepted in window
+        p = jnp.where(fire,
+                      qap.swap_positions(p, wpairs[j, 0], wpairs[j, 1]), p)
+        f = jnp.where(fire, f + ds[j], f)
+        better = f < best_f
+        best_p = jnp.where(better, p, best_p)
+        best_f = jnp.where(better, f, best_f)
+        start = jnp.where(fire, off + j + 1, off + w)
+        return (p, f, best_p, best_f, start, successes + fire.astype(jnp.int32))
+
+    p, f, best_p, best_f, _, _ = jax.lax.while_loop(
+        cond, body,
+        (state.p, state.f, state.best_p, state.best_f,
+         jnp.int32(0), jnp.int32(0)))
+    return p, f, best_p, best_f
+
+
+def temperature_step(C: Array, M: Array, state: SAState, key: Array,
+                     cfg: SAConfig, beta: Array,
+                     n_valid: Optional[Array] = None) -> SAState:
+    """One temperature level: up to ``max_neighbors`` candidates, at most
+    ``max_success`` acceptances (paper steps 2-3).
+
+    ``cfg.loop`` picks the realisation — ``"event"`` (wide batched rounds
+    through the kernel dispatch layer, the default) or ``"scan"`` (the
+    golden sequential reference); both produce bitwise-identical states
+    on the CPU reference path.  With ``n_valid`` candidate swaps stay
+    inside the padded instance's valid prefix."""
+    n = state.p.shape[0]
+    kpair, kacc = jax.random.split(key)
+    pairs = qap.random_swap_pairs(kpair, cfg.max_neighbors, n, n_valid)
+    us = jax.random.uniform(kacc, (cfg.max_neighbors,))
+    if cfg.loop == "event":
+        p, f, best_p, best_f = _acceptance_event_loop(C, M, state, pairs, us, cfg)
+    elif cfg.loop == "scan":
+        p, f, best_p, best_f = _candidate_scan(C, M, state, pairs, us, cfg)
+    else:
+        raise ValueError(f"unknown hot-loop realisation {cfg.loop!r}")
     temp = jnp.maximum(cool(state.temp, cfg, beta), cfg.t_final)
     return SAState(p=p, f=f, best_p=best_p, best_f=best_f, temp=temp)
 

@@ -4,6 +4,11 @@ Paper S3: stage 1 runs simulated annealing *without* exchanges so every
 process generates a unique, diverse set of solutions; those become the
 initial GA populations; stage 2 runs the parallel genetic algorithm with
 ring migration, transferring the best features between populations.
+
+Stage 1 reuses ``annealing._chain_round`` / ``temperature_step``, so the
+composite's SA phase runs the same acceptance-event hot loop (wide batched
+delta evaluation through ``kernels.ops``, docs/DESIGN.md §4) as plain PSA,
+including the ``cfg.sa.loop`` golden-reference switch.
 """
 from __future__ import annotations
 

@@ -13,10 +13,13 @@ Exchanges use JAX-native collectives instead of MPI:
 These functions are what ``launch/placement.py`` runs *on the job's own
 devices* before the job starts -- exactly the paper's deployment model (the
 mapping search runs on the allocated nodes themselves).
+
+The per-device solver bodies reuse ``annealing._chain_round``, so every
+mesh-distributed SA round runs the same acceptance-event hot loop (wide
+batched delta evaluation through ``kernels.ops``) as the single-host path.
 """
 from __future__ import annotations
 
-import functools
 import inspect
 from typing import Tuple
 
@@ -29,7 +32,7 @@ try:  # jax >= 0.6 re-exports shard_map at the top level
 except ImportError:  # older jax keeps it under experimental
     from jax.experimental.shard_map import shard_map as _shard_map
 
-from . import annealing, genetic, qap
+from . import annealing, genetic
 
 Array = jax.Array
 

@@ -28,8 +28,11 @@ ALGORITHMS = ("psa", "pga", "pca", "identity")
 def _polish_round(C: Array, M: Array, p: Array, f: Array, key: Array,
                   n_valid: Optional[Array] = None):
     """One batched 2-swap descent round: evaluate K random swaps against the
-    current permutation, apply the best if it improves.  With ``n_valid``
-    (padded instances) candidate swaps stay inside the valid prefix."""
+    current permutation, apply the best if it improves.  The wide delta
+    evaluation goes through the same kernel dispatch as the SA hot loop
+    (``qap.swap_delta_batch`` -> ``kernels.ops.qap_delta``: vectorized
+    reference on CPU, Pallas kernel on TPU).  With ``n_valid`` (padded
+    instances) candidate swaps stay inside the valid prefix."""
     n = p.shape[0]
     pairs = qap.random_swap_pairs(key, 256, n, n_valid)
     deltas = qap.swap_delta_batch(C, M, p, pairs)
@@ -45,8 +48,9 @@ def polish(C: Array, M: Array, p: Array, key: Array, rounds: int = 200,
     """Greedy batched 2-swap local search (beyond-paper refinement, in the
     spirit of the Kernighan-Lin hybridisation the paper cites [15, 16]).
 
-    Cheap relative to SA/GA (each round is one batched delta kernel call)
-    and strictly non-increasing; applied as a final stage by default."""
+    Cheap relative to SA/GA (each round is one wide batched delta dispatch
+    through ``kernels.ops``) and strictly non-increasing; applied as a
+    final stage by default."""
     if n_valid is not None:
         C = qap.mask_flows(C, n_valid)
     f = qap.objective(C, M, p)
@@ -65,7 +69,9 @@ def polish_batch(Cs: Array, Ms: Array, ps: Array, keys: Array,
                  rounds: int = 200, n_valid: Optional[Array] = None) -> tuple:
     """Instance-batched ``polish``: Cs/Ms (B, N, N), ps (B, N), keys (B, 2),
     n_valid optional (B,).  Used by the serving engine so batched solves get
-    the same final 2-swap refinement ``find_mapping`` applies."""
+    the same final 2-swap refinement ``find_mapping`` applies — and, like
+    the per-instance path, every round's candidate deltas route through
+    the leading-batch kernel dispatch (``kernels.ops.qap_delta``)."""
     if n_valid is None:
         return jax.vmap(lambda c, m, p, k: polish(c, m, p, k, rounds)
                         )(Cs, Ms, ps, keys)

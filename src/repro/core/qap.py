@@ -144,8 +144,23 @@ def swap_delta(C: Array, M: Array, p: Array, a: Array, b: Array) -> Array:
 
 
 def swap_delta_batch(C: Array, M: Array, p: Array, pairs: Array) -> Array:
-    """Deltas for a (K, 2) batch of candidate swaps against one permutation."""
-    return jax.vmap(lambda ab: swap_delta(C, M, p, ab[0], ab[1]))(pairs)
+    """Deltas for a (..., K, 2) batch of candidate swaps.
+
+    Routes through the kernel dispatch layer (``repro.kernels.ops``):
+    CPU gets the vectorized reference — bitwise-equal per candidate to
+    ``swap_delta`` — and TPU the Pallas kernel.  ``p`` may carry leading
+    batch dimensions matching ``pairs`` (one permutation per pair row).
+    """
+    from repro.kernels import ops as kernel_ops
+    return kernel_ops.qap_delta(C, M, p, pairs)
+
+
+def masked_swap_delta_batch(C: Array, M: Array, p: Array, pairs: Array,
+                            valid: Array) -> Array:
+    """Batched ``masked_swap_delta``: the pair-weight mask is folded into
+    ``C`` once, then the whole candidate batch goes through the same
+    kernel dispatch as the unmasked path."""
+    return swap_delta_batch(C * masked_weights(valid, C.dtype), M, p, pairs)
 
 
 def random_permutation(key: Array, n: int) -> Array:
@@ -174,13 +189,42 @@ def invert(p: Array) -> Array:
     return jnp.zeros(n, dtype=p.dtype).at[p].set(jnp.arange(n, dtype=p.dtype))
 
 
-def pair_from_index(idx: Array, n: int) -> Tuple[Array, Array]:
-    """Map flat index in [0, n*(n-1)/2) to an unordered pair (a < b)."""
-    # Standard triangular decoding.
-    i = idx.astype(jnp.float32)
-    a = (n - 2 - jnp.floor(jnp.sqrt(-8.0 * i + 4.0 * n * (n - 1) - 7.0) / 2.0 - 0.5)).astype(jnp.int32)
-    b = (idx + a + 1 - (n * (n - 1)) // 2 + ((n - a) * (n - a - 1)) // 2).astype(jnp.int32)
-    return a, b
+def num_pairs(m: Array) -> Array:
+    """C(m, 2) = m*(m-1)//2 without overflowing the intermediate product.
+
+    One of m, m-1 is even, so halving the even factor first keeps every
+    intermediate <= the result; exact in int32 for all m with C(m, 2) in
+    int32 range (m <= 65536).  Accepts traced values.
+    """
+    m = jnp.asarray(m)
+    return jnp.where(m % 2 == 0, (m // 2) * (m - 1), m * ((m - 1) // 2))
+
+
+def pair_from_index(idx: Array, n) -> Tuple[Array, Array]:
+    """Map flat index in [0, n*(n-1)/2) to an unordered pair (a < b).
+
+    Integer-safe triangular decoding: a float32 sqrt only *seeds* the row
+    estimate, then exact integer comparisons correct it.  (The previous
+    all-float decode lost integer precision once 4*n*(n-1) exceeded the
+    f32 mantissa, mis-pairing indices for n >~ 2048.)  Exact for all n up
+    to 65536 (the int32 range of C(n, 2)); ``n`` may be traced.
+    """
+    idx = jnp.asarray(idx, jnp.int32)
+    n_arr = jnp.asarray(n, jnp.int32)
+    # Count s = C(n,2) - idx from the end: row a = n - m holds the pairs
+    # with C(m-1, 2) < s <= C(m, 2), where m = n - a.
+    s = num_pairs(n_arr) - idx
+    m = jnp.sqrt(2.0 * s.astype(jnp.float32)).astype(jnp.int32)
+    m = jnp.clip(m, 2, n_arr)
+    # The float seed is within +-1 of the true row; two exact integer
+    # correction steps each way leave margin.
+    for _ in range(2):
+        m = jnp.where(num_pairs(m - 1) >= s, m - 1, m)
+    for _ in range(2):
+        m = jnp.where((m < n_arr) & (num_pairs(m) < s), m + 1, m)
+    a = n_arr - m
+    b = a + 1 + (num_pairs(m) - s)
+    return a.astype(jnp.int32), b.astype(jnp.int32)
 
 
 def random_swap_pairs(key: Array, k: int, n: int,
@@ -198,7 +242,7 @@ def random_swap_pairs(key: Array, k: int, n: int,
         a, b = pair_from_index(idx, n)
     else:
         nv = jnp.maximum(n_valid, 2)
-        num = (nv * (nv - 1)) // 2
+        num = num_pairs(nv)
         idx = jax.random.randint(key, (k,), 0, num)
         a, b = pair_from_index(idx, nv)
         a = jnp.where(n_valid >= 2, a, 0)

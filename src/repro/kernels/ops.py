@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 
 from . import ref
-from .qap_delta import qap_delta_pallas
+from .qap_delta import qap_delta_pallas, qap_delta_pallas_batch
 from .qap_objective import qap_objective_pallas, MAX_KERNEL_N, _pad_to, LANE
 
 Array = jax.Array
@@ -31,7 +31,24 @@ def qap_objective(C: Array, M: Array, perms: Array, *,
 
 def qap_delta(C: Array, M: Array, p: Array, pairs: Array, *,
               force_pallas: bool = False, interpret: bool = False) -> Array:
-    """Batched swap deltas (K,) for pairs (K, 2)."""
-    if force_pallas or _on_tpu():
-        return qap_delta_pallas(C, M, p, pairs, interpret=interpret or not _on_tpu())
-    return ref.qap_delta_ref(C, M, p, pairs)
+    """Leading-batch-aware batched swap deltas.
+
+    ``p``: (..., N) permutations; ``pairs``: (..., K, 2) candidate swaps
+    with leading dims matching ``p``  ->  (..., K) deltas.  This is the
+    SA hot loop's wide evaluation surface (``annealing.temperature_step``
+    scores all remaining candidates of a temperature level in one call):
+    on CPU it runs the vectorized reference (bitwise-equal per candidate
+    to ``core.qap.swap_delta``), on TPU the Pallas kernel — a single
+    launch whose grid spans every (leading-dim, candidate) pair.
+    """
+    on_tpu = _on_tpu()
+    if not (force_pallas or on_tpu):
+        return ref.qap_delta_ref(C, M, p, pairs)
+    interp = interpret or not on_tpu
+    if p.ndim == 1:
+        return qap_delta_pallas(C, M, p, pairs, interpret=interp)
+    lead = p.shape[:-1]
+    out = qap_delta_pallas_batch(
+        C, M, p.reshape((-1, p.shape[-1])),
+        pairs.reshape((-1,) + pairs.shape[-2:]), interpret=interp)
+    return out.reshape(lead + (pairs.shape[-2],))

@@ -2,17 +2,23 @@
 
 The SA hot loop: the paper (S5) credits simulated annealing's speed to
 incremental objective recomputation -- a swap of two positions changes F by a
-quantity computable in O(N).  This kernel evaluates a batch of K candidate
-swaps against one current permutation, one program instance per candidate.
+quantity computable in O(N).  ``qap_delta_pallas_batch`` evaluates B
+permutations x K candidate swaps each in one kernel launch (grid B*K, one
+program instance per candidate); ``qap_delta_pallas`` is the single-
+permutation special case.  The wide form is what the acceptance-event SA
+loop dispatches: all of a temperature level's remaining candidates are
+scored against the current state in one launch instead of a depth-K
+sequential scan (docs/DESIGN.md §4).
 
-TPU adaptation (DESIGN.md S4): the candidate's four matrix rows
-(C[a,:], C[b,:], C[:,a], C[:,b] via C^T, and M rows/cols for the swapped
-nodes u = p[a], v = p[b]) are streamed HBM->VMEM by the BlockSpec index maps
+TPU adaptation: the candidate's four matrix rows (C[a,:], C[b,:], C[:,a],
+C[:,b] via C^T, and M rows/cols for the swapped nodes u = p[a], v = p[b])
+plus its permutation row are streamed HBM->VMEM by the BlockSpec index maps
 driven from a scalar-prefetch table -- no full-matrix residency, so the
-working set is O(N) per candidate regardless of problem size.  The only
-dynamic addressing inside the kernel body is a 1-D gather by the permutation
-(``jnp.take``), which Mosaic supports as a dynamic gather; correctness is
-validated in interpret mode against ``ref.qap_delta_ref``.
+working set is O(N) per candidate regardless of problem size; consecutive
+candidates of the same permutation reuse the resident permutation block.
+The only dynamic addressing inside the kernel body is a 1-D gather by the
+permutation (``jnp.take``), which Mosaic supports as a dynamic gather;
+correctness is validated in interpret mode against ``ref.qap_delta_ref``.
 """
 from __future__ import annotations
 
@@ -32,8 +38,8 @@ def _pad_to(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
-def _delta_kernel(info_ref,            # (K, 4) int32 scalar prefetch: a, b, u, v
-                  p_ref,               # (n_pad,) current permutation
+def _delta_kernel(info_ref,            # (B*K, 4) int32 scalar prefetch: a, b, u, v
+                  p_ref,               # (1, n_pad) this candidate's permutation row
                   c_row_a, c_row_b,    # (1, n_pad) rows of C
                   ct_row_a, ct_row_b,  # (1, n_pad) rows of C^T (= columns of C)
                   m_row_u, m_row_v,    # (1, n_pad) rows of M
@@ -44,7 +50,7 @@ def _delta_kernel(info_ref,            # (K, 4) int32 scalar prefetch: a, b, u, 
     a = info_ref[k, 0]
     b = info_ref[k, 1]
 
-    p = p_ref[...]
+    p = p_ref[0, :]
     idx = jax.lax.iota(jnp.int32, n_pad)
     mask = (idx != a) & (idx != b)
 
@@ -83,11 +89,16 @@ def _delta_kernel(info_ref,            # (K, 4) int32 scalar prefetch: a, b, u, 
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def qap_delta_pallas(C: Array, M: Array, p: Array, pairs: Array,
-                     interpret: bool = False) -> Array:
-    """Batched swap deltas.  C, M: (N, N); p: (N,); pairs: (K, 2) -> (K,) f32."""
+def qap_delta_pallas_batch(C: Array, M: Array, ps: Array, pairs: Array,
+                           interpret: bool = False) -> Array:
+    """Leading-batch swap deltas against shared instance matrices.
+
+    C, M: (N, N); ps: (B, N) one permutation per batch row; pairs:
+    (B, K, 2) candidate swaps per row  ->  (B, K) f32.  One kernel launch
+    with grid B*K; candidate q works on permutation row q // K.
+    """
     n = C.shape[0]
-    k = pairs.shape[0]
+    bsz, k = pairs.shape[0], pairs.shape[1]
     n_pad = _pad_to(max(n, LANE), LANE)
     pad = n_pad - n
 
@@ -95,19 +106,21 @@ def qap_delta_pallas(C: Array, M: Array, p: Array, pairs: Array,
     Mp = jnp.pad(M.astype(jnp.float32), ((0, pad), (0, pad)))
     CpT = Cp.T
     MpT = Mp.T
-    pp = jnp.concatenate([p.astype(jnp.int32),
-                          jnp.arange(n, n_pad, dtype=jnp.int32)])
+    tail = jnp.broadcast_to(jnp.arange(n, n_pad, dtype=jnp.int32), (bsz, pad))
+    pp = jnp.concatenate([ps.astype(jnp.int32), tail], axis=1)   # (B, n_pad)
 
-    a = pairs[:, 0].astype(jnp.int32)
-    b = pairs[:, 1].astype(jnp.int32)
-    info = jnp.stack([a, b, pp[a], pp[b]], axis=1)   # (K, 4): a, b, u, v
+    ab = pairs.astype(jnp.int32)
+    u = jnp.take_along_axis(pp, ab[..., 0], axis=1)              # (B, K)
+    v = jnp.take_along_axis(pp, ab[..., 1], axis=1)
+    info = jnp.stack([ab[..., 0].reshape(-1), ab[..., 1].reshape(-1),
+                      u.reshape(-1), v.reshape(-1)], axis=1)     # (B*K, 4)
 
     row = lambda col_of_info: (lambda i, info_ref: (info_ref[i, col_of_info], 0))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(k,),
+        grid=(bsz * k,),
         in_specs=[
-            pl.BlockSpec((n_pad,), lambda i, info_ref: (0,)),   # p (resident)
+            pl.BlockSpec((1, n_pad), lambda i, info_ref: (i // k, 0)),  # p row
             pl.BlockSpec((1, n_pad), row(0)),                   # C[a, :]
             pl.BlockSpec((1, n_pad), row(1)),                   # C[b, :]
             pl.BlockSpec((1, n_pad), row(0)),                   # C^T[a, :]
@@ -122,7 +135,15 @@ def qap_delta_pallas(C: Array, M: Array, p: Array, pairs: Array,
     out = pl.pallas_call(
         functools.partial(_delta_kernel, n_pad=n_pad),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((k,), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((bsz * k,), jnp.float32),
         interpret=interpret,
     )(info, pp, Cp, Cp, CpT, CpT, Mp, Mp, MpT, MpT)
-    return out
+    return out.reshape(bsz, k)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def qap_delta_pallas(C: Array, M: Array, p: Array, pairs: Array,
+                     interpret: bool = False) -> Array:
+    """Batched swap deltas.  C, M: (N, N); p: (N,); pairs: (K, 2) -> (K,) f32."""
+    return qap_delta_pallas_batch(C, M, p[None], pairs[None],
+                                  interpret=interpret)[0]

@@ -53,9 +53,14 @@ def selective_scan_ref(u: Array, dt: Array, a: Array, b: Array, c: Array
 def qap_delta_ref(C: Array, M: Array, p: Array, pairs: Array) -> Array:
     """Batched swap deltas: delta[k] = F(swap(p, a_k, b_k)) - F(p).
 
-    C, M: (N, N); p: (N,) int32; pairs: (K, 2) int32.  Returns (K,) f32.
-    O(N) per pair -- same formula as ``repro.core.qap.swap_delta``.
+    C, M: (N, N); p: (..., N) int32; pairs: (..., K, 2) int32 with leading
+    dims matching ``p``.  Returns (..., K) f32.  O(N) per pair -- same
+    formula (and, on the CPU dispatch path, the same bitwise result) as
+    ``repro.core.qap.swap_delta``; the vectorized form is the CPU side of
+    the leading-batch ``ops.qap_delta`` dispatch.
     """
+    if p.ndim > 1:
+        return jax.vmap(lambda pp, pr: qap_delta_ref(C, M, pp, pr))(p, pairs)
     Cf = C.astype(jnp.float32)
     Mf = M.astype(jnp.float32)
     n = p.shape[0]

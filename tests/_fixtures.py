@@ -1,0 +1,53 @@
+"""Shared small solver budgets + instance builders for the test suite.
+
+Compile time dominates suite wall time: every distinct (solver config,
+shapes, argument-presence) tuple jit-compiles a fresh XLA program, and
+``SAConfig``/``GAConfig`` are frozen dataclasses hashed *by value* — two
+test modules using the same budget values share one compiled program,
+while near-twin budgets (e.g. ``solvers=2`` here, ``solvers=4`` there)
+compile twice for no extra coverage.  Test modules therefore import the
+budgets and padded-instance builders below instead of defining their own
+variants; only tests whose assertions genuinely need a different budget
+(e.g. the paper-accuracy bands in ``test_algorithms.py``) keep local
+configs.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import annealing, composite, genetic
+
+# One shared small budget per solver family.  PCA_SMALL's SA stage keeps
+# ``solvers=0`` (one chain per GA population slot, the composite default).
+SA_SMALL = annealing.SAConfig(max_neighbors=10, iters_per_exchange=8,
+                              num_exchanges=4, solvers=4)
+GA_SMALL = genetic.GAConfig(generations=15, pop_size=12)
+PCA_SMALL = composite.CompositeConfig(
+    sa=annealing.SAConfig(max_neighbors=6, iters_per_exchange=4,
+                          num_exchanges=2, solvers=0),
+    ga=GA_SMALL)
+
+
+def instance(n, seed):
+    """Symmetric random (C, M) with zero diagonals, as numpy arrays."""
+    rng = np.random.default_rng(seed)
+    C = rng.integers(0, 10, (n, n)).astype(np.float32)
+    M = rng.integers(1, 10, (n, n)).astype(np.float32)
+    C, M = C + C.T, M + M.T
+    np.fill_diagonal(C, 0)
+    np.fill_diagonal(M, 0)
+    return C, M
+
+
+def padded_batch(sizes, bucket, seed0=0):
+    """(Cs, Ms, n_valid, keys) for a bucket-padded batch of instances."""
+    B = len(sizes)
+    Cs = np.zeros((B, bucket, bucket), np.float32)
+    Ms = np.zeros((B, bucket, bucket), np.float32)
+    for i, n in enumerate(sizes):
+        C, M = instance(n, seed0 + i)
+        Cs[i, :n, :n] = C
+        Ms[i, :n, :n] = M
+    keys = jnp.stack([jax.random.PRNGKey(10 + i) for i in range(B)])
+    return (jnp.asarray(Cs), jnp.asarray(Ms),
+            jnp.asarray(sizes, jnp.int32), keys)

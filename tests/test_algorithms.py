@@ -120,12 +120,11 @@ def test_pca_runs_and_improves(tiny):
 # ---------------------------------------------------------------- public API
 @pytest.mark.parametrize("algo", ["psa", "pga", "pca", "identity"])
 def test_find_mapping_api(algo, tiny):
+    from _fixtures import SA_SMALL, GA_SMALL
     C, M, inst = tiny
     res = mapping.find_mapping(
         np.asarray(C), np.asarray(M), algo, num_processes=2,
-        sa_cfg=annealing.SAConfig(max_neighbors=10, iters_per_exchange=10,
-                                  num_exchanges=5, solvers=4),
-        ga_cfg=genetic.GAConfig(generations=20))
+        sa_cfg=SA_SMALL, ga_cfg=GA_SMALL)
     assert res.objective <= res.baseline + 1e-6
     assert res.improvement >= 0.0
     f_check = float(qap.objective(C, M, jnp.asarray(res.perm)))

@@ -23,32 +23,8 @@ from repro.core import annealing, batch_sharded, composite, genetic
 from repro.launch.mesh import make_instance_mesh
 from repro.serve.mapper import MapRequest, MappingEngine
 
-SA_SMALL = annealing.SAConfig(max_neighbors=6, iters_per_exchange=4,
-                              num_exchanges=3, solvers=2)
-GA_SMALL = genetic.GAConfig(generations=8, pop_size=8)
-
-
-def _instance(n, seed):
-    rng = np.random.default_rng(seed)
-    C = rng.integers(0, 10, (n, n)).astype(np.float32)
-    M = rng.integers(1, 10, (n, n)).astype(np.float32)
-    C, M = C + C.T, M + M.T
-    np.fill_diagonal(C, 0)
-    np.fill_diagonal(M, 0)
-    return C, M
-
-
-def _padded_batch(sizes, bucket, seed0=0):
-    B = len(sizes)
-    Cs = np.zeros((B, bucket, bucket), np.float32)
-    Ms = np.zeros((B, bucket, bucket), np.float32)
-    for i, n in enumerate(sizes):
-        C, M = _instance(n, seed0 + i)
-        Cs[i, :n, :n] = C
-        Ms[i, :n, :n] = M
-    keys = jnp.stack([jax.random.PRNGKey(10 + i) for i in range(B)])
-    return (jnp.asarray(Cs), jnp.asarray(Ms),
-            jnp.asarray(sizes, jnp.int32), keys)
+from _fixtures import (SA_SMALL, GA_SMALL, PCA_SMALL,
+                       instance as _instance, padded_batch as _padded_batch)
 
 
 def _assert_bitwise(sharded, unsharded):
@@ -83,11 +59,10 @@ def _equality_check(nshard):
         batch_sharded.run_pga_batch_sharded(
             Cs, Ms, keys, GA_SMALL, 2, n_valid=nvs, mesh=mesh),
         genetic.run_pga_batch(Cs, Ms, keys, GA_SMALL, 2, n_valid=nvs))
-    pca_cfg = composite.CompositeConfig(sa=SA_SMALL, ga=GA_SMALL)
     _assert_bitwise(
         batch_sharded.run_pca_batch_sharded(
-            Cs, Ms, keys, pca_cfg, 2, n_valid=nvs, mesh=mesh),
-        composite.run_pca_batch(Cs, Ms, keys, pca_cfg, 2, n_valid=nvs))
+            Cs, Ms, keys, PCA_SMALL, 2, n_valid=nvs, mesh=mesh),
+        composite.run_pca_batch(Cs, Ms, keys, PCA_SMALL, 2, n_valid=nvs))
 
 
 def test_sharded_matches_unsharded_single_device():

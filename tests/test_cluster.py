@@ -94,8 +94,9 @@ def test_allocation_lookup():
 def test_cluster_drives_mapping_engine_subset_instances():
     """End-to-end slice of the scheduler loop: allocate -> map the induced
     subgraph -> translate to physical nodes -> release."""
-    from repro.core import annealing
     from repro.serve.mapper import MappingEngine
+
+    from _fixtures import SA_SMALL
 
     cl = _grid_cluster((2, 2, 2))
     cl.allocate("other", 3)                      # engine sees a true subset
@@ -104,10 +105,7 @@ def test_cluster_drives_mapping_engine_subset_instances():
     C = np.zeros((n, n), np.float32)
     for k in range(n):
         C[k, (k + 1) % n] = C[(k + 1) % n, k] = 10.0
-    eng = MappingEngine(num_processes=2,
-                        sa_cfg=annealing.SAConfig(
-                            max_neighbors=10, iters_per_exchange=8,
-                            num_exchanges=4, solvers=4))
+    eng = MappingEngine(num_processes=2, sa_cfg=SA_SMALL)
     r = eng.map_one(C, a.M_sub, "psa", job_id="job")
     assert r.objective <= r.baseline + 1e-6
     phys = a.physical(r.perm)

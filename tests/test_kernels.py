@@ -10,7 +10,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref, ops
 from repro.kernels.qap_objective import qap_objective_pallas
-from repro.kernels.qap_delta import qap_delta_pallas
+from repro.kernels.qap_delta import qap_delta_pallas, qap_delta_pallas_batch
 from repro.core import qap
 
 
@@ -83,6 +83,83 @@ def test_ops_dispatch_cpu():
     pairs = qap.random_swap_pairs(jax.random.PRNGKey(3), 8, n)
     np.testing.assert_allclose(np.asarray(ops.qap_delta(C, M, p, pairs)),
                                np.asarray(ref.qap_delta_ref(C, M, p, pairs)))
+
+
+def _batched_candidates(rng, n, batch, k):
+    ps = jnp.stack([jnp.asarray(rng.permutation(n).astype(np.int32))
+                    for _ in range(batch)])
+    pairs = jnp.stack([qap.random_swap_pairs(jax.random.PRNGKey(i), k, n)
+                       for i in range(batch)])
+    return ps, pairs
+
+
+@pytest.mark.parametrize("n", [27, 125, 343])
+@pytest.mark.parametrize("batch,k", [(1, 16), (6, 10), (4, 50)])
+def test_delta_kernel_batch_matches_ref(n, batch, k):
+    """Interpret-mode equality for the leading-batch Pallas delta kernel."""
+    rng = np.random.default_rng(n + batch + k)
+    C, M = _instance(rng, n, np.float32)
+    ps, pairs = _batched_candidates(rng, n, batch, k)
+    got = qap_delta_pallas_batch(C, M, ps, pairs, interpret=True)
+    want = ref.qap_delta_ref(C, M, ps, pairs)
+    assert got.shape == (batch, k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_delta_kernel_batch_matches_single_rows():
+    """Each batch row equals the single-permutation kernel on that row."""
+    rng = np.random.default_rng(9)
+    n, batch, k = 45, 5, 12
+    C, M = _instance(rng, n, np.float32)
+    ps, pairs = _batched_candidates(rng, n, batch, k)
+    got = np.asarray(qap_delta_pallas_batch(C, M, ps, pairs, interpret=True))
+    for i in range(batch):
+        row = np.asarray(qap_delta_pallas(C, M, ps[i], pairs[i],
+                                          interpret=True))
+        np.testing.assert_array_equal(got[i], row)
+
+
+def test_ops_delta_leading_batch_dispatch():
+    """ops.qap_delta accepts (..., N)/(..., K, 2) leading batch dims: the
+    CPU path is bitwise-equal per candidate to qap.swap_delta, and the
+    forced-Pallas interpret path matches numerically."""
+    rng = np.random.default_rng(2)
+    n, batch, k = 27, 6, 10
+    C, M = _instance(rng, n, np.float32)
+    ps, pairs = _batched_candidates(rng, n, batch, k)
+
+    got = ops.qap_delta(C, M, ps, pairs)
+    assert got.shape == (batch, k)
+    scalar = np.stack([
+        [float(qap.swap_delta(C, M, ps[i], pairs[i, j, 0], pairs[i, j, 1]))
+         for j in range(k)] for i in range(batch)])
+    np.testing.assert_array_equal(np.asarray(got), scalar.astype(np.float32))
+
+    # 3-D leading shape flattens to the same values
+    got3 = ops.qap_delta(C, M, ps.reshape(2, 3, n),
+                         pairs.reshape(2, 3, k, 2))
+    np.testing.assert_array_equal(np.asarray(got3).reshape(batch, k),
+                                  np.asarray(got))
+
+    # forced Pallas (interpret) leading-batch path agrees with the ref
+    gotp = ops.qap_delta(C, M, ps, pairs, force_pallas=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(gotp), np.asarray(got),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_ops_delta_under_vmap_matches_flat_dispatch():
+    """The hot-loop usage pattern: ops.qap_delta traced per chain under an
+    outer vmap must equal the explicit leading-batch dispatch bitwise on
+    the CPU path."""
+    rng = np.random.default_rng(3)
+    n, batch, k = 32, 8, 10
+    C, M = _instance(rng, n, np.float32)
+    ps, pairs = _batched_candidates(rng, n, batch, k)
+    per_chain = jax.jit(jax.vmap(lambda p, pr: ops.qap_delta(C, M, p, pr)))
+    flat = jax.jit(lambda: ops.qap_delta(C, M, ps, pairs))
+    assert np.asarray(per_chain(ps, pairs)).tobytes() == \
+        np.asarray(flat()).tobytes()
 
 
 # ---------------------------------------------------------------- selective scan

@@ -8,32 +8,8 @@ import jax.numpy as jnp
 from repro.core import annealing, composite, genetic, instances, qap
 from repro.serve.mapper import (DeadlinePolicy, MapRequest, MappingEngine)
 
-SA_SMALL = annealing.SAConfig(max_neighbors=10, iters_per_exchange=8,
-                              num_exchanges=4, solvers=4)
-GA_SMALL = genetic.GAConfig(generations=15, pop_size=12)
-
-
-def _instance(n, seed):
-    rng = np.random.default_rng(seed)
-    C = rng.integers(0, 10, (n, n)).astype(np.float32)
-    M = rng.integers(1, 10, (n, n)).astype(np.float32)
-    C, M = C + C.T, M + M.T
-    np.fill_diagonal(C, 0)
-    np.fill_diagonal(M, 0)
-    return C, M
-
-
-def _padded_batch(sizes, bucket, seed0=0):
-    B = len(sizes)
-    Cs = np.zeros((B, bucket, bucket), np.float32)
-    Ms = np.zeros((B, bucket, bucket), np.float32)
-    for i, n in enumerate(sizes):
-        C, M = _instance(n, seed0 + i)
-        Cs[i, :n, :n] = C
-        Ms[i, :n, :n] = M
-    keys = jnp.stack([jax.random.PRNGKey(10 + i) for i in range(B)])
-    return (jnp.asarray(Cs), jnp.asarray(Ms),
-            jnp.asarray(sizes, jnp.int32), keys)
+from _fixtures import (SA_SMALL, GA_SMALL, PCA_SMALL,
+                       instance as _instance, padded_batch as _padded_batch)
 
 
 # -------------------------------------------------- (a) batch == sequential
@@ -63,10 +39,7 @@ def test_pga_and_pca_batch_match_per_instance():
         assert np.asarray(bf)[i].tobytes() == np.asarray(f).tobytes()
         np.testing.assert_array_equal(np.asarray(bp)[i], np.asarray(p))
 
-    cfg = composite.CompositeConfig(
-        sa=annealing.SAConfig(max_neighbors=6, iters_per_exchange=4,
-                              num_exchanges=2, solvers=0),
-        ga=GA_SMALL)
+    cfg = PCA_SMALL
     bp, bf, _ = composite.run_pca_batch(Cs, Ms, keys, cfg,
                                         num_processes=2, n_valid=nvs)
     for i, n in enumerate(sizes):
@@ -172,6 +145,14 @@ def test_masked_swap_delta_matches_masked_recompute():
         f1 = float(qap.masked_objective(jnp.asarray(Cp), jnp.asarray(Mp),
                                         qap.swap_positions(p, a, b), valid))
         assert d == pytest.approx(f1 - f0, abs=1e-3)
+    # the batched (kernel-dispatched) form agrees with the per-pair path
+    pairs = jnp.asarray([[0, 5], [2, 8], [3, 4]], jnp.int32)
+    ds = qap.masked_swap_delta_batch(jnp.asarray(Cp), jnp.asarray(Mp),
+                                     p, pairs, valid)
+    for i, (a, b) in enumerate([(0, 5), (2, 8), (3, 4)]):
+        one = float(qap.masked_swap_delta(jnp.asarray(Cp), jnp.asarray(Mp),
+                                          p, a, b, valid))
+        assert float(ds[i]) == pytest.approx(one, abs=1e-3)
 
 
 # ------------------------------------------------------------- engine misc
@@ -414,10 +395,7 @@ def test_warm_start_never_worse_than_cold_known_optimum():
                            init_perm=jnp.asarray(inst.opt_perm))[1]
     assert float(ga_f) == pytest.approx(inst.optimum, rel=1e-6)
     pca_f = composite.run_pca(
-        C, M, key, composite.CompositeConfig(
-            sa=annealing.SAConfig(max_neighbors=6, iters_per_exchange=4,
-                                  num_exchanges=2, solvers=0),
-            ga=GA_SMALL),
+        C, M, key, PCA_SMALL,
         num_processes=2, init_perm=jnp.asarray(inst.opt_perm))[1]
     assert float(pca_f) == pytest.approx(inst.optimum, rel=1e-6)
     # total-replacement GA config (n_offspring == pop_size): the elitism

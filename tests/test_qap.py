@@ -59,6 +59,35 @@ def test_pair_from_index_bijective(seed, n):
     assert len({(x, y) for x, y in zip(a, b)}) == num
 
 
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 60000))
+def test_pair_from_index_round_trip_large_n(seed, n):
+    """Integer-safe decode: encode a random (a < b) pair to its flat index
+    (exact Python integer arithmetic) and decode it back, across orders
+    far beyond the float32 mantissa (the old all-float decode mis-paired
+    indices for n >~ 2048)."""
+    rng = np.random.default_rng(seed)
+    a = int(rng.integers(0, n - 1))
+    b = int(rng.integers(a + 1, n))
+    total = n * (n - 1) // 2
+    idx = total - (n - a) * (n - a - 1) // 2 + (b - a - 1)
+    aa, bb = qap.pair_from_index(jnp.asarray(idx, jnp.int32), n)
+    assert (int(aa), int(bb)) == (a, b)
+
+
+@pytest.mark.parametrize("n", [2048, 4096, 8192, 65536])
+def test_pair_from_index_boundaries_large_n(n):
+    """First/last flat index decode exactly at the largest supported
+    orders (C(n, 2) at the edge of int32)."""
+    total = n * (n - 1) // 2
+    first = qap.pair_from_index(jnp.asarray(0, jnp.int32), n)
+    last = qap.pair_from_index(jnp.asarray(total - 1, jnp.int32), n)
+    assert (int(first[0]), int(first[1])) == (0, 1)
+    assert (int(last[0]), int(last[1])) == (n - 2, n - 1)
+    # num_pairs stays exact where the naive product would overflow int32
+    assert int(qap.num_pairs(jnp.asarray(n, jnp.int32))) == total
+
+
 def test_permutation_utilities():
     key = jax.random.PRNGKey(0)
     p = qap.random_permutation(key, 17)
