@@ -80,6 +80,20 @@ def render_table(data: dict) -> str:
                 _fmt(solve.get("scan", {}).get("maps_per_s"), 1),
                 _fmt(solve.get("event", {}).get("maps_per_s"), 1),
                 _fmt(solve.get("speedup_event_vs_scan"))))
+    sec = data.get("ga_hotloop")
+    if sec:
+        cfg = sec.get("config", {})
+        for key, wave in sorted(sec.get("solve_batch", {}).items()):
+            # baseline: the per-island generation loop (eval="island");
+            # this path: the wide-generation loop (bitwise-equal results)
+            rows.append((
+                f"GA hot loop ({key})",
+                (f"{cfg.get('batch', '?')}-wave, "
+                 f"{cfg.get('generations', '?')} gens x "
+                 f"{cfg.get('islands', '?')} islands"),
+                _fmt(wave.get("island", {}).get("maps_per_s"), 1),
+                _fmt(wave.get("wide", {}).get("maps_per_s"), 1),
+                _fmt(wave.get("speedup_wide_vs_island"))))
     if not rows:
         return "_No benchmark results recorded yet — run the commands above._"
     out = ["| benchmark | workload | baseline (maps/s) | this path (maps/s) "

@@ -20,6 +20,12 @@ Reported per path: mapped-jobs/sec and p50/p99 mapping latency (submit ->
 future resolution).  Results are merged into ``BENCH_mapper.json`` under
 the ``"scheduler_sim"`` key (CI artifact; see ``--json``).
 
+By default the timed paths run warm: ``MappingEngine.warmup()``
+AOT-precompiles every bucket program first, and an extra ``async_cold``
+pass (measured before any compile happens) records what first-wave
+requests pay without it -- the warm-vs-cold p99 lands under ``"warmup"``
+in the JSON.  ``--no-warmup`` skips both and runs everything cold.
+
 With ``--mesh-shape N`` both engines dispatch their bucket waves sharded
 over an N-device instance mesh (``core.batch_sharded``) and results land
 under ``"scheduler_sim_mesh"`` instead, so sharded and unsharded runs can
@@ -195,6 +201,13 @@ def main():
                          "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--json", default="BENCH_mapper.json",
                     help="merge results into this JSON file ('' disables)")
+    ap.add_argument("--warmup", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="AOT-precompile bucket programs via "
+                         "MappingEngine.warmup() before the timed streams "
+                         "(an extra cold async pass is measured first, so "
+                         "the JSON records warm-vs-cold p99); --no-warmup "
+                         "runs everything cold")
     ap.add_argument("--dry-run", action="store_true",
                     help="tiny stream + cluster: CI smoke test")
     args = ap.parse_args()
@@ -246,38 +259,9 @@ def main():
           + (f", waves sharded over a {args.mesh_shape}-device mesh"
              if mesh is not None else ""))
 
-    # Untimed warmup: with pad_batches the engine only ever dispatches
-    # power-of-two wave sizes up to max_batch, so pre-compiling
-    # {1, 2, ..., max_batch} x {cold, warm} per bucket covers every
-    # program both timed paths will run -- neither path is charged jit
-    # compile time.
-    def _rand_sym(b: int, seed: int) -> np.ndarray:
-        rngw = np.random.default_rng(seed)
-        A = rngw.integers(1, 5, (b, b)).astype(np.float32)
-        A = A + A.T
-        np.fill_diagonal(A, 0)
-        return A
-
-    warm = fresh_engine()
-    wave = 1
-    max_wave = 1 << (args.max_batch - 1).bit_length()
-    while wave <= max_wave:
-        for b in buckets:
-            Mw = _rand_sym(b, seed=1000 + 7 * b + wave)
-            for phase in (0, 1):          # cold trace, then warm trace
-                for j in range(wave):
-                    warm.submit(MapRequest(
-                        job_id=f"w{b}-{wave}-{phase}-{j}",
-                        C=_rand_sym(b, 2000 + 13 * b + 31 * wave
-                                    + 7 * phase + j),
-                        M=Mw, algorithm=args.algorithm,
-                        deadline_ms=args.deadline_ms))
-                warm.flush()
-        wave *= 2
-    del warm
-
     results = {}
-    for name, use_flusher in (("sequential", False), ("async", True)):
+
+    def measure(name, use_flusher):
         eng = fresh_engine()
         cluster = ClusterState(M)
         if use_flusher:
@@ -294,6 +278,49 @@ def main():
               f"p99 {r['map_latency_p99_ms']:7.1f} ms, "
               f"batches {r['solver_batches']}, warm {r['warm_starts']}")
 
+    # Warmup: MappingEngine.warmup() AOT-precompiles every (bucket, wave
+    # size, warm-start presence) program the timed paths can dispatch —
+    # for exactly the (algorithm, budget tier) the deadline policy
+    # resolves for this stream — so neither timed path is charged XLA
+    # compile time.  An async pass on a completely cold process state is
+    # measured first: its p99 is what first-wave requests pay without
+    # warmup.  jit caches are process-global, so the cold pass must
+    # precede any compile, and JAX's *persistent* compilation cache (when
+    # configured, e.g. in CI) is switched off around it — otherwise the
+    # "cold" pass would reload prior runs' executables from disk.
+    warmup_info = {"enabled": bool(args.warmup)}
+    if args.warmup:
+        import jax
+        from jax._src import compilation_cache as _cc
+        prev_cc = jax.config.jax_enable_compilation_cache
+        jax.config.update("jax_enable_compilation_cache", False)
+        _cc.reset_cache()
+        try:
+            measure("async_cold", True)
+        finally:
+            jax.config.update("jax_enable_compilation_cache", prev_cc)
+            _cc.reset_cache()
+        warm_eng = fresh_engine()
+        algo, tier = warm_eng.policy.resolve(args.algorithm,
+                                             args.deadline_ms)
+        t0 = time.perf_counter()
+        warmup_info["programs"] = warm_eng.warmup(algorithms=(algo,),
+                                                  tiers=(tier,))
+        warmup_info["seconds"] = time.perf_counter() - t0
+        print(f"    warmup: {warmup_info['programs']} programs "
+              f"({algo}/{tier}) in {warmup_info['seconds']:.1f}s")
+
+    for name, use_flusher in (("sequential", False), ("async", True)):
+        measure(name, use_flusher)
+    if args.warmup:
+        cold = results["async_cold"]["map_latency_p99_ms"]
+        warm_p99 = results["async"]["map_latency_p99_ms"]
+        warmup_info["p99_cold_ms"] = cold
+        warmup_info["p99_warm_ms"] = warm_p99
+        warmup_info["p99_cold_over_warm"] = cold / max(warm_p99, 1e-9)
+        print(f"    p99 cold {cold:.1f} ms -> warm {warm_p99:.1f} ms "
+              f"({warmup_info['p99_cold_over_warm']:.1f}x)")
+
     speedup = (results["async"]["mapped_jobs_per_s"]
                / results["sequential"]["mapped_jobs_per_s"])
     print(f"async vs sequential throughput: {speedup:.2f}x")
@@ -301,7 +328,7 @@ def main():
     if args.json:
         section = ("scheduler_sim" if mesh is None else
                    "scheduler_sim_mesh")
-        common.write_bench_json(args.json, section, {
+        payload = {
             "config": {"jobs": args.jobs, "grid": list(args.grid),
                        "sizes": list(args.sizes),
                        "arrival_rate": args.arrival_rate,
@@ -314,7 +341,11 @@ def main():
             "sequential": results["sequential"],
             "async": results["async"],
             "throughput_speedup": speedup,
-        })
+            "warmup": warmup_info,
+        }
+        if "async_cold" in results:
+            payload["async_cold"] = results["async_cold"]
+        common.write_bench_json(args.json, section, payload)
         print(f"wrote {args.json} [{section}]")
     if args.dry_run:
         print("dry-run OK")

@@ -1,23 +1,33 @@
-"""SA hot-loop microbenchmark: acceptance-event loop vs sequential scan.
+"""Solver hot-loop microbenchmarks: new batched loops vs seed-era loops.
 
-The acceptance-event loop (``SAConfig(loop="event")``, the default since
-the hot-loop restructure) evaluates all of a temperature level's remaining
+``sa`` mode — acceptance-event loop vs sequential candidate scan.  The
+acceptance-event loop (``SAConfig(loop="event")``, the default since the
+hot-loop restructure) evaluates all of a temperature level's remaining
 candidates in one wide batched ``kernels.ops.qap_delta`` dispatch and
 applies the first accepted one — at most ``max_success + 1`` wide rounds
 instead of a depth-``max_neighbors`` sequential scan, with bitwise-equal
-results (tests/test_hotloop.py).  This benchmark times both realisations:
+results (tests/test_hotloop.py).  Timed: per-temperature-step latency and
+candidates-decided/sec over a chain grid, plus end-to-end
+``run_psa_batch`` waves at the serving engine's default budget.
 
-* per-temperature-step latency and candidates-decided/sec over a chain
-  grid — the solver's inner-loop rate (both loops decide the same
-  ``max_neighbors`` candidates per step; computed deltas differ);
-* end-to-end ``run_psa_batch`` waves at the serving engine's default
-  budget — the quantity ``mapper_throughput.py`` tracks.
+``ga`` mode — wide-generation loop vs per-island loop.  The wide
+generation step (``GAConfig(eval="wide")``, the default) runs selection/
+OX/mutation as flattened (islands x n_off) batched ops with **one**
+leading-batch ``kernels.ops.qap_objective`` dispatch per generation and a
+tie-stable ``top_k`` worst-replacement, bitwise-equal to the per-island
+path retained as ``eval="island"`` (tests/test_ga_hotloop.py).  Timed:
+full ``run_pga`` solves (generations/s and offspring-evals/s) and
+end-to-end ``run_pga_batch`` waves, both at the engine's default GA
+budget.
 
-Results merge into ``BENCH_mapper.json`` under ``"solver_hotloop"`` and
-are rendered into README.md by ``benchmarks/readme_table.py``.
+Results merge into ``BENCH_mapper.json`` under ``"solver_hotloop"`` /
+``"ga_hotloop"`` and are rendered into README.md by
+``benchmarks/readme_table.py``.  Equality of old and new loops is
+asserted on every run.
 
 Usage:
-    PYTHONPATH=src python benchmarks/solver_hotloop.py
+    PYTHONPATH=src python benchmarks/solver_hotloop.py             # both
+    PYTHONPATH=src python benchmarks/solver_hotloop.py --mode ga
     PYTHONPATH=src python benchmarks/solver_hotloop.py --dry-run   # CI smoke
 """
 from __future__ import annotations
@@ -31,7 +41,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import annealing
+from repro.core import annealing, genetic
 
 try:                                     # package form (benchmarks.run)
     from . import common
@@ -138,15 +148,77 @@ def bench_solve(n: int, batch: int, cfg: annealing.SAConfig, repeats: int):
     return out
 
 
-def main():
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--json", default="BENCH_mapper.json")
-    ap.add_argument("--dry-run", action="store_true",
-                    help="tiny budgets: CI smoke that still writes JSON")
-    ap.add_argument("--chains", type=int, default=64)
-    ap.add_argument("--repeats", type=int, default=3)
-    args = ap.parse_args()
+def _assert_equal(fa: np.ndarray, fb: np.ndarray) -> None:
+    # The realisations must agree: bitwise on the CPU reference path (the
+    # documented contract); on accelerator backends the Pallas kernels are
+    # validated to ~1e-4 against the reference, so allow that tolerance.
+    if jax.default_backend() == "cpu":
+        assert np.array_equal(fa, fb), (fa, fb)
+    else:
+        np.testing.assert_allclose(fa, fb, rtol=1e-4)
 
+
+def bench_ga_solve(n: int, islands: int, cfg: genetic.GAConfig,
+                   repeats: int):
+    """Full run_pga solves, island vs wide: generations/s + offspring
+    evaluations/s (interleaved A/B repeats; equality asserted)."""
+    C, M = random_instance(n, 11)
+    key = jax.random.PRNGKey(3)
+    pop, n_off = genetic._resolve(cfg, n)
+    variants = {"island": replace(cfg, eval="island"),
+                "wide": replace(cfg, eval="wide")}
+    runs = {name: (lambda c=c: genetic.run_pga(C, M, key, c, islands))
+            for name, c in variants.items()}
+    fs = {name: np.asarray(jax.block_until_ready(run())[1])
+          for name, run in runs.items()}                 # compile + equality
+    _assert_equal(fs["island"], fs["wide"])
+    ts = {name: [] for name in runs}
+    for _ in range(repeats):
+        for name, run in runs.items():                   # interleaved A/B
+            ts[name].append(_timed(run))
+    out = {}
+    for name in runs:
+        t = min(ts[name])
+        out[name] = {
+            "solve_ms": t * 1e3,
+            "generations_per_s": cfg.generations / t,
+            "offspring_evals_per_s": cfg.generations * islands * n_off / t,
+        }
+    out["speedup_wide_vs_island"] = (out["island"]["solve_ms"]
+                                     / out["wide"]["solve_ms"])
+    return out
+
+
+def bench_ga_batch(n: int, batch: int, islands: int, cfg: genetic.GAConfig,
+                   repeats: int):
+    """End-to-end batched run_pga_batch waves (the engine wave quantity)."""
+    insts = [random_instance(n, 200 + i) for i in range(batch)]
+    Cs = jnp.stack([c for c, _ in insts])
+    Ms = jnp.stack([m for _, m in insts])
+    nvs = jnp.full((batch,), n, jnp.int32)
+    keys = jnp.stack([jax.random.PRNGKey(i) for i in range(batch)])
+    variants = {"island": replace(cfg, eval="island"),
+                "wide": replace(cfg, eval="wide")}
+    runs = {name: (lambda c=c: genetic.run_pga_batch(Cs, Ms, keys, c,
+                                                     islands, n_valid=nvs))
+            for name, c in variants.items()}
+    fs = {name: np.asarray(jax.block_until_ready(run())[1])
+          for name, run in runs.items()}
+    _assert_equal(fs["island"], fs["wide"])
+    ts = {name: [] for name in runs}
+    for _ in range(repeats):
+        for name, run in runs.items():
+            ts[name].append(_timed(run))
+    out = {}
+    for name in runs:
+        t = min(ts[name])
+        out[name] = {"wave_ms": t * 1e3, "maps_per_s": batch / t}
+    out["speedup_wide_vs_island"] = (out["wide"]["maps_per_s"]
+                                     / out["island"]["maps_per_s"])
+    return out
+
+
+def run_sa(args) -> None:
     if args.dry_run:
         cfg = annealing.SAConfig(max_neighbors=10, max_success=3,
                                  iters_per_exchange=4,
@@ -192,8 +264,61 @@ def main():
     print(f"sequential depth per temperature level: "
           f"{depth['scan']} -> {depth['event']} "
           f"({depth['scan'] / depth['event']:.1f}x shallower)")
-    common.write_bench_json(args.json, "solver_hotloop", payload)
-    print(f"wrote {args.json} [solver_hotloop]")
+    if args.json:
+        common.write_bench_json(args.json, "solver_hotloop", payload)
+        print(f"wrote {args.json} [solver_hotloop]")
+
+
+def run_ga(args) -> None:
+    if args.dry_run:
+        cfg = genetic.GAConfig(generations=6, pop_size=8)
+        ns, batch, islands = [16], 2, 2
+    else:
+        # engine-default GA budget: what the serving path actually runs
+        cfg = genetic.GAConfig(generations=80, pop_size=32)
+        ns, batch, islands = [32, 64], 8, 2
+
+    pop, n_off = genetic._resolve(cfg, ns[0])
+    payload = {
+        "config": {"generations": cfg.generations, "pop_size": pop,
+                   "n_offspring": n_off, "islands": islands,
+                   "batch": batch, "backend": jax.default_backend(),
+                   "dry_run": args.dry_run},
+        "solve": {}, "solve_batch": {},
+    }
+    for n in ns:
+        solo = bench_ga_solve(n, islands, cfg, args.repeats)
+        wave = bench_ga_batch(n, batch, islands, cfg, args.repeats)
+        payload["solve"][f"n={n}"] = solo
+        payload["solve_batch"][f"n={n}"] = wave
+        print(f"n={n:4d}  solve: "
+              f"{solo['island']['generations_per_s']:7.1f} -> "
+              f"{solo['wide']['generations_per_s']:7.1f} gens/s "
+              f"({solo['speedup_wide_vs_island']:.2f}x, "
+              f"{solo['wide']['offspring_evals_per_s']:.0f} offspring-evals/s)  "
+              f"wave: {wave['island']['maps_per_s']:6.2f} -> "
+              f"{wave['wide']['maps_per_s']:6.2f} maps/s "
+              f"({wave['speedup_wide_vs_island']:.2f}x)")
+    if args.json:
+        common.write_bench_json(args.json, "ga_hotloop", payload)
+        print(f"wrote {args.json} [ga_hotloop]")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default="BENCH_mapper.json")
+    ap.add_argument("--mode", choices=("sa", "ga", "both"), default="both",
+                    help="which hot loop to benchmark")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny budgets: CI smoke that still writes JSON")
+    ap.add_argument("--chains", type=int, default=64)
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args()
+
+    if args.mode in ("sa", "both"):
+        run_sa(args)
+    if args.mode in ("ga", "both"):
+        run_ga(args)
 
 
 if __name__ == "__main__":

@@ -8,7 +8,10 @@ ring migration, transferring the best features between populations.
 Stage 1 reuses ``annealing._chain_round`` / ``temperature_step``, so the
 composite's SA phase runs the same acceptance-event hot loop (wide batched
 delta evaluation through ``kernels.ops``, docs/DESIGN.md §4) as plain PSA,
-including the ``cfg.sa.loop`` golden-reference switch.
+including the ``cfg.sa.loop`` golden-reference switch.  Stage 2 reuses
+``genetic.generation_step``, so the GA rounds run the same wide-generation
+hot loop (one leading-batch ``ops.qap_objective`` dispatch per generation)
+as plain PGA, including the ``cfg.ga.eval`` golden-reference switch.
 """
 from __future__ import annotations
 
@@ -87,13 +90,8 @@ def _pca_impl(C: Array, M: Array, key: Array, cfg: CompositeConfig,
                             init_perm)
 
     def gen_step(st, key):
-        keys = jax.random.split(key, num_processes)
-        st = jax.vmap(
-            lambda s, k: genetic.breed(C, M, s, k, cfg.ga, n_valid))(st, keys)
-        bp, bf = jax.vmap(genetic.island_best)(st)
-        mig_p, mig_f = jnp.roll(bp, 1, axis=0), jnp.roll(bf, 1, axis=0)
-        st = jax.vmap(genetic.receive_migrants)(st, mig_p, mig_f)
-        return st, bf.min()
+        return genetic.generation_step(C, M, st, key, cfg.ga, num_processes,
+                                       n_valid)
 
     gen_keys = jax.random.split(krun, cfg.ga.generations)
     state, history = jax.lax.scan(gen_step, state, gen_keys)

@@ -15,9 +15,20 @@ Faithful to the paper's algorithm (S3):
 Representation: an individual is the permutation array ``p`` (gene i = node
 assigned to process i), matching the paper's encoding.
 
-Offspring evaluation is the GA cost driver (full O(N^2) objective per
-descendant, paper S5); it routes through ``repro.kernels.ops.qap_objective``
-so TPU runs hit the Pallas MXU kernel.
+Hardware adaptation (docs/DESIGN.md §4): offspring evaluation is the GA
+cost driver (full O(N^2) objective per descendant, paper S5), so the
+generation step is a **wide-generation** loop (``GAConfig.eval="wide"``,
+the default): selection, OX crossover, and mutation run as flattened
+(islands x n_off) batched ops, offspring fitness is **one** leading-batch
+``repro.kernels.ops.qap_objective`` dispatch per generation (and one
+(islands x pop) call at init) -- a single Pallas launch whose grid spans
+every (island, offspring) pair on TPU, the vectorized reference on CPU --
+and the worst-replacement is a tie-stable ``lax.top_k`` formulation
+instead of a full ``argsort``.  Same keys + bitwise-equal operations =>
+populations are **bitwise identical** to the per-island path, which is
+retained verbatim as ``GAConfig(eval="island")`` and pinned as the golden
+reference (tests/test_ga_hotloop.py); ``benchmarks/solver_hotloop.py ga``
+tracks the island-vs-wide numbers.
 
 Mutation fidelity note: per-gene Bernoulli(0.001) swaps are realised as a
 fixed budget of ``MAX_MUT`` candidate swaps each gated with probability
@@ -53,6 +64,8 @@ class GAConfig:
     tournament: int = 2
     seed_identity: bool = False  # include the as-allocated order in the
                                  # initial population (placement use case)
+    eval: str = "wide"           # "wide" | "island" generation realisation
+                                 # (bitwise-identical; see module docstring)
 
 
 class GAState(NamedTuple):
@@ -69,10 +82,79 @@ def order_crossover(key: Array, p1: Array, p2: Array,
     """OX: child keeps p1[c1:c2]; remaining positions are filled with p2's
     genes in p2-order starting at c2 (cyclically), skipping duplicates.
 
+    Scatter-free formulation: segment membership and the rank-matched fill
+    are computed with one-hot comparison matrices and gathers (XLA CPU
+    scatters dominate the GA generation step otherwise).  All outputs are
+    integers, so the child is **bitwise identical** to the seed-era
+    scatter formulation, which is retained as
+    ``_order_crossover_scatter`` (the ``eval="island"`` golden path) and
+    pinned by ``tests/test_ga_hotloop.py``.
+
     With ``n_valid`` (instance batching) both parents must be identity on
     the padded tail; the crossover then acts on the valid prefix only and
     the child inherits the same invariant.
     """
+    n = p1.shape[0]
+    k1, k2 = jax.random.split(key)
+    pos = jnp.arange(n)
+    if n_valid is None:
+        c1 = jax.random.randint(k1, (), 0, n)
+        c2 = jax.random.randint(k2, (), 0, n)
+        c1, c2 = jnp.minimum(c1, c2), jnp.maximum(c1, c2)
+
+        seg_mask = (pos >= c1) & (pos < c2)              # positions from p1
+        # gene_in_seg[g] = any position t in the segment with p1[t] == g
+        gene_in_seg = jnp.any((p1[:, None] == pos[None, :]) &
+                              seg_mask[:, None], axis=0)
+
+        rot = (pos + c2) % n                             # fill starts at c2
+        genes = p2[rot]                                  # p2 genes from c2 on
+        keep = ~gene_in_seg[genes]                       # genes to place
+        avail = ~seg_mask[rot]                           # positions to fill
+        t_of_q = (pos - c2) % n                          # inverse of rot
+        tail = None
+    else:
+        nv = jnp.maximum(n_valid, 1)
+        c1 = jax.random.randint(k1, (), 0, nv)
+        c2 = jax.random.randint(k2, (), 0, nv)
+        c1, c2 = jnp.minimum(c1, c2), jnp.maximum(c1, c2)
+
+        validp = pos < nv
+        seg_mask = (pos >= c1) & (pos < c2)              # always inside prefix
+        gene_in_seg = jnp.any((p1[:, None] == pos[None, :]) &
+                              seg_mask[:, None], axis=0)
+
+        # Cyclic rotation of the *valid* prefix only; padded slots map to
+        # themselves so their (pad) genes are excluded below.
+        rot = jnp.where(validp, (pos + c2) % nv, pos)
+        genes = p2[rot]
+        keep = ~gene_in_seg[genes] & validp
+        avail = ~seg_mask[rot] & validp
+        t_of_q = jnp.where(validp, (pos - c2) % nv, pos)
+        tail = validp                                    # pad tail = identity
+
+    # Rank matching without scatters: the r-th kept gene fills the r-th
+    # available position.  val_by_rank[r] = the unique kept gene of rank r
+    # (a one-hot row sum); position q (outside the segment) has rank
+    # pos_rank[t_of_q] in the cyclic fill order.
+    gene_rank = jnp.cumsum(keep) - 1
+    pos_rank = jnp.cumsum(avail) - 1
+    rankmat = (gene_rank[:, None] == pos[None, :]) & keep[:, None]
+    val_by_rank = jnp.sum(jnp.where(rankmat, genes[:, None], 0), axis=0)
+    r_of_q = jnp.clip(pos_rank[t_of_q], 0, n - 1)
+    child = jnp.where(seg_mask, p1, val_by_rank[r_of_q])
+    if tail is not None:
+        child = jnp.where(tail, child, pos)
+    return child.astype(p1.dtype)
+
+
+def _order_crossover_scatter(key: Array, p1: Array, p2: Array,
+                             n_valid: Optional[Array] = None) -> Array:
+    """Seed-era OX realisation (scatter/cumsum rank matching), kept
+    verbatim as the ``eval="island"`` golden reference and the old side of
+    the ``benchmarks/solver_hotloop.py ga`` comparison.  Bitwise-equal to
+    :func:`order_crossover` for every key (integer outputs; pinned in
+    tests/test_ga_hotloop.py)."""
     n = p1.shape[0]
     k1, k2 = jax.random.split(key)
     if n_valid is None:
@@ -152,6 +234,22 @@ def tournament_select(key: Array, fit: Array, k: int) -> Array:
     return idx[jnp.argmin(fit[idx])]
 
 
+def worst_slots(fit: Array, n_off: int) -> Array:
+    """Population slots of the ``n_off`` worst members, tie-stable.
+
+    A ``lax.top_k`` formulation of ``jnp.argsort(fit)[-n_off:]`` (O(P)
+    selection instead of a full O(P log P) sort per generation): the
+    stable ascending argsort resolves ties toward the *higher* index at
+    the cut, while ``top_k`` prefers the lower index, so the selection
+    runs on the reversed array and maps back — bitwise-identical slot
+    vectors, including the order (ascending fitness), for every tie
+    pattern (tests/test_ga_hotloop.py).
+    """
+    pop = fit.shape[0]
+    _, ridx = jax.lax.top_k(fit[::-1], n_off)
+    return (pop - 1 - ridx)[::-1]
+
+
 # ----------------------------------------------------------------------------
 # Island GA
 # ----------------------------------------------------------------------------
@@ -162,14 +260,16 @@ def _resolve(cfg: GAConfig, n: int) -> Tuple[int, int]:
     return pop, off
 
 
-def init_island(C: Array, M: Array, key: Array, cfg: GAConfig,
-                n_valid: Optional[Array] = None,
-                init_perm: Optional[Array] = None) -> GAState:
-    """``init_perm`` (warm start) places a given feasible permutation in
-    population slot 0, generalizing ``seed_identity``; a negative first
-    entry is the "no warm start" sentinel and keeps the member slot 0
-    already holds (random, or identity under ``seed_identity``)."""
-    n = C.shape[0]
+def _resolve_n_off(cfg: GAConfig, pop_actual: int) -> int:
+    # composite may seed pop != graph order; never breed more than pop
+    n_off = cfg.n_offspring if cfg.n_offspring > 0 else max(pop_actual // 2, 1)
+    return min(n_off, pop_actual)
+
+
+def _init_population(key: Array, cfg: GAConfig, n: int,
+                     n_valid: Optional[Array] = None,
+                     init_perm: Optional[Array] = None) -> Array:
+    """One island's initial population (permutations only, no fitness)."""
     pop_size, _ = _resolve(cfg, n)
     if n_valid is None:
         pop = qap.random_permutations(key, pop_size, n)
@@ -181,16 +281,30 @@ def init_island(C: Array, M: Array, key: Array, cfg: GAConfig,
         use = init_perm[0] >= 0
         seeded = jnp.where(use, init_perm.astype(pop.dtype), pop[0])
         pop = pop.at[0].set(seeded)
+    return pop
+
+
+def init_island(C: Array, M: Array, key: Array, cfg: GAConfig,
+                n_valid: Optional[Array] = None,
+                init_perm: Optional[Array] = None) -> GAState:
+    """``init_perm`` (warm start) places a given feasible permutation in
+    population slot 0, generalizing ``seed_identity``; a negative first
+    entry is the "no warm start" sentinel and keeps the member slot 0
+    already holds (random, or identity under ``seed_identity``)."""
+    pop = _init_population(key, cfg, C.shape[0], n_valid, init_perm)
     fit = ops.qap_objective(C, M, pop)
     return GAState(pop=pop, fit=fit)
 
 
-def breed(C: Array, M: Array, state: GAState, key: Array, cfg: GAConfig,
-          n_valid: Optional[Array] = None) -> GAState:
-    """One generation on one island (paper steps 2-5)."""
-    pop_actual = state.pop.shape[0]   # composite may seed pop != graph order
-    n_off = cfg.n_offspring if cfg.n_offspring > 0 else max(pop_actual // 2, 1)
-    n_off = min(n_off, pop_actual)
+def _offspring(state: GAState, key: Array, cfg: GAConfig,
+               n_valid: Optional[Array] = None) -> Array:
+    """One island's descendants (paper steps 2-3): tournament selection,
+    OX crossover, swap mutation.  Pure population/PRNG work — no
+    objective evaluation — so the wide generation step can run it
+    flattened over (islands x n_off) and score every island's offspring
+    in a single ``ops.qap_objective`` dispatch."""
+    pop_actual = state.pop.shape[0]
+    n_off = _resolve_n_off(cfg, pop_actual)
     ksel, kx, kmut, kxp = jax.random.split(key, 4)
 
     sel_keys = jax.random.split(ksel, 2 * n_off).reshape(n_off, 2, 2)
@@ -212,10 +326,17 @@ def breed(C: Array, M: Array, state: GAState, key: Array, cfg: GAConfig,
     mkeys = jax.random.split(kmut, n_off)
     children = jax.vmap(
         lambda k, p: swap_mutation(k, p, cfg.p_mutation, n_valid))(mkeys, children)
-    child_fit = ops.qap_objective(C, M, children)
+    return children
 
-    # Replace the worst n_off individuals with the descendants (paper step 4).
-    worst = jnp.argsort(state.fit)[-n_off:]
+
+def _replace_worst(state: GAState, children: Array,
+                   child_fit: Array) -> GAState:
+    """Replace the worst n_off individuals with the descendants (paper
+    step 4) via the tie-stable ``worst_slots`` top_k formulation, plus
+    the elitism guard.
+    """
+    n_off = children.shape[0]
+    worst = worst_slots(state.fit, n_off)
     pop = state.pop.at[worst].set(children)
     fit = state.fit.at[worst].set(child_fit)
     # Elitism guard: with n_off == pop_size every member (including the
@@ -223,7 +344,69 @@ def breed(C: Array, M: Array, state: GAState, key: Array, cfg: GAConfig,
     # previous best over the new worst in that case.  A bitwise no-op
     # whenever the best survived the replacement, i.e. all n_off < pop
     # configs -- and what makes the warm-start never-worse-than-seed
-    # guarantee hold for every config.
+    # guarantee hold for every config.  (top_k(fit, 1) == argmax: both
+    # take the first maximum.)
+    prev_i = jnp.argmin(state.fit)
+    prev_p, prev_f = state.pop[prev_i], state.fit[prev_i]
+    worst_new = jax.lax.top_k(fit, 1)[1][0]
+    lost = prev_f < fit.min()
+    pop = pop.at[worst_new].set(jnp.where(lost, prev_p, pop[worst_new]))
+    fit = fit.at[worst_new].set(jnp.where(lost, prev_f, fit[worst_new]))
+    return GAState(pop=pop, fit=fit)
+
+
+def breed(C: Array, M: Array, state: GAState, key: Array, cfg: GAConfig,
+          n_valid: Optional[Array] = None) -> GAState:
+    """One generation on one island (paper steps 2-5).
+
+    Composition of :func:`_offspring`, one ``ops.qap_objective`` dispatch,
+    and :func:`_replace_worst` — the per-island form of the wide
+    generation step, used by the mesh-distributed PGA (one island per
+    device, ``core.distributed``).
+    """
+    children = _offspring(state, key, cfg, n_valid)
+    child_fit = ops.qap_objective(C, M, children)
+    return _replace_worst(state, children, child_fit)
+
+
+def _breed_island(C: Array, M: Array, state: GAState, key: Array,
+                  cfg: GAConfig, n_valid: Optional[Array] = None) -> GAState:
+    """Seed-era generation step, kept verbatim: scatter-based OX, full
+    ``argsort``/``argmax`` worst-replacement, per-island objective
+    dispatch.  This is the ``GAConfig(eval="island")`` golden reference
+    (bitwise-equal to :func:`breed`; tests/test_ga_hotloop.py) and the
+    old side of the ``benchmarks/solver_hotloop.py ga`` comparison."""
+    pop_actual = state.pop.shape[0]   # composite may seed pop != graph order
+    n_off = cfg.n_offspring if cfg.n_offspring > 0 else max(pop_actual // 2, 1)
+    n_off = min(n_off, pop_actual)
+    ksel, kx, kmut, kxp = jax.random.split(key, 4)
+
+    sel_keys = jax.random.split(ksel, 2 * n_off).reshape(n_off, 2, 2)
+    i1 = jax.vmap(lambda k: tournament_select(k, state.fit, cfg.tournament))(sel_keys[:, 0])
+    i2 = jax.vmap(lambda k: tournament_select(k, state.fit, cfg.tournament))(sel_keys[:, 1])
+    par1, par2 = state.pop[i1], state.pop[i2]
+    if cfg.crossover == "oxs":
+        # "crossover with sorting": the fitter parent donates the segment.
+        swap = state.fit[i2] < state.fit[i1]
+        par1, par2 = (jnp.where(swap[:, None], par2, par1),
+                      jnp.where(swap[:, None], par1, par2))
+
+    xkeys = jax.random.split(kx, n_off)
+    do_x = jax.random.uniform(kxp, (n_off,)) < cfg.p_crossover
+    children = jax.vmap(
+        lambda k, a, b: _order_crossover_scatter(k, a, b, n_valid))(xkeys, par1, par2)
+    children = jnp.where(do_x[:, None], children, par1)
+
+    mkeys = jax.random.split(kmut, n_off)
+    children = jax.vmap(
+        lambda k, p: swap_mutation(k, p, cfg.p_mutation, n_valid))(mkeys, children)
+    child_fit = ops.qap_objective(C, M, children)
+
+    # Replace the worst n_off individuals with the descendants (paper step 4).
+    worst = jnp.argsort(state.fit)[-n_off:]
+    pop = state.pop.at[worst].set(children)
+    fit = state.fit.at[worst].set(child_fit)
+    # Elitism guard (see _replace_worst).
     prev_i = jnp.argmin(state.fit)
     prev_p, prev_f = state.pop[prev_i], state.fit[prev_i]
     worst_new = jnp.argmax(fit)
@@ -247,31 +430,73 @@ def island_best(state: GAState) -> Tuple[Array, Array]:
     return state.pop[i], state.fit[i]
 
 
+def generation_step(C: Array, M: Array, state: GAState, key: Array,
+                    cfg: GAConfig, num_processes: int,
+                    n_valid: Optional[Array] = None
+                    ) -> Tuple[GAState, Array]:
+    """One multi-island generation (breeding + ring migration).
+
+    ``cfg.eval`` picks the realisation:
+
+    * ``"wide"`` (default): every island's selection/crossover/mutation
+      runs as flattened (islands x n_off) batched ops and **one** wide
+      ``ops.qap_objective`` call scores all offspring — on TPU a single
+      kernel launch whose grid spans every (island, offspring) pair,
+      instead of per-island kernel calls issued under ``vmap``;
+    * ``"island"``: the seed-era ``vmap(_breed_island)`` path, pinned as
+      the golden reference.
+
+    Both consume the same keys and apply bitwise-equal operations, so the
+    resulting populations are bitwise identical (tests/test_ga_hotloop.py).
+    Shared by ``_pga_impl`` and the composite solver's GA rounds.  Returns
+    (new_state, pre-migration global best) — the history entry.
+    """
+    keys = jax.random.split(key, num_processes)
+    if cfg.eval == "wide":
+        children = jax.vmap(
+            lambda s, k: _offspring(s, k, cfg, n_valid))(state, keys)
+        child_fit = ops.qap_objective(C, M, children)   # ONE wide dispatch
+        state = jax.vmap(_replace_worst)(state, children, child_fit)
+    elif cfg.eval == "island":
+        state = jax.vmap(
+            lambda s, k: _breed_island(C, M, s, k, cfg, n_valid))(state, keys)
+    else:
+        raise ValueError(f"unknown generation realisation {cfg.eval!r}")
+    bp, bf = jax.vmap(island_best)(state)
+    # Ring migration: island i receives the best of island i-1.
+    mig_p, mig_f = jnp.roll(bp, 1, axis=0), jnp.roll(bf, 1, axis=0)
+    state = jax.vmap(receive_migrants)(state, mig_p, mig_f)
+    return state, bf.min()
+
+
 def _pga_impl(C: Array, M: Array, key: Array, cfg: GAConfig,
               num_processes: int, n_valid: Optional[Array],
               init_perm: Optional[Array] = None
               ) -> Tuple[Array, Array, Array]:
     """Shared PGA body for single-instance and instance-batched paths.
 
-    ``init_perm`` seeds slot 0 of every island; ``breed``'s elitism guard
-    then guarantees the final best is no worse than the seed's objective
-    for every config (even total-replacement ones).
+    ``init_perm`` seeds slot 0 of every island; the elitism guard in the
+    worst-replacement then guarantees the final best is no worse than the
+    seed's objective for every config (even total-replacement ones).
     """
+    if cfg.eval not in ("wide", "island"):
+        raise ValueError(f"unknown generation realisation {cfg.eval!r}")
     if n_valid is not None:
         C = qap.mask_flows(C, n_valid)
+    n = C.shape[0]
     kinit, krun = jax.random.split(key)
     init_keys = jax.random.split(kinit, num_processes)
-    state = jax.vmap(
-        lambda k: init_island(C, M, k, cfg, n_valid, init_perm))(init_keys)
+    if cfg.eval == "wide":
+        # One (islands x pop) fitness dispatch instead of per-island calls.
+        pops = jax.vmap(
+            lambda k: _init_population(k, cfg, n, n_valid, init_perm))(init_keys)
+        state = GAState(pop=pops, fit=ops.qap_objective(C, M, pops))
+    else:
+        state = jax.vmap(
+            lambda k: init_island(C, M, k, cfg, n_valid, init_perm))(init_keys)
 
     def gen_step(st, key):
-        keys = jax.random.split(key, num_processes)
-        st = jax.vmap(lambda s, k: breed(C, M, s, k, cfg, n_valid))(st, keys)
-        bp, bf = jax.vmap(island_best)(st)
-        # Ring migration: island i receives the best of island i-1.
-        mig_p, mig_f = jnp.roll(bp, 1, axis=0), jnp.roll(bf, 1, axis=0)
-        st = jax.vmap(receive_migrants)(st, mig_p, mig_f)
-        return st, bf.min()
+        return generation_step(C, M, st, key, cfg, num_processes, n_valid)
 
     gen_keys = jax.random.split(krun, cfg.generations)
     state, history = jax.lax.scan(gen_step, state, gen_keys)
@@ -307,6 +532,9 @@ def run_pga_batch(Cs: Array, Ms: Array, keys: Array, cfg: GAConfig,
     Cs, Ms: (B, N, N); keys: (B, 2); n_valid: optional (B,); init_perm:
     optional (B, N) warm starts (negative first entry = cold).  Entry b
     equals ``run_pga(Cs[b], Ms[b], keys[b], ..., n_valid[b], init_perm[b])``.
+    The wide generation step's objective dispatch folds this instance axis
+    into its leading batch, so TPU waves still launch one kernel per
+    generation (grid: instances x islands x offspring).
     """
     return qap.vmap_instances(
         lambda c, m, k, nv, ip: _pga_impl(c, m, k, cfg, num_processes, nv,

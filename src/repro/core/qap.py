@@ -26,7 +26,11 @@ Array = jax.Array
 def objective(C: Array, M: Array, p: Array) -> Array:
     """F(p) = sum_{k,l} C[k,l] * M[p[k], p[l]].
 
-    ``p`` may have leading batch dimensions; C, M are (N, N).
+    ``p`` may have leading batch dimensions; C, M are (N, N).  Reporting /
+    correctness path: the solver hot loops evaluate permutation batches
+    through the leading-batch kernel dispatch ``repro.kernels.ops.
+    qap_objective`` instead (one wide dispatch per GA generation, Pallas
+    MXU kernel on TPU — docs/DESIGN.md §4).
     """
     if p.ndim == 1:
         Mp = M[p][:, p]          # (N, N) gather rows then columns

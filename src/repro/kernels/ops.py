@@ -3,14 +3,38 @@
 On TPU backends the Pallas kernels are used; on CPU (this container) the
 pure-jnp references run, with ``interpret=True`` available for kernel
 validation.  Call sites in ``repro.core`` go through these wrappers only.
+
+Both dispatches are **leading-batch aware** (``qap_objective``:
+``(..., P, N) -> (..., P)``; ``qap_delta``: ``(..., N)`` x ``(..., K, 2)
+-> (..., K)``), and on the kernel path they are additionally wrapped in
+``jax.custom_batching.custom_vmap`` rules that fold every outer ``vmap``
+axis into the kernels' explicit leading batch:
+
+* a vmap over permutations/candidates only (chains, solvers, islands)
+  joins the leading dims of one wide kernel call — the grid grows, the
+  launch count does not;
+* a vmap that also batches ``C``/``M`` (the batched solvers' instance
+  axis) routes to the kernels' instance-batched form (``C``/``M`` of
+  shape ``(B, N, N)``), again one launch.
+
+A ``pallas_call`` therefore never reaches jax's generic vmap batching
+rule.  That rule silently falls back to a *sequential per-element loop*
+whenever a scalar-prefetch operand is batched (the delta kernel's case)
+— the exact failure mode the wide dispatch removes; a trace-level
+regression test in ``tests/test_kernels.py`` pins this for all three
+batch solvers.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
+import jax.numpy as jnp
 
 from . import ref
-from .qap_delta import qap_delta_pallas, qap_delta_pallas_batch
-from .qap_objective import qap_objective_pallas, MAX_KERNEL_N, _pad_to, LANE
+from .qap_delta import qap_delta_pallas_batch
+from .qap_objective import (qap_objective_pallas_batch, MAX_KERNEL_N,
+                            _pad_to, LANE)
 
 Array = jax.Array
 
@@ -19,14 +43,139 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _bcast(x: Array, batched: bool, axis_size: int) -> Array:
+    """Give unbatched operands the mapped axis explicitly (leading)."""
+    return x if batched else jnp.broadcast_to(x, (axis_size,) + x.shape)
+
+
+# ---------------------------------------------------------------- objective
+
+@functools.lru_cache(maxsize=None)
+def _objective_shared(interpret: bool):
+    """Kernel dispatch for shared (N, N) matrices; perms (..., N) -> (...).
+
+    The custom-vmap rule turns outer vmaps into leading batch dims (and
+    hands instance-batched ``C``/``M`` to :func:`_objective_inst`), so the
+    Pallas call always sees the full batch in its grid.
+    """
+    @jax.custom_batching.custom_vmap
+    def obj(C, M, perms):
+        lead = perms.shape[:-1]
+        out = qap_objective_pallas_batch(
+            C, M, perms.reshape((1, -1, perms.shape[-1])), interpret=interpret)
+        return out.reshape(lead)
+
+    @obj.def_vmap
+    def obj_vmap(axis_size, in_batched, C, M, perms):
+        cb, mb, pb = in_batched
+        perms = _bcast(perms, pb, axis_size)
+        if not (cb or mb):
+            return obj(C, M, perms), True        # axis joins the leading dims
+        return _objective_inst(interpret)(
+            _bcast(C, cb, axis_size), _bcast(M, mb, axis_size), perms), True
+
+    return obj
+
+
+@functools.lru_cache(maxsize=None)
+def _objective_inst(interpret: bool):
+    """Instance-batched form: C, M (B, N, N); perms (B, ..., N) -> (B, ...)."""
+    @jax.custom_batching.custom_vmap
+    def obj_i(Cs, Ms, perms):
+        b, n = Cs.shape[0], perms.shape[-1]
+        lead = perms.shape[:-1]
+        out = qap_objective_pallas_batch(
+            Cs, Ms, perms.reshape((b, -1, n)), interpret=interpret)
+        return out.reshape(lead)
+
+    @obj_i.def_vmap
+    def obj_i_vmap(axis_size, in_batched, Cs, Ms, perms):
+        cb, mb, pb = in_batched
+        Cs = _bcast(Cs, cb, axis_size)
+        Ms = _bcast(Ms, mb, axis_size)
+        perms = _bcast(perms, pb, axis_size)
+        b0 = Cs.shape[1]
+        out = obj_i(Cs.reshape((-1,) + Cs.shape[2:]),     # merge into the
+                    Ms.reshape((-1,) + Ms.shape[2:]),     # instance axis
+                    perms.reshape((-1,) + perms.shape[2:]))
+        return out.reshape((axis_size, b0) + out.shape[1:]), True
+
+    return obj_i
+
+
 def qap_objective(C: Array, M: Array, perms: Array, *,
                   force_pallas: bool = False, interpret: bool = False) -> Array:
-    """Batched objective F (B,) for perms (B, N)."""
-    n = C.shape[0]
+    """Leading-batch objective dispatch: F for perms (..., P, N) -> (..., P).
+
+    One call evaluates every permutation of the batch — the GA's
+    (islands x offspring) set per generation goes through here as a single
+    dispatch.  On CPU the vectorized reference runs (bitwise-equal to the
+    per-permutation form); on TPU one Pallas launch whose grid spans every
+    (leading-dim, permutation) pair, with outer vmaps (e.g. the batched
+    solvers' instance axis) folded into the grid rather than batching the
+    kernel.
+    """
+    n = perms.shape[-1]
     fits = _pad_to(max(n, LANE), LANE) <= MAX_KERNEL_N
     if force_pallas or (_on_tpu() and fits):
-        return qap_objective_pallas(C, M, perms, interpret=interpret or not _on_tpu())
+        return _objective_shared(bool(interpret or not _on_tpu()))(C, M, perms)
     return ref.qap_objective_ref(C, M, perms)
+
+
+# -------------------------------------------------------------------- delta
+
+@functools.lru_cache(maxsize=None)
+def _delta_shared(interpret: bool):
+    """Kernel dispatch for shared matrices; (..., N) x (..., K, 2) -> (..., K)."""
+    @jax.custom_batching.custom_vmap
+    def delta(C, M, p, pairs):
+        n, k = p.shape[-1], pairs.shape[-2]
+        lead = p.shape[:-1]
+        out = qap_delta_pallas_batch(
+            C, M, p.reshape((-1, n)), pairs.reshape((-1, k, 2)),
+            interpret=interpret)
+        return out.reshape(lead + (k,))
+
+    @delta.def_vmap
+    def delta_vmap(axis_size, in_batched, C, M, p, pairs):
+        cb, mb, pb, rb = in_batched
+        p = _bcast(p, pb, axis_size)
+        pairs = _bcast(pairs, rb, axis_size)
+        if not (cb or mb):
+            return delta(C, M, p, pairs), True
+        return _delta_inst(interpret)(
+            _bcast(C, cb, axis_size), _bcast(M, mb, axis_size), p, pairs), True
+
+    return delta
+
+
+@functools.lru_cache(maxsize=None)
+def _delta_inst(interpret: bool):
+    """Instance-batched form: C, M (B, N, N); p (B, ..., N) -> (B, ..., K)."""
+    @jax.custom_batching.custom_vmap
+    def delta_i(Cs, Ms, p, pairs):
+        n, k = p.shape[-1], pairs.shape[-2]
+        lead = p.shape[:-1]
+        out = qap_delta_pallas_batch(
+            Cs, Ms, p.reshape((-1, n)), pairs.reshape((-1, k, 2)),
+            interpret=interpret)
+        return out.reshape(lead + (k,))
+
+    @delta_i.def_vmap
+    def delta_i_vmap(axis_size, in_batched, Cs, Ms, p, pairs):
+        cb, mb, pb, rb = in_batched
+        Cs = _bcast(Cs, cb, axis_size)
+        Ms = _bcast(Ms, mb, axis_size)
+        p = _bcast(p, pb, axis_size)
+        pairs = _bcast(pairs, rb, axis_size)
+        b0 = Cs.shape[1]
+        out = delta_i(Cs.reshape((-1,) + Cs.shape[2:]),
+                      Ms.reshape((-1,) + Ms.shape[2:]),
+                      p.reshape((-1,) + p.shape[2:]),
+                      pairs.reshape((-1,) + pairs.shape[2:]))
+        return out.reshape((axis_size, b0) + out.shape[1:]), True
+
+    return delta_i
 
 
 def qap_delta(C: Array, M: Array, p: Array, pairs: Array, *,
@@ -39,16 +188,10 @@ def qap_delta(C: Array, M: Array, p: Array, pairs: Array, *,
     scores all remaining candidates of a temperature level in one call):
     on CPU it runs the vectorized reference (bitwise-equal per candidate
     to ``core.qap.swap_delta``), on TPU the Pallas kernel — a single
-    launch whose grid spans every (leading-dim, candidate) pair.
+    launch whose grid spans every (leading-dim, candidate) pair, with
+    outer vmaps (chains, solvers, instances) folded into the grid.
     """
     on_tpu = _on_tpu()
     if not (force_pallas or on_tpu):
         return ref.qap_delta_ref(C, M, p, pairs)
-    interp = interpret or not on_tpu
-    if p.ndim == 1:
-        return qap_delta_pallas(C, M, p, pairs, interpret=interp)
-    lead = p.shape[:-1]
-    out = qap_delta_pallas_batch(
-        C, M, p.reshape((-1, p.shape[-1])),
-        pairs.reshape((-1,) + pairs.shape[-2:]), interpret=interp)
-    return out.reshape(lead + (pairs.shape[-2],))
+    return _delta_shared(bool(interpret or not on_tpu))(C, M, p, pairs)

@@ -45,7 +45,7 @@ def _delta_kernel(info_ref,            # (B*K, 4) int32 scalar prefetch: a, b, u
                   m_row_u, m_row_v,    # (1, n_pad) rows of M
                   mt_row_u, mt_row_v,  # (1, n_pad) rows of M^T (= columns of M)
                   out_ref,             # (1,) f32
-                  *, n_pad: int):
+                  *, n_pad: int, mat_batched: bool = False):
     k = pl.program_id(0)
     a = info_ref[k, 0]
     b = info_ref[k, 1]
@@ -54,14 +54,17 @@ def _delta_kernel(info_ref,            # (B*K, 4) int32 scalar prefetch: a, b, u
     idx = jax.lax.iota(jnp.int32, n_pad)
     mask = (idx != a) & (idx != b)
 
-    ca = c_row_a[0, :].astype(jnp.float32)     # C[a, :]
-    cb = c_row_b[0, :].astype(jnp.float32)     # C[b, :]
-    cta = ct_row_a[0, :].astype(jnp.float32)   # C[:, a]
-    ctb = ct_row_b[0, :].astype(jnp.float32)   # C[:, b]
-    mu = m_row_u[0, :].astype(jnp.float32)     # M[u, :]
-    mv = m_row_v[0, :].astype(jnp.float32)     # M[v, :]
-    mtu = mt_row_u[0, :].astype(jnp.float32)   # M[:, u]
-    mtv = mt_row_v[0, :].astype(jnp.float32)   # M[:, v]
+    # With instance-batched matrices each row block carries a leading
+    # length-1 instance dim ((1, 1, n_pad) instead of (1, n_pad)).
+    row = (lambda r: r[0, 0, :]) if mat_batched else (lambda r: r[0, :])
+    ca = row(c_row_a).astype(jnp.float32)      # C[a, :]
+    cb = row(c_row_b).astype(jnp.float32)      # C[b, :]
+    cta = row(ct_row_a).astype(jnp.float32)    # C[:, a]
+    ctb = row(ct_row_b).astype(jnp.float32)    # C[:, b]
+    mu = row(m_row_u).astype(jnp.float32)      # M[u, :]
+    mv = row(m_row_v).astype(jnp.float32)      # M[v, :]
+    mtu = row(mt_row_u).astype(jnp.float32)    # M[:, u]
+    mtv = row(mt_row_v).astype(jnp.float32)    # M[:, v]
 
     # Gathers of the node-indexed columns/rows by the current permutation.
     m_p_v = jnp.take(mtv, p, axis=0)           # M[p, v]
@@ -91,21 +94,32 @@ def _delta_kernel(info_ref,            # (B*K, 4) int32 scalar prefetch: a, b, u
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def qap_delta_pallas_batch(C: Array, M: Array, ps: Array, pairs: Array,
                            interpret: bool = False) -> Array:
-    """Leading-batch swap deltas against shared instance matrices.
+    """Leading-batch swap deltas in one launch.
 
-    C, M: (N, N); ps: (B, N) one permutation per batch row; pairs:
-    (B, K, 2) candidate swaps per row  ->  (B, K) f32.  One kernel launch
-    with grid B*K; candidate q works on permutation row q // K.
+    ps: (B, N) one permutation per batch row; pairs: (B, K, 2) candidate
+    swaps per row  ->  (B, K) f32.  One kernel launch with grid B*K;
+    candidate q works on permutation row q // K.  C, M are either shared
+    ``(N, N)`` matrices or instance-batched ``(B0, N, N)`` with ``B0``
+    dividing B (rows ``r*B//B0 .. (r+1)*B//B0 - 1`` belong to instance r
+    -- the batched solvers' case, where the dispatch layer folds the
+    instance axis into the leading batch instead of vmapping the kernel).
     """
-    n = C.shape[0]
+    n = ps.shape[-1]
     bsz, k = pairs.shape[0], pairs.shape[1]
+    mat_batched = C.ndim == 3
+    if mat_batched and (bsz % C.shape[0] != 0):
+        raise ValueError(
+            f"batched C/M leading dim {C.shape[0]} must divide B={bsz}")
+    rpt = (bsz // C.shape[0]) if mat_batched else 1  # perm rows per instance
     n_pad = _pad_to(max(n, LANE), LANE)
     pad = n_pad - n
 
-    Cp = jnp.pad(C.astype(jnp.float32), ((0, pad), (0, pad)))
-    Mp = jnp.pad(M.astype(jnp.float32), ((0, pad), (0, pad)))
-    CpT = Cp.T
-    MpT = Mp.T
+    mat_pad = ((0, 0), (0, pad), (0, pad)) if mat_batched else \
+        ((0, pad), (0, pad))
+    Cp = jnp.pad(C.astype(jnp.float32), mat_pad)
+    Mp = jnp.pad(M.astype(jnp.float32), mat_pad)
+    CpT = Cp.swapaxes(-2, -1)
+    MpT = Mp.swapaxes(-2, -1)
     tail = jnp.broadcast_to(jnp.arange(n, n_pad, dtype=jnp.int32), (bsz, pad))
     pp = jnp.concatenate([ps.astype(jnp.int32), tail], axis=1)   # (B, n_pad)
 
@@ -115,25 +129,32 @@ def qap_delta_pallas_batch(C: Array, M: Array, ps: Array, pairs: Array,
     info = jnp.stack([ab[..., 0].reshape(-1), ab[..., 1].reshape(-1),
                       u.reshape(-1), v.reshape(-1)], axis=1)     # (B*K, 4)
 
-    row = lambda col_of_info: (lambda i, info_ref: (info_ref[i, col_of_info], 0))
+    if mat_batched:
+        row = lambda col: (lambda i, info_ref:
+                           (i // (k * rpt), info_ref[i, col], 0))
+        mat_block = (1, 1, n_pad)
+    else:
+        row = lambda col: (lambda i, info_ref: (info_ref[i, col], 0))
+        mat_block = (1, n_pad)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(bsz * k,),
         in_specs=[
             pl.BlockSpec((1, n_pad), lambda i, info_ref: (i // k, 0)),  # p row
-            pl.BlockSpec((1, n_pad), row(0)),                   # C[a, :]
-            pl.BlockSpec((1, n_pad), row(1)),                   # C[b, :]
-            pl.BlockSpec((1, n_pad), row(0)),                   # C^T[a, :]
-            pl.BlockSpec((1, n_pad), row(1)),                   # C^T[b, :]
-            pl.BlockSpec((1, n_pad), row(2)),                   # M[u, :]
-            pl.BlockSpec((1, n_pad), row(3)),                   # M[v, :]
-            pl.BlockSpec((1, n_pad), row(2)),                   # M^T[u, :]
-            pl.BlockSpec((1, n_pad), row(3)),                   # M^T[v, :]
+            pl.BlockSpec(mat_block, row(0)),                    # C[a, :]
+            pl.BlockSpec(mat_block, row(1)),                    # C[b, :]
+            pl.BlockSpec(mat_block, row(0)),                    # C^T[a, :]
+            pl.BlockSpec(mat_block, row(1)),                    # C^T[b, :]
+            pl.BlockSpec(mat_block, row(2)),                    # M[u, :]
+            pl.BlockSpec(mat_block, row(3)),                    # M[v, :]
+            pl.BlockSpec(mat_block, row(2)),                    # M^T[u, :]
+            pl.BlockSpec(mat_block, row(3)),                    # M^T[v, :]
         ],
         out_specs=pl.BlockSpec((1,), lambda i, info_ref: (i,)),
     )
     out = pl.pallas_call(
-        functools.partial(_delta_kernel, n_pad=n_pad),
+        functools.partial(_delta_kernel, n_pad=n_pad,
+                          mat_batched=mat_batched),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((bsz * k,), jnp.float32),
         interpret=interpret,

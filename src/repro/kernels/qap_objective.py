@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: batched QAP objective evaluation.
+"""Pallas TPU kernel: leading-batch QAP objective evaluation.
 
 The GA hot loop: every new descendant needs a full O(N^2) objective
 re-evaluation (the paper, S5, cites this as the GA's cost driver).  On TPU we
@@ -7,8 +7,18 @@ adapt the CPU gather loop to the MXU: the permuted distance matrix
 N x N matmuls that run on the systolic array -- followed by an elementwise
 product with the flow matrix ``C`` and a full reduction.
 
-VMEM budget per program instance (grid = (B,)): P, M, C and two N x N
-temporaries in f32.  For the paper's largest order (729, padded to 768):
+``qap_objective_pallas_batch`` is the wide-generation entry point: perms
+``(B, P, N)`` evaluate in **one** launch whose grid spans every
+(leading-dim, permutation) pair -- the GA's (islands x offspring) set per
+generation, or (instances x islands x offspring) for the batched solvers
+(``C``/``M`` may then carry the leading instance axis themselves).
+``qap_objective_pallas`` is the lead-free wrapper, the same pattern as
+``qap_delta_pallas`` / ``qap_delta_pallas_batch``.  The dispatch layer
+(``ops.qap_objective``) folds any outer ``vmap`` axes into the leading
+grid axis, so the kernel never runs under ``vmap``.
+
+VMEM budget per program instance: P, M, C and two N x N temporaries in f32.
+For the paper's largest order (729, padded to 768):
 5 * 768^2 * 4B = 11.8 MB < 16 MB VMEM.  Orders above ``MAX_KERNEL_N`` fall
 back to the reference implementation (handled by ops.py).
 
@@ -34,13 +44,15 @@ def _pad_to(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
-def _objective_kernel(p_ref, c_ref, m_ref, out_ref, *, n_pad: int):
-    """One program instance == one permutation of the batch."""
+def _objective_kernel(p_ref, c_ref, m_ref, out_ref, *, n_pad: int,
+                      mat_batched: bool):
+    """One program instance == one (leading-dim, permutation) pair."""
     p = p_ref[0, :]                                   # (n_pad,) int32
     onehot = (p[:, None] == jax.lax.broadcasted_iota(jnp.int32, (n_pad, n_pad), 1))
     P = onehot.astype(jnp.float32)                    # (n_pad, n_pad)
-    M = m_ref[...].astype(jnp.float32)
-    C = c_ref[...].astype(jnp.float32)
+    # With batched matrices the block carries a leading length-1 instance dim.
+    M = (m_ref[0] if mat_batched else m_ref[...]).astype(jnp.float32)
+    C = (c_ref[0] if mat_batched else c_ref[...]).astype(jnp.float32)
     # M[p][:, p] == P @ M @ P^T  (both matmuls hit the MXU).
     PM = jax.lax.dot_general(P, M, (((1,), (0,)), ((), ())),
                              preferred_element_type=jnp.float32)
@@ -50,32 +62,59 @@ def _objective_kernel(p_ref, c_ref, m_ref, out_ref, *, n_pad: int):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def qap_objective_pallas(C: Array, M: Array, perms: Array,
-                         interpret: bool = False) -> Array:
-    """Batched objective on TPU.  C, M: (N, N); perms: (B, N) -> (B,) f32."""
-    n = C.shape[0]
-    b = perms.shape[0]
+def qap_objective_pallas_batch(C: Array, M: Array, perms: Array,
+                               interpret: bool = False) -> Array:
+    """Leading-batch objective on TPU: one grid over every permutation.
+
+    perms: (B, P, N) -> (B, P) f32; the grid is (B * P,), one program per
+    (leading-dim, permutation) pair.  C, M are either shared ``(N, N)``
+    matrices or instance-batched ``(B, N, N)`` (the batched solvers' case,
+    where leading dim b of ``perms`` belongs to instance b).
+    """
+    n = perms.shape[-1]
+    b, p_cnt = perms.shape[0], perms.shape[1]
+    mat_batched = C.ndim == 3
+    if mat_batched and C.shape[0] != b:
+        raise ValueError(
+            f"batched C/M leading dim {C.shape[0]} != perms leading dim {b}")
     n_pad = _pad_to(max(n, LANE), LANE)
     if n_pad > MAX_KERNEL_N:
         raise ValueError(f"padded N={n_pad} exceeds kernel cap {MAX_KERNEL_N}")
 
     pad = n_pad - n
-    Cp = jnp.pad(C.astype(jnp.float32), ((0, pad), (0, pad)))
-    Mp = jnp.pad(M.astype(jnp.float32), ((0, pad), (0, pad)))
+    mat_pad = ((0, 0), (0, pad), (0, pad)) if mat_batched else \
+        ((0, pad), (0, pad))
+    Cp = jnp.pad(C.astype(jnp.float32), mat_pad)
+    Mp = jnp.pad(M.astype(jnp.float32), mat_pad)
     # Identity on the pad range keeps perms valid permutations of 0..n_pad-1.
-    pad_ids = jnp.broadcast_to(jnp.arange(n, n_pad, dtype=perms.dtype), (b, pad))
-    Pp = jnp.concatenate([perms, pad_ids], axis=1)
+    flat = perms.reshape(b * p_cnt, n)
+    pad_ids = jnp.broadcast_to(jnp.arange(n, n_pad, dtype=perms.dtype),
+                               (b * p_cnt, pad))
+    Pp = jnp.concatenate([flat, pad_ids], axis=1)
 
+    if mat_batched:
+        mat_spec = pl.BlockSpec((1, n_pad, n_pad), lambda i: (i // p_cnt, 0, 0))
+    else:
+        mat_spec = pl.BlockSpec((n_pad, n_pad), lambda i: (0, 0))
     out = pl.pallas_call(
-        functools.partial(_objective_kernel, n_pad=n_pad),
-        grid=(b,),
+        functools.partial(_objective_kernel, n_pad=n_pad,
+                          mat_batched=mat_batched),
+        grid=(b * p_cnt,),
         in_specs=[
             pl.BlockSpec((1, n_pad), lambda i: (i, 0)),          # this perm
-            pl.BlockSpec((n_pad, n_pad), lambda i: (0, 0)),      # C (resident)
-            pl.BlockSpec((n_pad, n_pad), lambda i: (0, 0)),      # M (resident)
+            mat_spec,                                            # C
+            mat_spec,                                            # M
         ],
         out_specs=pl.BlockSpec((1,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((b * p_cnt,), jnp.float32),
         interpret=interpret,
     )(Pp, Cp, Mp)
-    return out
+    return out.reshape(b, p_cnt)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def qap_objective_pallas(C: Array, M: Array, perms: Array,
+                         interpret: bool = False) -> Array:
+    """Lead-free wrapper.  C, M: (N, N); perms: (B, N) -> (B,) f32."""
+    return qap_objective_pallas_batch(C, M, perms[None],
+                                      interpret=interpret)[0]

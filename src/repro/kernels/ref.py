@@ -12,14 +12,22 @@ Array = jax.Array
 
 
 def qap_objective_ref(C: Array, M: Array, perms: Array) -> Array:
-    """Batched objective: F[b] = sum_{k,l} C[k,l] * M[p[b,k], p[b,l]].
+    """Batched objective: F[..., b] = sum_{k,l} C[k,l] * M[p[..., b, k], p[..., b, l]].
 
-    C, M: (N, N); perms: (B, N) int32.  Returns (B,) f32.
+    C, M: (N, N); perms: (..., B, N) int32.  Returns (..., B) f32.  The
+    base case is fully vectorized over the permutation axis (no per-perm
+    ``vmap``); extra leading dims recurse like ``qap_delta_ref``, so this
+    is the CPU side of the leading-batch ``ops.qap_objective`` dispatch
+    (one call per GA generation scores every island's offspring).
     """
-    def one(p):
-        Mp = jnp.take(jnp.take(M, p, axis=0), p, axis=1)
-        return jnp.sum(C.astype(jnp.float32) * Mp.astype(jnp.float32))
-    return jax.vmap(one)(perms)
+    if perms.ndim > 2:
+        return jax.vmap(lambda pr: qap_objective_ref(C, M, pr))(perms)
+    if perms.ndim == 1:
+        return qap_objective_ref(C, M, perms[None])[0]
+    Mp = jnp.take(M, perms, axis=0)                      # (B, N, N): rows
+    Mp = jnp.take_along_axis(Mp, perms[:, None, :], axis=2)  # cols
+    return jnp.sum(C.astype(jnp.float32)[None] * Mp.astype(jnp.float32),
+                   axis=(-2, -1))
 
 
 def selective_scan_ref(u: Array, dt: Array, a: Array, b: Array, c: Array

@@ -40,6 +40,12 @@ resource manager's timeout.  The engine is built around that contract:
      becomes real hardware parallelism instead of just dispatch
      efficiency.
 
+  7. :meth:`MappingEngine.warmup` AOT-precompiles every bucket program
+     (``jit(...).lower().compile()``) at service start, so the first wave
+     of each shape pays a persistent-cache reload instead of a full XLA
+     compile (``benchmarks/scheduler_sim.py --warmup`` measures the
+     warm-vs-cold p99 difference).
+
 Queue, cache, and stats are thread-safe; solves are serialized by a
 dispatch lock so the flusher and synchronous callers can coexist.
 
@@ -223,6 +229,7 @@ class EngineStats:
     solver_calls: int = 0      # instances that went through a solver
     full_bucket_flushes: int = 0   # flusher waves triggered by a full group
     deadline_flushes: int = 0      # flusher waves triggered by the deadline
+    warmup_programs: int = 0       # programs precompiled by warmup()
 
 
 @dataclass
@@ -383,6 +390,165 @@ class MappingEngine:
         if not self.warm_start or req.cache_seed or req.C.shape[0] < 2:
             return None
         return self._shape_cache.get(self.shape_digest(req))
+
+    # --------------------------------------------------------------- warmup
+    def _wave_sizes(self) -> Tuple[int, ...]:
+        """Every instance-axis wave size the engine can dispatch: waves are
+        padded to powers of two and chunked at ``max_batch``, so only
+        {1, 2, 4, ..., next_pow2(max_batch)} programs exist per bucket."""
+        max_wave = 1 << (self.max_batch - 1).bit_length()
+        sizes, w = [], 1
+        while w <= max_wave:
+            sizes.append(w)
+            w *= 2
+        return tuple(sizes)
+
+    def warmup(self, buckets: Optional[Sequence[int]] = None,
+               algorithms: Sequence[str] = ("psa",),
+               tiers: Sequence[str] = ("default",),
+               batch_sizes: Optional[Sequence[int]] = None,
+               warm_starts: Sequence[bool] = (False, True),
+               execute: Optional[bool] = None) -> int:
+        """AOT-precompile bucket programs so first-wave requests stop
+        paying XLA compile time in their mapping latency.
+
+        For every (bucket, wave size, algorithm, tier, warm-start
+        presence) combination this lowers and compiles the batched solver
+        program — ``jit(...).lower().compile()`` — plus the batched
+        polish, without executing a solve.  The compiled executables land
+        in JAX's persistent compilation cache (enabled when
+        ``JAX_COMPILATION_CACHE_DIR`` is set, as CI and the tier-1 run
+        do), so the first real dispatch of each shape reloads them
+        instead of recompiling; ``benchmarks/scheduler_sim.py --warmup``
+        records the warm-vs-cold p99.
+
+        ``execute`` additionally runs each program once on a dummy wave,
+        which also fills the in-process jit dispatch cache; the default
+        (``None``) turns execution on exactly when no persistent cache is
+        configured — AOT executables alone cannot be reached by the
+        normal dispatch path in that case.  With a ``mesh`` the sharded
+        programs are warmed instead, matching :meth:`_dispatch`.
+
+        Returns the number of programs compiled (also accumulated in
+        ``stats.warmup_programs``).
+        """
+        buckets = tuple(self.buckets if buckets is None else
+                        sorted(int(b) for b in buckets))
+        for b in buckets:
+            if b not in self.buckets:
+                raise ValueError(f"unknown bucket {b}; have {self.buckets}")
+        for a in algorithms:
+            if a not in ALGORITHMS:
+                raise ValueError(f"algorithm must be one of {ALGORITHMS}")
+        for t in tiers:
+            if t not in TIERS:
+                raise ValueError(f"tier must be one of {TIERS}")
+        if batch_sizes is None:
+            if not self.pad_batches:
+                # Without pow2 padding the engine dispatches arbitrary wave
+                # sizes; guessing here would compile unused programs while
+                # real waves stay cold.
+                raise ValueError(
+                    "pad_batches=False: pass batch_sizes= explicitly")
+            sizes = self._wave_sizes()
+        else:
+            sizes = tuple(int(b) for b in batch_sizes)
+        if execute is None:
+            execute = jax.config.jax_compilation_cache_dir is None
+        # The persistent cache drops entries that compiled faster than its
+        # min-compile-time threshold (1s by default) — which is precisely
+        # the small-bucket/polish programs warmup exists to cover.  Cache
+        # everything we AOT-compile, then restore the caller's threshold.
+        prev_min = None
+        if not execute:
+            prev_min = jax.config.jax_persistent_cache_min_compile_time_secs
+            jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+        count = 0
+        try:
+            for bucket in buckets:
+                for wave in sizes:
+                    count += self._warmup_polish(bucket, wave, execute)
+                    for algorithm in algorithms:
+                        for tier in tiers:
+                            for warm in warm_starts:
+                                count += self._warmup_solver(
+                                    bucket, wave, algorithm, tier, warm,
+                                    execute)
+        finally:
+            if prev_min is not None:
+                jax.config.update(
+                    "jax_persistent_cache_min_compile_time_secs", prev_min)
+        with self._lock:
+            self.stats.warmup_programs += count
+        return count
+
+    def _dummy_wave(self, bucket: int, wave: int):
+        """Well-formed dummy instances for lowering (and, without a
+        persistent cache, executing) a bucket program."""
+        rng = np.random.RandomState(0)
+        A = rng.randint(1, 5, (bucket, bucket)).astype(np.float32)
+        A = A + A.T
+        np.fill_diagonal(A, 0)
+        Cs = jnp.broadcast_to(jnp.asarray(A), (wave, bucket, bucket))
+        Ms = Cs
+        keys = jnp.zeros((wave, 2), jnp.uint32)
+        nvs = jnp.full((wave,), bucket, jnp.int32)
+        return Cs, Ms, keys, nvs
+
+    def _warmup_solver(self, bucket: int, wave: int, algorithm: str,
+                       tier: str, warm: bool, execute: bool) -> int:
+        sa_cfg, ga_cfg = self._tier_cfgs[tier]
+        Cs, Ms, keys, nvs = self._dummy_wave(bucket, wave)
+        ips = None
+        if warm:
+            ips = jnp.broadcast_to(jnp.arange(bucket, dtype=jnp.int32),
+                                   (wave, bucket))
+        if self.mesh is not None:
+            nshard = int(self.mesh.shape[self.instance_axis])
+            Cs, Ms, keys, nvs, ips, _ = batch_sharded.pad_to_mesh_multiple(
+                Cs, Ms, keys, nvs, ips, nshard)
+            if algorithm == "pca":
+                cfg = composite.CompositeConfig(sa=sa_cfg, ga=ga_cfg)
+            else:
+                cfg = sa_cfg if algorithm == "psa" else ga_cfg
+            fn = batch_sharded._sharded_program(
+                algorithm, cfg, self.num_processes, True, self.mesh,
+                self.instance_axis, True, ips is not None)
+            args = [Cs, Ms, keys, nvs] + ([ips] if ips is not None else [])
+            if execute:
+                jax.block_until_ready(fn(*args))
+            else:
+                fn.lower(*args).compile()
+            return 1
+        if algorithm == "psa":
+            fn, args = annealing.run_psa_batch, (Cs, Ms, keys, sa_cfg,
+                                                 self.num_processes)
+        elif algorithm == "pga":
+            fn, args = genetic.run_pga_batch, (Cs, Ms, keys, ga_cfg,
+                                               self.num_processes)
+        else:
+            fn, args = composite.run_pca_batch, (
+                Cs, Ms, keys, composite.CompositeConfig(sa=sa_cfg, ga=ga_cfg),
+                self.num_processes)
+        if execute:
+            jax.block_until_ready(fn(*args, n_valid=nvs, init_perm=ips))
+        else:
+            fn.lower(*args, n_valid=nvs, init_perm=ips).compile()
+        return 1
+
+    def _warmup_polish(self, bucket: int, wave: int, execute: bool) -> int:
+        if self.polish_rounds <= 0:
+            return 0
+        Cs, Ms, keys, nvs = self._dummy_wave(bucket, wave)
+        ps = jnp.broadcast_to(jnp.arange(bucket, dtype=jnp.int32),
+                              (wave, bucket))
+        if execute:
+            jax.block_until_ready(mapping_lib.polish_batch(
+                Cs, Ms, ps, keys, self.polish_rounds, nvs))
+        else:
+            mapping_lib.polish_batch.lower(
+                Cs, Ms, ps, keys, self.polish_rounds, nvs).compile()
+        return 1
 
     # ------------------------------------------------------------------ API
     def submit(self, req: MapRequest) -> MapFuture:

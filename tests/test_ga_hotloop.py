@@ -1,0 +1,226 @@
+"""Golden equality: wide-generation GA hot loop == per-island golden path.
+
+The wide generation step (``GAConfig(eval="wide")``, the default) runs
+selection/OX/mutation as flattened (islands x n_off) batched ops and
+scores every island's offspring in **one** leading-batch
+``kernels.ops.qap_objective`` dispatch per generation, replacing the full
+``argsort`` worst-replacement with a tie-stable ``lax.top_k`` formulation
+and the scatter-based OX with a one-hot/gather formulation.  It consumes
+the same keys as the retained per-island path (``eval="island"``) and all
+reformulated operations are bitwise-equal on integer/float comparisons,
+so whole solves must be **bitwise identical**: objectives, permutations,
+and generation histories, for cold, identity-seeded, warm-started
+(``init_perm``), padded (``n_valid``), and total-replacement
+(``n_off == pop``) PGA and PCA solves — including the sharded engine path.
+"""
+from dataclasses import replace
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import batch_sharded, composite, genetic, qap
+from repro.launch.mesh import make_instance_mesh
+
+from _fixtures import GA_SMALL, PCA_SMALL, instance, padded_batch
+
+GA_ISLAND = replace(GA_SMALL, eval="island")
+PCA_ISLAND = replace(PCA_SMALL, ga=replace(PCA_SMALL.ga, eval="island"))
+
+
+def _assert_bitwise(wide, island):
+    wp, wf, wh = wide
+    ip, if_, ih = island
+    assert np.asarray(wf).tobytes() == np.asarray(if_).tobytes()
+    np.testing.assert_array_equal(np.asarray(wp), np.asarray(ip))
+    np.testing.assert_array_equal(np.asarray(wh), np.asarray(ih))
+
+
+def _warm_rows(sizes, bucket):
+    """init_perm batch warm on rows 0 and 2 (rotations), cold elsewhere."""
+    ips = np.full((len(sizes), bucket), -1, np.int32)
+    for i in (0, 2):
+        n = sizes[i]
+        ips[i, :n] = np.roll(np.arange(n), 1)
+        ips[i, n:] = np.arange(n, bucket)
+    return jnp.asarray(ips)
+
+
+# -------------------------------------------------------- operator level
+def test_order_crossover_matches_scatter_golden():
+    """The one-hot/gather OX must reproduce the seed-era scatter OX
+    bitwise for every key — children are integer arrays, so equality is
+    exact, including degenerate segments and tiny orders."""
+    rng = np.random.default_rng(0)
+    for trial in range(60):
+        n = int(rng.integers(2, 33))
+        p1 = jnp.asarray(rng.permutation(n).astype(np.int32))
+        p2 = jnp.asarray(rng.permutation(n).astype(np.int32))
+        k = jax.random.PRNGKey(trial)
+        np.testing.assert_array_equal(
+            np.asarray(genetic.order_crossover(k, p1, p2)),
+            np.asarray(genetic._order_crossover_scatter(k, p1, p2)))
+
+
+def test_order_crossover_matches_scatter_golden_padded():
+    """Same, on padded instances (identity tail, valid-prefix crossover)."""
+    rng = np.random.default_rng(1)
+    n = 24
+    for trial in range(60):
+        nv = int(rng.integers(0, n + 1))
+        base = np.arange(n)
+        p1 = np.concatenate([rng.permutation(nv), base[nv:]]).astype(np.int32)
+        p2 = np.concatenate([rng.permutation(nv), base[nv:]]).astype(np.int32)
+        k = jax.random.PRNGKey(500 + trial)
+        np.testing.assert_array_equal(
+            np.asarray(genetic.order_crossover(
+                k, jnp.asarray(p1), jnp.asarray(p2), jnp.int32(nv))),
+            np.asarray(genetic._order_crossover_scatter(
+                k, jnp.asarray(p1), jnp.asarray(p2), jnp.int32(nv))))
+
+
+def test_worst_slots_matches_argsort():
+    """The top_k worst-replacement must equal argsort[-n_off:] exactly —
+    same slots in the same order — for every tie pattern."""
+    rng = np.random.default_rng(2)
+    for trial in range(50):
+        pop = int(rng.integers(1, 40))
+        # few distinct values => ties everywhere, including at the cut
+        fit = jnp.asarray(rng.integers(0, 4, pop).astype(np.float32))
+        for n_off in (1, max(pop // 2, 1), pop):
+            np.testing.assert_array_equal(
+                np.asarray(genetic.worst_slots(fit, n_off)),
+                np.asarray(jnp.argsort(fit)[-n_off:]))
+
+
+def test_breed_matches_island_golden_step():
+    """Direct generation-step equality (breed vs the verbatim seed-era
+    step), on a tie-heavy population."""
+    C, M = map(jnp.asarray, instance(12, 0))
+    pop = qap.random_permutations(jax.random.PRNGKey(1), 12, 12)
+    from repro.kernels import ops
+    fit = ops.qap_objective(C, M, pop)
+    state = genetic.GAState(pop=pop, fit=fit)
+    for t in range(8):
+        k = jax.random.PRNGKey(100 + t)
+        new = genetic.breed(C, M, state, k, GA_SMALL)
+        old = genetic._breed_island(C, M, state, k, GA_SMALL)
+        np.testing.assert_array_equal(np.asarray(new.pop), np.asarray(old.pop))
+        assert np.asarray(new.fit).tobytes() == np.asarray(old.fit).tobytes()
+        state = new
+
+
+# ----------------------------------------------------------- solve level
+def test_pga_cold_bitwise():
+    C, M = map(jnp.asarray, instance(12, 0))
+    key = jax.random.PRNGKey(0)
+    _assert_bitwise(genetic.run_pga(C, M, key, GA_SMALL, num_processes=2),
+                    genetic.run_pga(C, M, key, GA_ISLAND, num_processes=2))
+
+
+def test_pga_seed_identity_bitwise():
+    C, M = map(jnp.asarray, instance(12, 5))
+    key = jax.random.PRNGKey(4)
+    cfg_w = replace(GA_SMALL, seed_identity=True)
+    cfg_i = replace(GA_ISLAND, seed_identity=True)
+    _assert_bitwise(genetic.run_pga(C, M, key, cfg_w, num_processes=2),
+                    genetic.run_pga(C, M, key, cfg_i, num_processes=2))
+
+
+def test_pga_warm_started_bitwise_and_never_worse():
+    C, M = map(jnp.asarray, instance(12, 7))
+    key = jax.random.PRNGKey(6)
+    seed_perm = jnp.asarray(np.roll(np.arange(12), 3).astype(np.int32))
+    wide = genetic.run_pga(C, M, key, GA_SMALL, num_processes=2,
+                           init_perm=seed_perm)
+    island = genetic.run_pga(C, M, key, GA_ISLAND, num_processes=2,
+                             init_perm=seed_perm)
+    _assert_bitwise(wide, island)
+    assert float(wide[1]) <= float(qap.objective(C, M, seed_perm))
+
+
+def test_pga_batch_padded_and_warm_bitwise():
+    """The instance-batched path: n_valid padding + mixed warm/cold rows."""
+    sizes = [8, 12, 16, 16]
+    Cs, Ms, nvs, keys = padded_batch(sizes, bucket=16)
+    ips = _warm_rows(sizes, bucket=16)
+    _assert_bitwise(
+        genetic.run_pga_batch(Cs, Ms, keys, GA_SMALL, num_processes=2,
+                              n_valid=nvs, init_perm=ips),
+        genetic.run_pga_batch(Cs, Ms, keys, GA_ISLAND, num_processes=2,
+                              n_valid=nvs, init_perm=ips))
+
+
+def test_pga_total_replacement_elitism_guard_bitwise():
+    """n_off == pop replaces every member; the elitism guard must fire in
+    both realisations identically, and a warm-started total-replacement
+    solve must still never end worse than its seed."""
+    C, M = map(jnp.asarray, instance(10, 3))
+    key = jax.random.PRNGKey(9)
+    cfg_w = replace(GA_SMALL, pop_size=8, n_offspring=8, generations=10)
+    cfg_i = replace(cfg_w, eval="island")
+    _assert_bitwise(genetic.run_pga(C, M, key, cfg_w, num_processes=2),
+                    genetic.run_pga(C, M, key, cfg_i, num_processes=2))
+    seed_perm = jnp.asarray(np.roll(np.arange(10), 1).astype(np.int32))
+    wide = genetic.run_pga(C, M, key, cfg_w, num_processes=2,
+                           init_perm=seed_perm)
+    _assert_bitwise(wide, genetic.run_pga(C, M, key, cfg_i, num_processes=2,
+                                          init_perm=seed_perm))
+    assert float(wide[1]) <= float(qap.objective(C, M, seed_perm))
+
+
+def test_pca_cold_bitwise():
+    C, M = map(jnp.asarray, instance(12, 7))
+    key = jax.random.PRNGKey(2)
+    _assert_bitwise(composite.run_pca(C, M, key, PCA_SMALL, num_processes=2),
+                    composite.run_pca(C, M, key, PCA_ISLAND, num_processes=2))
+
+
+def test_pca_batch_padded_and_warm_bitwise():
+    sizes = [8, 12, 16, 16]
+    Cs, Ms, nvs, keys = padded_batch(sizes, bucket=16)
+    ips = _warm_rows(sizes, bucket=16)
+    _assert_bitwise(
+        composite.run_pca_batch(Cs, Ms, keys, PCA_SMALL, num_processes=2,
+                                n_valid=nvs, init_perm=ips),
+        composite.run_pca_batch(Cs, Ms, keys, PCA_ISLAND, num_processes=2,
+                                n_valid=nvs, init_perm=ips))
+
+
+def test_sharded_engine_path_bitwise():
+    """The mesh-sharded dispatch (what the engine runs with a mesh) must
+    inherit the wide path unchanged: sharded wide == sharded island ==
+    unsharded wide, on whatever mesh this host can build."""
+    mesh = make_instance_mesh(1)
+    sizes = [8, 12]
+    Cs, Ms, nvs, keys = padded_batch(sizes, bucket=16)
+    wide = batch_sharded.run_pga_batch_sharded(
+        Cs, Ms, keys, GA_SMALL, num_processes=2, n_valid=nvs, mesh=mesh)
+    island = batch_sharded.run_pga_batch_sharded(
+        Cs, Ms, keys, GA_ISLAND, num_processes=2, n_valid=nvs, mesh=mesh)
+    _assert_bitwise(wide, island)
+    _assert_bitwise(wide, genetic.run_pga_batch(
+        Cs, Ms, keys, GA_SMALL, num_processes=2, n_valid=nvs))
+
+
+def test_wide_solutions_remain_feasible_under_padding():
+    """Sanity on top of equality: wide-generation solves keep the
+    feasibility invariant (valid prefix is a permutation of the real
+    nodes, padded tail is identity)."""
+    sizes = [6, 9]
+    Cs, Ms, nvs, keys = padded_batch(sizes, bucket=16, seed0=50)
+    bp, _, _ = genetic.run_pga_batch(Cs, Ms, keys, GA_SMALL,
+                                     num_processes=2, n_valid=nvs)
+    for i, n in enumerate(sizes):
+        perm = np.asarray(bp)[i]
+        assert sorted(perm[:n].tolist()) == list(range(n))
+        np.testing.assert_array_equal(perm[n:], np.arange(n, 16))
+        assert bool(qap.is_permutation(jnp.asarray(perm)))
+
+
+def test_unknown_eval_rejected():
+    C, M = map(jnp.asarray, instance(8, 1))
+    cfg = replace(GA_SMALL, eval="nope")
+    with pytest.raises(ValueError, match="generation realisation"):
+        genetic.run_pga(C, M, jax.random.PRNGKey(0), cfg, num_processes=2)

@@ -9,7 +9,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref, ops
-from repro.kernels.qap_objective import qap_objective_pallas
+from repro.kernels.qap_objective import (qap_objective_pallas,
+                                         qap_objective_pallas_batch)
 from repro.kernels.qap_delta import qap_delta_pallas, qap_delta_pallas_batch
 from repro.core import qap
 
@@ -31,6 +32,68 @@ def test_objective_kernel_matches_ref(n, batch):
     got = qap_objective_pallas(C, M, perms, interpret=True)
     want = ref.qap_objective_ref(C, M, perms)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+@pytest.mark.parametrize("n", [27, 125, 343])
+@pytest.mark.parametrize("batch,p_cnt", [(1, 6), (3, 5), (4, 12)])
+def test_objective_kernel_batch_matches_ref(n, batch, p_cnt):
+    """Interpret-mode equality for the leading-batch objective kernel:
+    perms (B, P, N) -> (B, P), one grid over every pair."""
+    rng = np.random.default_rng(n + batch + p_cnt)
+    C, M = _instance(rng, n, np.float32)
+    perms = qap.random_permutations(jax.random.PRNGKey(batch), batch * p_cnt,
+                                    n).reshape(batch, p_cnt, n)
+    got = qap_objective_pallas_batch(C, M, perms, interpret=True)
+    want = ref.qap_objective_ref(C, M, perms)
+    assert got.shape == (batch, p_cnt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_objective_kernel_batch_matches_single_rows():
+    """Each leading-batch row equals the lead-free kernel on that row."""
+    rng = np.random.default_rng(3)
+    n, batch, p_cnt = 45, 4, 7
+    C, M = _instance(rng, n, np.float32)
+    perms = qap.random_permutations(jax.random.PRNGKey(1), batch * p_cnt,
+                                    n).reshape(batch, p_cnt, n)
+    got = np.asarray(qap_objective_pallas_batch(C, M, perms, interpret=True))
+    for i in range(batch):
+        row = np.asarray(qap_objective_pallas(C, M, perms[i], interpret=True))
+        np.testing.assert_array_equal(got[i], row)
+
+
+def test_objective_kernel_batch_instance_matrices():
+    """C/M may carry the leading instance axis (the batched solvers'
+    case): row b of perms evaluates against C[b], M[b]."""
+    rng = np.random.default_rng(4)
+    n, batch, p_cnt = 27, 3, 5
+    Cs, Ms = zip(*[_instance(rng, n, np.float32) for _ in range(batch)])
+    Cs, Ms = jnp.stack(Cs), jnp.stack(Ms)
+    perms = qap.random_permutations(jax.random.PRNGKey(2), batch * p_cnt,
+                                    n).reshape(batch, p_cnt, n)
+    got = qap_objective_pallas_batch(Cs, Ms, perms, interpret=True)
+    want = jnp.stack([ref.qap_objective_ref(Cs[b], Ms[b], perms[b])
+                      for b in range(batch)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_delta_kernel_batch_instance_matrices():
+    """Instance-batched C/M for the delta kernel: permutation rows
+    r*B//B0 .. belong to instance r."""
+    rng = np.random.default_rng(5)
+    n, b0, rpt, k = 27, 3, 2, 8
+    Cs, Ms = zip(*[_instance(rng, n, np.float32) for _ in range(b0)])
+    Cs, Ms = jnp.stack(Cs), jnp.stack(Ms)
+    ps = jnp.stack([jnp.asarray(rng.permutation(n).astype(np.int32))
+                    for _ in range(b0 * rpt)])
+    pairs = jnp.stack([qap.random_swap_pairs(jax.random.PRNGKey(i), k, n)
+                       for i in range(b0 * rpt)])
+    got = qap_delta_pallas_batch(Cs, Ms, ps, pairs, interpret=True)
+    want = jnp.concatenate([
+        ref.qap_delta_ref(Cs[r], Ms[r], ps[r * rpt:(r + 1) * rpt],
+                          pairs[r * rpt:(r + 1) * rpt]) for r in range(b0)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
 
 
 @pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
@@ -160,6 +223,143 @@ def test_ops_delta_under_vmap_matches_flat_dispatch():
     flat = jax.jit(lambda: ops.qap_delta(C, M, ps, pairs))
     assert np.asarray(per_chain(ps, pairs)).tobytes() == \
         np.asarray(flat()).tobytes()
+
+
+def test_ops_objective_leading_batch_dispatch():
+    """ops.qap_objective accepts (..., P, N) leading batch dims: the CPU
+    path is bitwise-equal per permutation to qap.objective, and the
+    forced-Pallas interpret path matches numerically."""
+    rng = np.random.default_rng(6)
+    n, batch, p_cnt = 27, 3, 4
+    C, M = _instance(rng, n, np.float32)
+    perms = qap.random_permutations(jax.random.PRNGKey(0), batch * p_cnt,
+                                    n).reshape(batch, p_cnt, n)
+
+    got = ops.qap_objective(C, M, perms)
+    assert got.shape == (batch, p_cnt)
+    scalar = np.stack([[float(qap.objective(C, M, perms[i, j]))
+                        for j in range(p_cnt)] for i in range(batch)])
+    np.testing.assert_array_equal(np.asarray(got), scalar.astype(np.float32))
+
+    # 4-D leading shape flattens to the same values
+    got4 = ops.qap_objective(C, M, perms.reshape(3, 1, p_cnt, n))
+    np.testing.assert_array_equal(np.asarray(got4).reshape(batch, p_cnt),
+                                  np.asarray(got))
+
+    # forced Pallas (interpret) leading-batch path agrees with the ref
+    gotp = ops.qap_objective(C, M, perms, force_pallas=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(gotp), np.asarray(got), rtol=1e-5)
+
+
+def test_ops_objective_under_vmap_matches_flat_dispatch():
+    """The wide-generation usage pattern: ops.qap_objective traced per
+    island under an outer vmap (the eval="island" golden path and the
+    batched solvers' instance axis) must equal the explicit leading-batch
+    dispatch bitwise on the CPU path."""
+    rng = np.random.default_rng(7)
+    n, batch, p_cnt = 32, 4, 6
+    C, M = _instance(rng, n, np.float32)
+    perms = qap.random_permutations(jax.random.PRNGKey(1), batch * p_cnt,
+                                    n).reshape(batch, p_cnt, n)
+    per_island = jax.jit(jax.vmap(lambda p: ops.qap_objective(C, M, p)))
+    flat = jax.jit(lambda: ops.qap_objective(C, M, perms))
+    assert np.asarray(per_island(perms)).tobytes() == \
+        np.asarray(flat()).tobytes()
+
+
+# -------------------------------------------------- no pallas under vmap
+def _count_pallas_calls(jaxpr):
+    """Count pallas_call eqns in a jaxpr, descending into sub-jaxprs."""
+    cnt = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            cnt += 1
+        for v in eqn.params.values():
+            leaves = jax.tree_util.tree_leaves(
+                v, is_leaf=lambda x: hasattr(x, "eqns") or hasattr(x, "jaxpr"))
+            for leaf in leaves:
+                if hasattr(leaf, "eqns"):
+                    cnt += _count_pallas_calls(leaf)
+                elif hasattr(leaf, "jaxpr"):
+                    cnt += _count_pallas_calls(leaf.jaxpr)
+    return cnt
+
+
+def test_no_pallas_call_under_vmap_on_tpu_paths(monkeypatch):
+    """Regression: on the TPU dispatch path no pallas_call may ever be
+    batched by vmap.  jax's generic pallas batching rule silently falls
+    back to a *sequential per-element loop* when a scalar-prefetch
+    operand is batched (the delta kernel's case), so the dispatch layer
+    (``ops``) must fold every vmap axis — chains, solvers, islands, and
+    the batched solvers' instance axis — into the kernels' leading batch
+    instead.  Trace-level check over the three batch solvers (and the
+    batched polish): the pallas batching rule must never fire while
+    pallas_calls are present in the trace.
+    """
+    from dataclasses import replace
+    from jax.interpreters import batching
+    try:
+        from jax._src.pallas.pallas_call import pallas_call_p
+    except ImportError:
+        pytest.skip("jax moved the pallas_call primitive; update the spy")
+    from repro.core import annealing, composite, genetic, mapping
+    import repro.kernels.ops as kops
+    from _fixtures import SA_SMALL, GA_SMALL, PCA_SMALL
+
+    monkeypatch.setattr(kops, "_on_tpu", lambda: True)
+    hits = []
+    orig = batching.primitive_batchers[pallas_call_p]
+
+    def spy(*args, **kwargs):
+        hits.append(1)
+        return orig(*args, **kwargs)
+
+    monkeypatch.setitem(batching.primitive_batchers, pallas_call_p, spy)
+
+    # jit trace caches are keyed on signatures only — a cached CPU-path
+    # jaxpr from another test would bypass the patched _on_tpu (and the
+    # TPU-path jaxprs traced here must not leak to later tests either).
+    jax.clear_caches()
+    try:
+        # num_processes=3 keeps every signature unique to this test.
+        B, n, procs = 2, 8, 3
+        Cs = jnp.ones((B, n, n), jnp.float32)
+        Ms = jnp.ones((B, n, n), jnp.float32)
+        keys = jnp.stack([jax.random.PRNGKey(i) for i in range(B)])
+        nvs = jnp.full((B,), n, jnp.int32)
+        sa = replace(SA_SMALL, solvers=3)
+        pca = replace(PCA_SMALL, ga=replace(GA_SMALL, tournament=3))
+        solvers = {
+            "psa": lambda: annealing.run_psa_batch(Cs, Ms, keys, sa, procs,
+                                                   n_valid=nvs),
+            "pga": lambda: genetic.run_pga_batch(Cs, Ms, keys, GA_SMALL,
+                                                 procs, n_valid=nvs),
+            "pca": lambda: composite.run_pca_batch(Cs, Ms, keys, pca, procs,
+                                                   n_valid=nvs),
+            "polish": lambda: mapping.polish_batch(
+                Cs, Ms,
+                jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (B, n)),
+                keys, 3, nvs),
+        }
+        for name, fn in solvers.items():
+            hits.clear()
+            jaxpr = jax.make_jaxpr(fn)()
+            assert _count_pallas_calls(jaxpr.jaxpr) > 0, \
+                f"{name}: TPU path traced no pallas_call — check dead dispatch"
+            assert not hits, \
+                f"{name}: pallas_call was batched by vmap ({len(hits)} times)"
+
+        # Positive control: vmapping a raw kernel must hit the batching
+        # rule, otherwise this test could pass while asserting nothing.
+        hits.clear()
+        C1 = jnp.ones((n, n), jnp.float32)
+        p = jnp.arange(n, dtype=jnp.int32)
+        pairs = jnp.zeros((4, 2), jnp.int32)
+        jax.make_jaxpr(jax.vmap(
+            lambda pp: qap_delta_pallas(C1, C1, pp, pairs)))(jnp.stack([p, p]))
+        assert hits, "spy failed to observe the pallas batching rule"
+    finally:
+        jax.clear_caches()   # drop the TPU-path traces (never executable here)
 
 
 # ---------------------------------------------------------------- selective scan

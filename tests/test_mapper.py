@@ -487,3 +487,28 @@ def test_batch_padding_pow2_is_bitwise_invisible():
         assert np.float64(a.objective).tobytes() == \
             np.float64(b.objective).tobytes()
         np.testing.assert_array_equal(a.perm, b.perm)
+
+
+# ------------------------------------------------------------- (e) warmup
+def test_warmup_precompiles_and_leaves_results_unchanged():
+    """warmup() AOT-compiles one program per (bucket, wave, algorithm,
+    tier, warm-presence) combination plus the batched polish, validates
+    its inputs, and must not perturb later solves (compilation only)."""
+    eng = _engine(buckets=(16,), max_batch=2)
+    # waves {1, 2} x (polish + psa x {cold, warm}) = 6 programs
+    n = eng.warmup(algorithms=("psa",), tiers=("default",))
+    assert n == 6 and eng.stats.warmup_programs == 6
+    with pytest.raises(ValueError):
+        eng.warmup(buckets=(64,))          # not a configured bucket
+    with pytest.raises(ValueError):
+        eng.warmup(algorithms=("nope",))
+    with pytest.raises(ValueError):
+        eng.warmup(tiers=("loose",))
+
+    C, M = _instance(12, 400)
+    warmed = eng.map_one(C, M, "psa", job_id="w")
+    cold = _engine(buckets=(16,), max_batch=2).map_one(C, M, "psa",
+                                                       job_id="c")
+    assert np.float64(warmed.objective).tobytes() == \
+        np.float64(cold.objective).tobytes()
+    np.testing.assert_array_equal(warmed.perm, cold.perm)
