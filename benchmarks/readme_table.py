@@ -33,8 +33,8 @@ def render_table(data: dict) -> str:
             continue
         cfg = sec.get("config", {})
         mesh = cfg.get("mesh_shape")
-        label = "batched solve" if mesh is None else \
-            f"batched solve, {mesh}-device mesh"
+        label = "batched solve (maps/s)" if mesh is None else \
+            f"batched solve (maps/s), {mesh}-device mesh"
         what = (f"{cfg.get('batch', '?')} x n={cfg.get('n', '?')} "
                 f"(bucket {cfg.get('bucket', '?')})")
         if mesh is None:
@@ -55,8 +55,8 @@ def render_table(data: dict) -> str:
             continue
         cfg = sec.get("config", {})
         mesh = cfg.get("mesh_shape")
-        label = "scheduler stream (async)" if mesh is None else \
-            f"scheduler stream (async, {mesh}-device mesh)"
+        label = "scheduler stream (jobs/s)" if mesh is None else \
+            f"scheduler stream (jobs/s), {mesh}-device mesh"
         what = (f"{cfg.get('jobs', '?')} jobs, sizes "
                 f"{tuple(cfg.get('sizes', []))}, "
                 f"{cfg.get('arrival_rate', '?')}/s")
@@ -66,6 +66,31 @@ def render_table(data: dict) -> str:
                      _fmt(seq.get("mapped_jobs_per_s"), 1),
                      _fmt(asy.get("mapped_jobs_per_s"), 1),
                      _fmt(sec.get("throughput_speedup"))))
+    for key in ("scheduler_rm", "scheduler_rm_mesh"):
+        sec = data.get(key)
+        if not sec:
+            continue
+        cfg = sec.get("config", {})
+        mesh = cfg.get("mesh_shape")
+        suffix = "" if mesh is None else f", {mesh}-device mesh"
+        what = (f"{cfg.get('jobs', '?')} jobs ({cfg.get('trace', '?')}), "
+                f"{cfg.get('candidates', '?')} candidates")
+        ff = sec.get("first_fit", {})
+        co = sec.get("co_opt", {})
+        # baseline: first-fit allocation, mapped after the fact; this
+        # path: allocate-then-map co-optimization over candidate waves
+        f0, f1 = ff.get("mean_objective"), co.get("mean_objective")
+        f_ratio = f0 / f1 if f0 and f1 else None
+        rows.append((f"RM replay: mean mapped F{suffix}", what,
+                     _fmt(f0, 1), _fmt(f1, 1), _fmt(f_ratio)))
+        rows.append((f"RM replay: makespan (s){suffix}", what,
+                     _fmt(ff.get("makespan_s"), 1),
+                     _fmt(co.get("makespan_s"), 1),
+                     _fmt(sec.get("makespan_ratio"))))
+        u0, u1 = ff.get("utilization"), co.get("utilization")
+        rows.append((f"RM replay: utilization{suffix}", what,
+                     _fmt(u0), _fmt(u1),
+                     _fmt(u1 / u0 if u0 and u1 else None)))
     sec = data.get("solver_hotloop")
     if sec:
         cfg = sec.get("config", {})
@@ -74,7 +99,7 @@ def render_table(data: dict) -> str:
             # baseline: the sequential candidate scan; this path: the
             # acceptance-event loop (bitwise-equal results)
             rows.append((
-                f"SA hot loop ({key})",
+                f"SA hot loop ({key}, maps/s)",
                 (f"{cfg.get('batch', '?')}-wave, depth "
                  f"{depth.get('scan', '?')} -> {depth.get('event', '?')}"),
                 _fmt(solve.get("scan", {}).get("maps_per_s"), 1),
@@ -87,7 +112,7 @@ def render_table(data: dict) -> str:
             # baseline: the per-island generation loop (eval="island");
             # this path: the wide-generation loop (bitwise-equal results)
             rows.append((
-                f"GA hot loop ({key})",
+                f"GA hot loop ({key}, maps/s)",
                 (f"{cfg.get('batch', '?')}-wave, "
                  f"{cfg.get('generations', '?')} gens x "
                  f"{cfg.get('islands', '?')} islands"),
@@ -96,8 +121,7 @@ def render_table(data: dict) -> str:
                 _fmt(wave.get("speedup_wide_vs_island"))))
     if not rows:
         return "_No benchmark results recorded yet — run the commands above._"
-    out = ["| benchmark | workload | baseline (maps/s) | this path (maps/s) "
-           "| speedup |",
+    out = ["| benchmark | workload | baseline | this path | ratio |",
            "|---|---|---|---|---|"]
     out += [f"| {a} | {b} | {c} | {d} | {e}x |" for a, b, c, d, e in rows]
     return "\n".join(out)

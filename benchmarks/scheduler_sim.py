@@ -1,40 +1,42 @@
-"""Job-stream scheduler simulation: allocate -> map -> run -> release.
+"""Scheduler replay + job-stream simulation over the mapping service.
 
-End-to-end measurement of the async mapping service inside the loop the
-paper targets (an Uberun-style resource manager): jobs arrive as a Poisson
-stream with mixed sizes, each job is allocated a free-node subset of a
-live :class:`~repro.serve.cluster.ClusterState`, its induced system
-subgraph is mapped by the :class:`~repro.serve.mapper.MappingEngine`, the
-job "runs" for its service time, and its nodes are released for the next
-arrival.
+Default mode -- **trace replay** through the full control plane
+(:class:`~repro.serve.rm.ResourceManager`): a workload trace (synthetic
+Poisson by default, or any SWF file via ``--trace PATH``) is replayed in
+virtual time twice over the same cluster grid:
 
-Two mapping paths over the *same* job stream:
+  * ``first_fit`` -- allocate-then-map the old way: one first-fit
+    free-node subset per job, mapped after the fact;
+  * ``co_opt``    -- allocate-*then*-map co-optimization: K candidate
+    subsets (compact / slab / scatter) per job scored as ONE batched
+    engine wave, argmin-objective candidate committed.
 
-  * ``async``  -- futures + background flusher: the scheduler keeps
-    admitting jobs while mappings are in flight, so same-bucket arrivals
-    coalesce into batched solves.
-  * ``sequential`` -- the seed path: every job blocks on its own
-    submit+flush before the next job is admitted.
+Reported per path: makespan, utilization, wait-time percentiles, mean
+mapped QAP objective, and mapping wall time per wave; plus the headline
+``objective_improvement`` of co_opt over first_fit.  Results are merged
+into ``BENCH_mapper.json`` under ``"scheduler_rm"`` (CI artifact).  The
+harness asserts every candidate wave rode at most one solver dispatch
+via engine stats (``max_batches_per_wave``), not timing.
 
-Reported per path: mapped-jobs/sec and p50/p99 mapping latency (submit ->
-future resolution).  Results are merged into ``BENCH_mapper.json`` under
-the ``"scheduler_sim"`` key (CI artifact; see ``--json``).
+Legacy mode -- ``--stream`` runs the original wall-clock job-stream
+benchmark (async futures+flusher vs sequential submit+flush per job)
+and writes the ``"scheduler_sim"`` section; see ``run_stream``.  There
+the timed paths run warm by default (``MappingEngine.warmup()``
+AOT-precompiles bucket programs; an extra ``async_cold`` pass records
+what first-wave requests pay without it) -- ``--no-warmup`` runs cold.
 
-By default the timed paths run warm: ``MappingEngine.warmup()``
-AOT-precompiles every bucket program first, and an extra ``async_cold``
-pass (measured before any compile happens) records what first-wave
-requests pay without it -- the warm-vs-cold p99 lands under ``"warmup"``
-in the JSON.  ``--no-warmup`` skips both and runs everything cold.
-
-With ``--mesh-shape N`` both engines dispatch their bucket waves sharded
+With ``--mesh-shape N`` engines dispatch their bucket waves sharded
 over an N-device instance mesh (``core.batch_sharded``) and results land
-under ``"scheduler_sim_mesh"`` instead, so sharded and unsharded runs can
-sit side by side in one JSON.  On a CPU-only box, emulate the devices
-first: ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+under ``"scheduler_rm_mesh"`` / ``"scheduler_sim_mesh"`` instead, so
+sharded and unsharded runs sit side by side in one JSON.  On a CPU-only
+box, emulate the devices first:
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 
 Usage:
-    PYTHONPATH=src python benchmarks/scheduler_sim.py             # 50 jobs
-    PYTHONPATH=src python benchmarks/scheduler_sim.py --dry-run   # CI smoke
+    PYTHONPATH=src python benchmarks/scheduler_sim.py              # replay
+    PYTHONPATH=src python benchmarks/scheduler_sim.py --trace x.swf
+    PYTHONPATH=src python benchmarks/scheduler_sim.py --stream     # legacy
+    PYTHONPATH=src python benchmarks/scheduler_sim.py --dry-run    # CI smoke
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
         PYTHONPATH=src python benchmarks/scheduler_sim.py --mesh-shape 4
 """
@@ -51,6 +53,8 @@ import numpy as np
 from repro.core import annealing, instances
 from repro.serve.cluster import ClusterState
 from repro.serve.mapper import MapRequest, MappingEngine
+from repro.serve.rm import ResourceManager
+from repro.serve.trace import parse_swf, synthetic_trace
 
 try:                                     # package form (benchmarks.run)
     from . import common
@@ -172,9 +176,84 @@ def run_stream(jobs: List[Job], cluster: ClusterState, engine: MappingEngine,
     }
 
 
+def load_trace(args, num_nodes: int):
+    """Job specs for the replay: synthetic Poisson or an SWF file."""
+    if args.trace == "synthetic":
+        return synthetic_trace(args.jobs, sizes=tuple(args.sizes),
+                               weights=tuple(args.weights),
+                               arrival_rate=args.arrival_rate,
+                               mean_run_s=max(args.run_s, 1e-3),
+                               seed=args.seed)
+    specs = parse_swf(args.trace, max_jobs=args.jobs)
+    fitting = [s for s in specs if s.size <= num_nodes]
+    if not fitting:
+        raise SystemExit(f"no job in {args.trace} fits {num_nodes} nodes")
+    if len(fitting) < len(specs):
+        print(f"    skipped {len(specs) - len(fitting)} jobs larger than "
+              f"the {num_nodes}-node cluster")
+    return fitting
+
+
+def run_replay(specs, M, mesh, sa_cfg, buckets, args) -> Dict[str, object]:
+    """Replay the same specs through first-fit and co-optimized managers."""
+    def fresh_engine():
+        return MappingEngine(buckets=buckets, num_processes=2,
+                             sa_cfg=sa_cfg,
+                             polish_rounds=args.polish_rounds,
+                             max_batch=args.max_batch, mesh=mesh)
+
+    out: Dict[str, object] = {}
+    variants = (("first_fit", 1, ("first_fit",)),
+                ("co_opt", args.candidates, tuple(args.policies)))
+    for name, k, policies in variants:
+        rm = ResourceManager(M, fresh_engine(), candidates=k,
+                             policies=policies, algorithm=args.algorithm,
+                             deadline_ms=args.deadline_ms)
+        for s in specs:
+            rm.submit_job(s)
+        t0 = time.perf_counter()
+        rep = rm.run()
+        wall = time.perf_counter() - t0
+        # single-dispatch waves, proven by engine stats (not timing): all
+        # K candidates of a wave share one (bucket, algorithm, tier)
+        # group, so one flush solves them in <= 1 batch
+        assert rep.max_batches_per_wave <= 1, (
+            f"{name}: a candidate wave split into "
+            f"{rep.max_batches_per_wave} solver batches")
+        out[name] = {**rep.asdict(), "wall_s": wall,
+                     "solver_batches": rm.engine.stats.solver_batches,
+                     "solver_calls": rm.engine.stats.solver_calls,
+                     "cache_hits": rm.engine.stats.cache_hits}
+        print(f"{name:>10}: makespan {rep.makespan_s:8.1f} s, "
+              f"util {rep.utilization:5.1%}, "
+              f"wait p50/p99 {rep.wait_p50_s:6.1f}/{rep.wait_p99_s:6.1f} s, "
+              f"mean F {rep.mean_objective:10.1f}, "
+              f"backfilled {rep.backfilled}, wall {wall:5.1f} s")
+    base = out["first_fit"]["mean_objective"]
+    coop = out["co_opt"]["mean_objective"]
+    out["objective_improvement"] = (base - coop) / max(base, 1e-9)
+    out["makespan_ratio"] = (out["first_fit"]["makespan_s"]
+                             / max(out["co_opt"]["makespan_s"], 1e-9))
+    print(f"allocate-then-map co-optimization: mean mapped objective "
+          f"{coop:.1f} vs first-fit {base:.1f} "
+          f"({out['objective_improvement']:+.1%})")
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--jobs", type=int, default=50)
+    ap.add_argument("--stream", action="store_true",
+                    help="run the legacy wall-clock job-stream benchmark "
+                         "(async vs sequential) instead of the RM replay")
+    ap.add_argument("--trace", default="synthetic", metavar="SRC",
+                    help="replay source: 'synthetic' (default) or an SWF "
+                         "file path")
+    ap.add_argument("--candidates", type=int, default=3,
+                    help="candidate allocations scored per job (replay)")
+    ap.add_argument("--policies", nargs="+",
+                    default=("compact", "slab", "scatter"),
+                    help="candidate carving policies (replay co_opt path)")
     ap.add_argument("--grid", type=int, nargs=3, default=(4, 4, 8),
                     metavar=("X", "Y", "Z"), help="cluster node grid")
     ap.add_argument("--sizes", type=int, nargs="+", default=(8, 16, 24, 32))
@@ -242,6 +321,41 @@ def main():
                                 iters_per_exchange=args.iters_per_exchange,
                                 num_exchanges=args.num_exchanges,
                                 solvers=args.solvers)
+    if not args.stream:
+        specs = load_trace(args, M.shape[0])
+        buckets = tuple(sorted(set(
+            max(4, int(2 ** np.ceil(np.log2(max(s.size, 2)))))
+            for s in specs)))
+        print(f"replaying {len(specs)} jobs over {M.shape[0]} nodes "
+              f"({args.grid[0]}x{args.grid[1]}x{args.grid[2]}), "
+              f"{args.candidates} candidates/{'+'.join(args.policies)}"
+              + (f", waves sharded over a {args.mesh_shape}-device mesh"
+                 if mesh is not None else ""))
+        out = run_replay(specs, M, mesh, sa_cfg, buckets, args)
+        if args.json:
+            section = ("scheduler_rm" if mesh is None else
+                       "scheduler_rm_mesh")
+            payload = {
+                "config": {"jobs": len(specs), "grid": list(args.grid),
+                           "trace": args.trace,
+                           "sizes": list(args.sizes),
+                           "arrival_rate": args.arrival_rate,
+                           "run_s": args.run_s,
+                           "algorithm": args.algorithm,
+                           "deadline_ms": args.deadline_ms,
+                           "candidates": args.candidates,
+                           "policies": list(args.policies),
+                           "max_batch": args.max_batch,
+                           "mesh_shape": args.mesh_shape,
+                           "dry_run": args.dry_run},
+                **out,
+            }
+            common.write_bench_json(args.json, section, payload)
+            print(f"wrote {args.json} [{section}]")
+        if args.dry_run:
+            print("dry-run OK")
+        return
+
     jobs = make_stream(args.jobs, tuple(args.sizes), tuple(args.weights),
                        args.arrival_rate, args.run_s, args.seed)
     buckets = tuple(sorted(set(int(2 ** np.ceil(np.log2(s)))

@@ -16,10 +16,20 @@ before the job starts, on the job's own resources):
 
 The predicted communication cost F(p) vs F(identity) is the placement gain
 reported in EXPERIMENTS.md and benchmarks/placement_gain.py.
+
+Public surface (see ``docs/DESIGN.md`` §9 for the API consolidation):
+:class:`PlacementService` is the explicit object owning the engine;
+``default_service()`` / ``reset_default_service()`` manage the shared
+instance the convenience functions (``solve_placement``, ``place_job``,
+``configure_engine_mesh``, ``get_engine``) route through.  The old
+module-global entry points -- ``submit_placement``, ``placement_result``,
+``solve_placements``, ``reset_engine`` -- remain as thin deprecation
+shims over the default service and will be removed in a future major
+version.
 """
 from __future__ import annotations
 
-import time
+import warnings
 from dataclasses import dataclass
 from typing import Optional, Sequence, Tuple
 
@@ -74,55 +84,6 @@ _FAST_SA = annealing.SAConfig(max_neighbors=25, iters_per_exchange=40,
 _FAST_GA = genetic.GAConfig(generations=120, pop_size=64, seed_identity=True)
 
 
-_ENGINE: Optional[MappingEngine] = None
-_ENGINE_MESH: Optional[Mesh] = None
-_ENGINE_AXIS: str = "instances"
-
-
-def get_engine() -> MappingEngine:
-    """Shared batched mapping engine for the launcher: repeated launches of
-    the same job shape are served from its LRU cache, and concurrent
-    placements (``solve_placements``) are dispatched as one bucket batch.
-    ``configure_engine_mesh`` makes it dispatch waves mesh-sharded."""
-    global _ENGINE
-    if _ENGINE is None:
-        _ENGINE = MappingEngine(num_processes=4, sa_cfg=_FAST_SA,
-                                ga_cfg=_FAST_GA, mesh=_ENGINE_MESH,
-                                instance_axis=_ENGINE_AXIS)
-    return _ENGINE
-
-
-def configure_engine_mesh(mesh: Optional[Mesh],
-                          instance_axis: str = "instances") -> None:
-    """Shard the shared engine's bucket waves over ``mesh``'s
-    ``instance_axis`` (``core.batch_sharded``); ``None`` restores the
-    single-device path.  Results are bitwise-identical either way, so this
-    is purely a throughput knob.  Rebuilds the engine (the mesh is fixed at
-    construction); any queued futures are drained first by ``stop()``."""
-    global _ENGINE_MESH, _ENGINE_AXIS
-    _ENGINE_MESH, _ENGINE_AXIS = mesh, instance_axis
-    _reset_engine_only()
-
-
-def _reset_engine_only() -> None:
-    global _ENGINE
-    if _ENGINE is not None:
-        # unconditionally: stop() also drains a never-started engine's
-        # queue, so no caller is left blocked on an unresolved future
-        _ENGINE.stop()
-        _ENGINE = None
-
-
-def reset_engine() -> None:
-    """Tear down the module-global engine (stop its flusher, drop cache and
-    stats) and restore the default (unsharded) mesh configuration.  Test
-    fixtures call this so one test's cache/stats/mesh can never leak into
-    another; the next ``get_engine()`` builds a fresh one."""
-    global _ENGINE_MESH, _ENGINE_AXIS
-    _ENGINE_MESH, _ENGINE_AXIS = None, "instances"
-    _reset_engine_only()
-
-
 def _seed_from_key(key) -> int:
     if key is None:
         return 0
@@ -133,80 +94,170 @@ def _seed_from_key(key) -> int:
     return int(np.asarray(data).reshape(-1)[-1])
 
 
-def solve_placement(c: np.ndarray, m: np.ndarray, algorithm: str = "psa",
-                    key=None, num_processes: Optional[int] = None,
-                    sa_cfg: Optional[annealing.SAConfig] = None,
-                    ga_cfg: Optional[genetic.GAConfig] = None
-                    ) -> PlacementResult:
-    """Solve one placement.  The default-budget path routes through the
-    shared :class:`MappingEngine` (bucketed, batched, cached).  With an
-    explicit ``key`` the seed enters the cache digest, so different keys
-    yield independent solves (best-of-k sweeps work) while repeating the
-    same key stays cached; with ``key=None`` the cache is keyed by the
-    instance alone.  An explicit ``num_processes`` or custom
-    ``sa_cfg``/``ga_cfg`` bypasses the engine and solves directly."""
-    if (num_processes is None and sa_cfg is None and ga_cfg is None
-            and algorithm in ("psa", "pga", "pca")):
-        resp = get_engine().map_one(np.asarray(c), np.asarray(m),
-                                    algorithm=algorithm,
-                                    seed=_seed_from_key(key),
-                                    cache_seed=key is not None)
-        return _result_from_response(resp)
-    res = mapping_lib.find_mapping(
-        c, m, algorithm, key=key,
-        num_processes=4 if num_processes is None else num_processes,
-        sa_cfg=sa_cfg or _FAST_SA, ga_cfg=ga_cfg or _FAST_GA)
-    return PlacementResult(perm=res.perm, cost_before=res.baseline,
-                           cost_after=res.objective, algorithm=algorithm,
-                           seconds=res.seconds)
-
-
 def _result_from_response(resp) -> PlacementResult:
     return PlacementResult(perm=resp.perm, cost_before=resp.baseline,
                            cost_after=resp.objective,
                            algorithm=resp.algorithm, seconds=resp.seconds)
 
 
-def submit_placement(c: np.ndarray, m: np.ndarray, algorithm: str = "psa",
-                     key=None, job_id: str = "plc",
-                     deadline_ms: Optional[float] = None) -> MapFuture:
-    """Streaming form: queue one placement on the shared engine and return
-    its :class:`MapFuture` immediately.  With the engine's flusher running
-    (``get_engine().start()``) the future resolves when its bucket fills
-    or the flush deadline passes; otherwise the caller flushes explicitly.
-    ``future.result()`` yields the :class:`MapResponse`; wrap it with
-    ``placement_result`` for the launcher-facing record."""
-    eng = get_engine()
-    return eng.submit(MapRequest(job_id=job_id, C=np.asarray(c),
-                                 M=np.asarray(m), algorithm=algorithm,
-                                 seed=_seed_from_key(key),
-                                 cache_seed=key is not None,
-                                 deadline_ms=deadline_ms))
+class PlacementService:
+    """Explicit owner of one launcher-side :class:`MappingEngine`.
+
+    The engine is built lazily (first use) with the launcher's fast
+    budget presets, so repeated launches of the same job shape are
+    served from its LRU cache and concurrent placements ride one bucket
+    batch.  Everything the old module globals did lives here as
+    methods; the module-level functions below are conveniences over
+    ``default_service()``.
+    """
+
+    def __init__(self, *, mesh: Optional[Mesh] = None,
+                 instance_axis: str = "instances",
+                 num_processes: int = 4,
+                 sa_cfg: Optional[annealing.SAConfig] = None,
+                 ga_cfg: Optional[genetic.GAConfig] = None):
+        self._mesh = mesh
+        self._axis = instance_axis
+        self._num_processes = num_processes
+        self._sa_cfg = sa_cfg or _FAST_SA
+        self._ga_cfg = ga_cfg or _FAST_GA
+        self._engine: Optional[MappingEngine] = None
+
+    @property
+    def engine(self) -> MappingEngine:
+        if self._engine is None:
+            self._engine = MappingEngine(
+                num_processes=self._num_processes, sa_cfg=self._sa_cfg,
+                ga_cfg=self._ga_cfg, mesh=self._mesh,
+                instance_axis=self._axis)
+        return self._engine
+
+    def configure_mesh(self, mesh: Optional[Mesh],
+                       instance_axis: str = "instances") -> None:
+        """Shard the engine's bucket waves over ``mesh``'s
+        ``instance_axis`` (``core.batch_sharded``); ``None`` restores the
+        single-device path.  Results are bitwise-identical either way, so
+        this is purely a throughput knob.  Rebuilds the engine (the mesh
+        is fixed at construction); queued futures are drained first."""
+        self._mesh, self._axis = mesh, instance_axis
+        self.close()
+
+    def close(self) -> None:
+        """Stop the engine (draining any queued futures, so no caller is
+        left blocked) and drop it; the next use builds a fresh one."""
+        if self._engine is not None:
+            self._engine.stop()
+            self._engine = None
+
+    def solve(self, c: np.ndarray, m: np.ndarray, algorithm: str = "psa",
+              key=None, num_processes: Optional[int] = None,
+              sa_cfg: Optional[annealing.SAConfig] = None,
+              ga_cfg: Optional[genetic.GAConfig] = None) -> PlacementResult:
+        """Solve one placement.  The default-budget path routes through
+        the engine (bucketed, batched, cached).  With an explicit ``key``
+        the seed enters the cache digest, so different keys yield
+        independent solves (best-of-k sweeps work) while repeating the
+        same key stays cached; with ``key=None`` the cache is keyed by
+        the instance alone.  An explicit ``num_processes`` or custom
+        ``sa_cfg``/``ga_cfg`` bypasses the engine and solves directly."""
+        if (num_processes is None and sa_cfg is None and ga_cfg is None
+                and algorithm in ("psa", "pga", "pca")):
+            resp = self.engine.map_one(np.asarray(c), np.asarray(m),
+                                       algorithm=algorithm,
+                                       seed=_seed_from_key(key),
+                                       cache_seed=key is not None)
+            return _result_from_response(resp)
+        res = mapping_lib.find_mapping(
+            c, m, algorithm, key=key,
+            num_processes=(self._num_processes if num_processes is None
+                           else num_processes),
+            sa_cfg=sa_cfg or self._sa_cfg, ga_cfg=ga_cfg or self._ga_cfg)
+        return PlacementResult(perm=res.perm, cost_before=res.baseline,
+                               cost_after=res.objective, algorithm=algorithm,
+                               seconds=res.seconds)
+
+    def submit(self, c: np.ndarray, m: np.ndarray, algorithm: str = "psa",
+               key=None, job_id: str = "plc",
+               deadline_ms: Optional[float] = None) -> MapFuture:
+        """Streaming form: queue one placement and return its
+        :class:`MapFuture` immediately.  With the engine's flusher
+        running (``service.engine.start()``) the future resolves when
+        its bucket fills or the flush deadline passes; otherwise the
+        caller flushes explicitly.  Wrap ``future.result()`` with
+        :meth:`result` for the launcher-facing record."""
+        return self.engine.submit(MapRequest(
+            job_id=job_id, C=np.asarray(c), M=np.asarray(m),
+            algorithm=algorithm, seed=_seed_from_key(key),
+            cache_seed=key is not None, deadline_ms=deadline_ms))
+
+    @staticmethod
+    def result(future: MapFuture,
+               timeout: Optional[float] = None) -> PlacementResult:
+        """Resolve a :meth:`submit` future into a :class:`PlacementResult`."""
+        return _result_from_response(future.result(timeout))
+
+    def solve_batch(self,
+                    instances: Sequence[Tuple[np.ndarray, np.ndarray]],
+                    algorithm: str = "psa", key=None
+                    ) -> Tuple[PlacementResult, ...]:
+        """Batched form over the future-based API: queue every (c, m)
+        instance, flush once so all same-bucket placements ride one
+        accelerator dispatch, and collect each result from its future."""
+        seed = _seed_from_key(key)
+        futures = []
+        for i, (c, m) in enumerate(instances):
+            futures.append(self.engine.submit(MapRequest(
+                job_id=f"plc{i}", C=np.asarray(c), M=np.asarray(m),
+                algorithm=algorithm, seed=seed + i,
+                cache_seed=key is not None)))
+        if not self.engine.running:
+            self.engine.flush()
+        return tuple(_result_from_response(f.result()) for f in futures)
 
 
-def placement_result(future: MapFuture,
-                     timeout: Optional[float] = None) -> PlacementResult:
-    """Resolve a ``submit_placement`` future into a :class:`PlacementResult`."""
-    return _result_from_response(future.result(timeout))
+_SERVICE: Optional[PlacementService] = None
 
 
-def solve_placements(instances: Sequence[Tuple[np.ndarray, np.ndarray]],
-                     algorithm: str = "psa", key=None
-                     ) -> Tuple[PlacementResult, ...]:
-    """Batched form over the future-based API: queue every (c, m) instance,
-    flush once so all same-bucket placements ride one accelerator dispatch,
-    and collect each result from its future."""
-    eng = get_engine()
-    seed = _seed_from_key(key)
-    futures = []
-    for i, (c, m) in enumerate(instances):
-        futures.append(eng.submit(
-            MapRequest(job_id=f"plc{i}", C=np.asarray(c), M=np.asarray(m),
-                       algorithm=algorithm, seed=seed + i,
-                       cache_seed=key is not None)))
-    if not eng.running:
-        eng.flush()
-    return tuple(_result_from_response(f.result()) for f in futures)
+def default_service() -> PlacementService:
+    """The shared launcher-wide :class:`PlacementService`; built on first
+    use, torn down by :func:`reset_default_service`."""
+    global _SERVICE
+    if _SERVICE is None:
+        _SERVICE = PlacementService()
+    return _SERVICE
+
+
+def reset_default_service() -> None:
+    """Tear down the shared service (stop its engine's flusher, drop
+    cache/stats, restore the default unsharded mesh).  Test fixtures call
+    this so one test's cache/stats/mesh can never leak into another."""
+    global _SERVICE
+    if _SERVICE is not None:
+        _SERVICE.close()
+        _SERVICE = None
+
+
+def get_engine() -> MappingEngine:
+    """The default service's engine (see :class:`PlacementService`)."""
+    return default_service().engine
+
+
+def configure_engine_mesh(mesh: Optional[Mesh],
+                          instance_axis: str = "instances") -> None:
+    """Configure the default service's mesh sharding
+    (:meth:`PlacementService.configure_mesh`)."""
+    default_service().configure_mesh(mesh, instance_axis)
+
+
+def solve_placement(c: np.ndarray, m: np.ndarray, algorithm: str = "psa",
+                    key=None, num_processes: Optional[int] = None,
+                    sa_cfg: Optional[annealing.SAConfig] = None,
+                    ga_cfg: Optional[genetic.GAConfig] = None
+                    ) -> PlacementResult:
+    """One placement via the default service (:meth:`PlacementService.solve`)."""
+    return default_service().solve(c, m, algorithm, key=key,
+                                   num_processes=num_processes,
+                                   sa_cfg=sa_cfg, ga_cfg=ga_cfg)
 
 
 def apply_placement(mesh: Mesh, perm: np.ndarray) -> Mesh:
@@ -224,3 +275,40 @@ def place_job(compiled, mesh: Mesh, algorithm: str = "psa", key=None
     m = system_graph_for_mesh(mesh)
     result = solve_placement(c, m, algorithm, key=key)
     return apply_placement(mesh, result.perm), result
+
+
+# ------------------------------------------------------- deprecation shims
+def _warn_deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.launch.placement.{old} is deprecated; use {new} instead",
+        DeprecationWarning, stacklevel=3)
+
+
+def submit_placement(c: np.ndarray, m: np.ndarray, algorithm: str = "psa",
+                     key=None, job_id: str = "plc",
+                     deadline_ms: Optional[float] = None) -> MapFuture:
+    """Deprecated: use ``default_service().submit(...)``."""
+    _warn_deprecated("submit_placement", "PlacementService.submit")
+    return default_service().submit(c, m, algorithm, key=key, job_id=job_id,
+                                    deadline_ms=deadline_ms)
+
+
+def placement_result(future: MapFuture,
+                     timeout: Optional[float] = None) -> PlacementResult:
+    """Deprecated: use ``PlacementService.result(...)``."""
+    _warn_deprecated("placement_result", "PlacementService.result")
+    return PlacementService.result(future, timeout)
+
+
+def solve_placements(instances: Sequence[Tuple[np.ndarray, np.ndarray]],
+                     algorithm: str = "psa", key=None
+                     ) -> Tuple[PlacementResult, ...]:
+    """Deprecated: use ``default_service().solve_batch(...)``."""
+    _warn_deprecated("solve_placements", "PlacementService.solve_batch")
+    return default_service().solve_batch(instances, algorithm, key=key)
+
+
+def reset_engine() -> None:
+    """Deprecated: use :func:`reset_default_service`."""
+    _warn_deprecated("reset_engine", "reset_default_service")
+    reset_default_service()

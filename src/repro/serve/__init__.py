@@ -1,0 +1,30 @@
+"""Public service-layer API.
+
+One front door: :class:`ResourceManager` (queue + EASY backfilling +
+allocate-then-map candidate waves).  The pieces it composes --
+:class:`MappingEngine`, :class:`ClusterState`, the trace helpers -- are
+exported for direct use, but the names below are the *whole* stability
+contract of ``repro.serve``; anything else in the submodules is
+internal.  See ``docs/DESIGN.md`` §9 for the control-plane design and
+the old-name -> new-name migration table.
+"""
+from repro.serve.cluster import Allocation, Candidate, ClusterState
+from repro.serve.mapper import (DeadlinePolicy, MapFuture, MappingEngine,
+                                MapRequest, MapResponse)
+from repro.serve.rm import (JobHandle, JobSpec, ReplayReport,
+                            ResourceManager, default_flows, dilation_score,
+                            objective_score)
+from repro.serve.trace import format_swf, parse_swf, synthetic_trace
+
+__all__ = [
+    # control plane (the front door)
+    "ResourceManager", "JobSpec", "JobHandle", "ReplayReport",
+    "default_flows", "objective_score", "dilation_score",
+    # mapping engine
+    "MappingEngine", "MapRequest", "MapResponse", "MapFuture",
+    "DeadlinePolicy",
+    # cluster model
+    "ClusterState", "Allocation", "Candidate",
+    # traces
+    "parse_swf", "format_swf", "synthetic_trace",
+]

@@ -98,9 +98,14 @@ AUTO = "auto"                       # algorithm chosen by the deadline policy
 TIERS = ("default", "tight")
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, kw_only=True)
 class MapRequest:
     """One job's mapping problem: program graph C, system graph M.
+
+    Stability contract: part of the public ``repro.serve`` API.  Fields
+    are keyword-only and frozen; new fields are appended with defaults,
+    existing fields are never renamed, retyped, or reordered within a
+    major version.  Construct with keywords only.
 
     ``cache_seed=True`` folds the seed into the cache digest: the same
     instance with a different seed then gets a fresh, independent solve
@@ -120,8 +125,10 @@ class MapRequest:
     deadline_ms: Optional[float] = None
 
 
-@dataclass
+@dataclass(frozen=True, kw_only=True)
 class MapResponse:
+    """One solved mapping.  Same stability contract as
+    :class:`MapRequest`: keyword-only, frozen, append-only fields."""
     job_id: str
     perm: np.ndarray           # (n,) process -> node
     objective: float           # F(perm)

@@ -43,11 +43,11 @@ def _persistent_cache_off_for_lm_stack(request):
 
 @pytest.fixture(autouse=True)
 def fresh_placement_engine():
-    """The launcher's mapping engine is a module global; reset it around
-    every test so one test's LRU cache, warm-start state, or stats can
-    never leak into another (and a started flusher thread never outlives
-    its test)."""
+    """The launcher's default PlacementService is a shared singleton;
+    reset it around every test so one test's LRU cache, warm-start state,
+    or stats can never leak into another (and a started flusher thread
+    never outlives its test)."""
     from repro.launch import placement
-    placement.reset_engine()
+    placement.reset_default_service()
     yield
-    placement.reset_engine()
+    placement.reset_default_service()

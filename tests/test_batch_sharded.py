@@ -177,7 +177,7 @@ def test_placement_configure_engine_mesh():
         res = placement.solve_placement(C, M)
         assert res.cost_after <= res.cost_before
     finally:
-        placement.reset_engine()
+        placement.reset_default_service()
     assert placement.get_engine().mesh is None
 
 

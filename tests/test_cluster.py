@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 
 from repro.core import instances
-from repro.serve.cluster import Allocation, ClusterState
+from repro.serve.cluster import Allocation, Candidate, ClusterState
 
 
 def _grid_cluster(dims=(2, 2, 2), policy="compact"):
@@ -113,3 +113,117 @@ def test_cluster_drives_mapping_engine_subset_instances():
     cl.release("job")
     cl.release("other")
     assert cl.num_free == 8
+
+
+# ------------------------------------------- determinism under fragmentation
+def _fragment(cl, occupied):
+    for node in occupied:
+        cl._free[node] = False
+
+
+def test_first_fit_is_deterministic_and_sorted_under_fragmentation():
+    """Identically-occupied clusters must carve identical, ascending node
+    lists regardless of allocation history, so candidate digests are
+    cache-stable across replicas."""
+    M = instances.grid_distance_matrix((3, 3, 3))
+    occupied = np.random.default_rng(1).choice(27, size=11, replace=False)
+
+    c1 = ClusterState(M, policy="first_fit")
+    _fragment(c1, occupied)
+    # same occupancy reached through a different history
+    c2 = ClusterState(M, policy="first_fit")
+    _fragment(c2, range(27))
+    for node in sorted(set(range(27)) - set(occupied.tolist())):
+        c2._free[node] = True
+
+    a1, a2 = c1.allocate("j", 8), c2.allocate("j", 8)
+    np.testing.assert_array_equal(a1.nodes, a2.nodes)
+    assert (np.diff(a1.nodes) > 0).all()          # sorted ascending
+    np.testing.assert_array_equal(a1.M_sub, a2.M_sub)
+    assert a1.M_sub.tobytes() == a2.M_sub.tobytes()   # digest-stable
+
+
+def test_candidate_subsets_stable_across_identical_states():
+    M = instances.grid_distance_matrix((3, 3, 3))
+    occupied = np.random.default_rng(2).choice(27, size=9, replace=False)
+    lists = []
+    for _ in range(2):
+        cl = ClusterState(M)
+        _fragment(cl, occupied)
+        lists.append(cl.candidate_subsets(8, k=3))
+    assert [c.policy for c in lists[0]] == [c.policy for c in lists[1]]
+    for ca, cb in zip(*lists):
+        np.testing.assert_array_equal(ca.nodes, cb.nodes)
+        assert ca.M_sub.tobytes() == cb.M_sub.tobytes()
+
+
+# ----------------------------------------------------------- candidate waves
+def test_candidate_subsets_distinct_valid_and_non_mutating():
+    M = instances.grid_distance_matrix((3, 3, 3))
+    cl = ClusterState(M)
+    _fragment(cl, np.random.default_rng(0).choice(27, 13, replace=False))
+    free_before = cl.free_nodes().copy()
+    cands = cl.candidate_subsets(8, k=3)
+    np.testing.assert_array_equal(cl.free_nodes(), free_before)  # no mutation
+    assert 1 <= len(cands) <= 3
+    seen = set()
+    for c in cands:
+        assert isinstance(c, Candidate) and c.size == 8
+        assert (np.diff(c.nodes) > 0).all()
+        assert np.isin(c.nodes, free_before).all()
+        np.testing.assert_array_equal(c.M_sub, M[np.ix_(c.nodes, c.nodes)])
+        key = c.nodes.tobytes()
+        assert key not in seen                    # deduplicated
+        seen.add(key)
+    assert cl.candidate_subsets(15) == []  # fits machine, not the free set
+    with pytest.raises(ValueError):
+        cl.candidate_subsets(99)                  # larger than the machine
+    with pytest.raises(ValueError):
+        cl.candidate_subsets(8, policies=("nope",))
+
+
+def test_scatter_and_slab_policies_shape():
+    M = instances.grid_distance_matrix((2, 2, 4))
+    cl = ClusterState(M)
+    (slab,) = cl.candidate_subsets(4, k=1, policies=("slab",))
+    assert (np.diff(slab.nodes) == 1).all()       # consecutive window
+    (scat,) = cl.candidate_subsets(4, k=1, policies=("scatter",))
+    assert scat.nodes[0] == 0 and scat.nodes[-1] == 15   # spans the machine
+
+
+# ------------------------------------------------------------- reservations
+def test_reserve_promote_commits_winner_and_frees_rest():
+    cl = _grid_cluster()
+    cands = cl.candidate_subsets(3, k=3)
+    union = np.unique(np.concatenate([c.nodes for c in cands]))
+    cl.reserve("wave", union)
+    assert cl.num_free == 8 - len(union)
+    assert cl.allocate("intruder", 8) is None     # reserved nodes are held
+    winner = cands[-1]
+    alloc = cl.promote("wave", "job", winner.nodes)
+    np.testing.assert_array_equal(alloc.nodes, winner.nodes)
+    assert cl.allocation("job") is alloc
+    assert cl.num_free == 8 - winner.size         # losers returned
+    cl.release("job")
+    assert cl.num_free == 8
+
+
+def test_reserve_cancel_restores_and_error_paths():
+    cl = _grid_cluster()
+    nodes = cl.free_nodes()[:4]
+    cl.reserve("t", nodes)
+    with pytest.raises(ValueError):
+        cl.reserve("t", nodes)                    # duplicate tag
+    with pytest.raises(ValueError):
+        cl.reserve("u", nodes)                    # nodes already held
+    np.testing.assert_array_equal(cl.reserved_nodes("t"), np.sort(nodes))
+    cl.cancel("t")
+    assert cl.num_free == 8
+    with pytest.raises(KeyError):
+        cl.cancel("t")
+    cl.reserve("t", nodes)
+    with pytest.raises(ValueError):
+        cl.promote("t", "j", np.array([7]))       # winner not in reservation
+    with pytest.raises(KeyError):
+        cl.promote("ghost", "j", nodes[:1])
+    cl.cancel("t")

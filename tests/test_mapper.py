@@ -217,7 +217,7 @@ def test_solve_placements_batched_api():
     insts = []
     for n, s in [(6, 0), (10, 1), (6, 0)]:     # includes a duplicate shape
         insts.append(_instance(n, s))
-    results = pl.solve_placements(insts, "psa")
+    results = pl.default_service().solve_batch(insts, "psa")
     assert len(results) == 3
     for (C, M), res in zip(insts, results):
         n = C.shape[0]

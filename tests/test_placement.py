@@ -109,38 +109,61 @@ def test_placement_improves_cross_pod_traffic():
     assert qap.is_permutation(jax.numpy.asarray(res.perm))
 
 
-def test_reset_engine_drains_queued_futures():
-    """A queued-but-unflushed placement future must not be left hanging
-    when the module-global engine is torn down (fixture teardown path)."""
-    rng = np.random.default_rng(0)
-    c = rng.random((6, 6)).astype(np.float32)
+def _toy_instance(n=6, seed=0):
+    rng = np.random.default_rng(seed)
+    c = rng.random((n, n)).astype(np.float32)
     c = c + c.T
     np.fill_diagonal(c, 0)
-    m = rng.random((6, 6)).astype(np.float32)
+    m = rng.random((n, n)).astype(np.float32)
     m = m + m.T
     np.fill_diagonal(m, 0)
-    fut = pl.submit_placement(c, m, "psa", job_id="queued")
-    pl.reset_engine()
+    return c, m
+
+
+def test_service_reset_drains_queued_futures():
+    """A queued-but-unflushed placement future must not be left hanging
+    when the default service is torn down (fixture teardown path)."""
+    c, m = _toy_instance()
+    fut = pl.default_service().submit(c, m, "psa", job_id="queued")
+    pl.reset_default_service()
     assert fut.done()
-    res = pl.placement_result(fut)
+    res = pl.PlacementService.result(fut)
     assert sorted(res.perm.tolist()) == list(range(6))
 
 
 def test_streaming_placement_futures_with_flusher():
-    """submit_placement + running flusher: futures resolve on the deadline
-    and match the synchronous result for the same instance and key."""
+    """PlacementService.submit + running flusher: futures resolve on the
+    deadline and match the synchronous result for the same instance/key."""
     spec = tpu.PodSpec(side_x=2, side_y=1, num_pods=1)
     m = tpu.distance_matrix(spec)
     c = np.zeros((2, 2), np.float32)
     c[0, 1] = 5.0
-    pl.get_engine().start()
+    svc = pl.default_service()
+    svc.engine.start()
     try:
-        fut = pl.submit_placement(c, m, "psa", key=jax.random.PRNGKey(0),
-                                  job_id="s")
-        res = pl.placement_result(fut, timeout=120)
+        fut = svc.submit(c, m, "psa", key=jax.random.PRNGKey(0), job_id="s")
+        res = svc.result(fut, timeout=120)
     finally:
-        pl.get_engine().stop()
+        svc.engine.stop()
     assert res.cost_after == pytest.approx(res.cost_before)
+
+
+def test_deprecated_placement_shims_work_and_warn():
+    """The old module-global names must still behave (they route to the
+    default service) while emitting DeprecationWarning."""
+    c, m = _toy_instance(seed=1)
+    with pytest.warns(DeprecationWarning, match="submit_placement"):
+        fut = pl.submit_placement(c, m, "psa", job_id="old")
+    pl.get_engine().flush()
+    with pytest.warns(DeprecationWarning, match="placement_result"):
+        res = pl.placement_result(fut)
+    assert sorted(res.perm.tolist()) == list(range(6))
+    with pytest.warns(DeprecationWarning, match="solve_placements"):
+        batch = pl.solve_placements([(c, m)], "psa")
+    assert len(batch) == 1
+    assert batch[0].cost_after <= batch[0].cost_before + 1e-6
+    with pytest.warns(DeprecationWarning, match="reset_engine"):
+        pl.reset_engine()
 
 
 def test_placement_identity_when_already_optimal():

@@ -1,0 +1,223 @@
+"""ResourceManager control plane: queue, EASY backfilling, candidate waves."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import instances
+from repro.serve import (Candidate, ClusterState, JobSpec, MappingEngine,
+                         MapRequest, MapResponse, ResourceManager,
+                         default_flows, dilation_score)
+from repro.serve.rm import QUEUED, RUNNING
+
+from _fixtures import SA_SMALL
+
+
+def _engine(**kw):
+    kw.setdefault("buckets", (8,))
+    kw.setdefault("num_processes", 2)
+    kw.setdefault("sa_cfg", SA_SMALL)
+    kw.setdefault("max_batch", 8)
+    return MappingEngine(**kw)
+
+
+def _grid(dims=(2, 2, 2)):
+    return instances.grid_distance_matrix(dims)
+
+
+# ---------------------------------------------------------------- lifecycle
+def test_submit_run_finish_lifecycle_and_report():
+    rm = ResourceManager(_grid(), _engine(), candidates=2)
+    h = rm.submit_job(JobSpec(job_id="a", size=4, run_s=2.0))
+    assert h.state == QUEUED
+    with pytest.raises(RuntimeError):
+        h.result()                       # not mapped yet
+    rm.schedule()
+    assert h.state == RUNNING and h.start_s == 0.0 and h.wait_s == 0.0
+    assert sorted(h.response.perm.tolist()) == list(range(4))
+    rep = rm.run()
+    assert h.done() and h.finish_s == pytest.approx(2.0)
+    assert rep.jobs == 1 and rep.makespan_s == pytest.approx(2.0)
+    assert rep.utilization == pytest.approx(4 * 2.0 / (8 * 2.0))
+    assert rm.cluster.num_free == 8      # allocation released
+
+
+def test_submit_rejects_bad_specs():
+    rm = ResourceManager(_grid(), _engine())
+    with pytest.raises(TypeError):
+        rm.submit_job("not a spec")
+    with pytest.raises(ValueError):
+        rm.submit_job(JobSpec(job_id="x", size=9))      # larger than cluster
+    with pytest.raises(ValueError):
+        rm.submit_job(JobSpec(job_id="x", size=2,
+                              C=np.zeros((3, 3), np.float32)))
+    with pytest.raises(ValueError):
+        ResourceManager(_grid(), _engine(max_batch=2), candidates=3)
+
+
+# ------------------------------------------------------------- backfilling
+def test_backfill_never_starves_queue_head():
+    """EASY guarantee: a long later job must not delay the blocked head
+    past its shadow time; a short one may run in the hole."""
+    rm = ResourceManager(_grid(), _engine(), candidates=1,
+                         policies=("first_fit",))
+    a = rm.submit_job(JobSpec(job_id="a", size=4, run_s=10.0, arrival_s=0.0))
+    head = rm.submit_job(JobSpec(job_id="head", size=8, run_s=5.0,
+                                 arrival_s=1.0))
+    long_j = rm.submit_job(JobSpec(job_id="long", size=4, run_s=100.0,
+                                   arrival_s=2.0))
+    short_j = rm.submit_job(JobSpec(job_id="short", size=4, run_s=3.0,
+                                    arrival_s=2.0))
+    rm.run()
+    assert a.start_s == 0.0
+    # the short job backfills into the hole (ends 5.0 <= shadow 10.0) ...
+    assert short_j.backfilled and short_j.start_s == pytest.approx(2.0)
+    # ... the long one must wait (it would push the head to t=102)
+    assert not long_j.backfilled
+    # the head starts exactly at its shadow time, never later
+    assert head.start_s == pytest.approx(10.0)
+    assert long_j.start_s >= head.finish_s - 1e-9
+    assert rm.stats.backfilled == 1
+
+
+def test_backfill_disabled_is_strict_fifo():
+    rm = ResourceManager(_grid(), _engine(), candidates=1,
+                         policies=("first_fit",), backfill=False)
+    rm.submit_job(JobSpec(job_id="a", size=4, run_s=10.0))
+    head = rm.submit_job(JobSpec(job_id="head", size=8, run_s=5.0,
+                                 arrival_s=1.0))
+    short_j = rm.submit_job(JobSpec(job_id="short", size=4, run_s=3.0,
+                                    arrival_s=2.0))
+    rm.run()
+    assert not short_j.backfilled
+    assert head.start_s == pytest.approx(10.0)
+    assert short_j.start_s >= head.start_s
+
+
+def test_priority_orders_the_queue():
+    rm = ResourceManager(_grid(), _engine(), candidates=1,
+                         policies=("first_fit",))
+    rm.submit_job(JobSpec(job_id="hog", size=8, run_s=5.0))
+    lo = rm.submit_job(JobSpec(job_id="lo", size=8, run_s=1.0,
+                               arrival_s=1.0, priority=0))
+    hi = rm.submit_job(JobSpec(job_id="hi", size=8, run_s=1.0,
+                               arrival_s=2.0, priority=5))
+    rm.run()
+    assert hi.start_s < lo.start_s       # higher priority jumps the queue
+
+
+# -------------------------------------------------- candidate waves + argmin
+def test_candidate_wave_picks_argmin_bitwise_vs_independent_solves():
+    """The committed allocation must be the argmin over K candidates, and
+    its mapping bitwise-equal to an independent solve of that candidate
+    alone (the engine's batch==sequential contract, surfaced at RM level).
+    Warm starts are disabled so the K-batch and the lone solves see
+    identical initial states."""
+    M = instances.grid_distance_matrix((2, 2, 3))
+    cl = ClusterState(M)
+    cl.allocate("blocker", 5)            # fragment the free set
+    spec = JobSpec(job_id="j", size=6, run_s=1.0, seed=3)
+
+    # reference: what the cluster would propose, solved one by one
+    ref = ClusterState(M)
+    ref.allocate("blocker", 5)
+    cands = ref.candidate_subsets(6, k=3,
+                                  policies=("compact", "slab", "scatter"))
+    assert len(cands) >= 2               # fragmentation yields distinct sets
+    C = default_flows(6, spec.seed)
+    lone = [_engine(warm_start=False).map_one(C, c.M_sub, "psa",
+                                              job_id=f"lone{i}", seed=3)
+            for i, c in enumerate(cands)]
+    best = int(np.argmin([r.objective for r in lone]))
+
+    rm = ResourceManager(cl, _engine(warm_start=False), candidates=3)
+    h = rm.submit_job(spec)
+    rm.run()
+    assert h.candidate_policy == cands[best].policy
+    np.testing.assert_array_equal(h.allocation.nodes, cands[best].nodes)
+    np.testing.assert_array_equal(h.response.perm, lone[best].perm)
+    assert h.response.objective == lone[best].objective   # bitwise
+
+
+def test_candidate_wave_is_one_engine_batch():
+    """All K candidates of a wave must ride a single solver dispatch --
+    asserted via engine stats, not timing."""
+    eng = _engine()
+    rm = ResourceManager(_grid(), eng, candidates=3)
+    h = rm.submit_job(JobSpec(job_id="j", size=5, run_s=1.0))
+    rm.run()
+    assert h.num_candidates >= 2
+    assert h.wave_batches == 1
+    assert rm.stats.candidate_waves == 1
+    assert rm.stats.max_batches_per_wave == 1
+    assert eng.stats.solver_batches == 1
+
+
+def test_completion_restores_exact_occupancy():
+    """Reservation + promote + release must leave the free set exactly as
+    it was before the job existed."""
+    M = instances.grid_distance_matrix((2, 2, 3))
+    cl = ClusterState(M)
+    cl.allocate("blocker", 5)
+    before = cl.free_nodes().copy()
+    rm = ResourceManager(cl, _engine(), candidates=3)
+    rm.submit_job(JobSpec(job_id="j", size=4, run_s=1.0))
+    rm.run()
+    np.testing.assert_array_equal(cl.free_nodes(), before)
+    assert cl.allocation("j") is None
+
+
+def test_dilation_score_changes_ranking_input():
+    nodes = np.array([0, 1, 2], np.int64)
+    M_sub = np.array([[0, 1, 4], [1, 0, 1], [4, 1, 0]], np.float32)
+    cand = Candidate(policy="compact", nodes=nodes, M_sub=M_sub)
+    C = np.zeros((3, 3), np.float32)
+    C[0, 2] = C[2, 0] = 1.0              # the only talking pair
+    resp = MapResponse(job_id="j", perm=np.array([0, 1, 2]), objective=8.0,
+                       baseline=8.0, algorithm="psa", n=3, bucket=None,
+                       cached=False, seconds=0.0)
+    # identity perm leaves the pair at distance 4 -> score = 8 + a*4
+    assert dilation_score(0.0)(resp, cand, C) == pytest.approx(8.0)
+    assert dilation_score(2.0)(resp, cand, C) == pytest.approx(16.0)
+
+
+# ------------------------------------------------------------- API contract
+def test_serve_exports_blessed_names():
+    import repro.serve as serve
+    for name in serve.__all__:
+        assert hasattr(serve, name), name
+    assert "ResourceManager" in serve.__all__
+    assert "MapRequest" in serve.__all__
+
+
+def test_request_response_are_keyword_only_and_frozen():
+    C = np.zeros((2, 2), np.float32)
+    with pytest.raises(TypeError):
+        MapRequest("j", C, C)            # positional construction forbidden
+    req = MapRequest(job_id="j", C=C, M=C)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        req.job_id = "other"
+    resp = MapResponse(job_id="j", perm=np.array([0, 1]), objective=0.0,
+                       baseline=0.0, algorithm="psa", n=2, bucket=None,
+                       cached=False, seconds=0.0)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        resp.objective = 1.0
+
+
+def test_jobspec_is_keyword_only_and_frozen():
+    with pytest.raises(TypeError):
+        JobSpec("j", 4)
+    spec = JobSpec(job_id="j", size=4)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        spec.size = 8
+    assert spec.run_s == 1.0 and spec.priority == 0
+
+
+def test_unschedulable_queue_raises():
+    cl = ClusterState(_grid())
+    cl.allocate("hog", 8)                # external allocation never released
+    rm = ResourceManager(cl, _engine(), candidates=1,
+                         policies=("first_fit",))
+    rm.submit_job(JobSpec(job_id="j", size=4, run_s=1.0))
+    with pytest.raises(RuntimeError, match="never be scheduled"):
+        rm.run()

@@ -1,0 +1,86 @@
+"""SWF trace parsing/formatting and synthetic workload generation."""
+import numpy as np
+import pytest
+
+from repro.serve import JobSpec, default_flows, format_swf, parse_swf
+from repro.serve.trace import synthetic_trace
+
+
+def _handmade(n=10):
+    return [JobSpec(job_id=f"swf{i}", size=2 + (i % 4), run_s=float(10 + i),
+                    arrival_s=float(5 * i), seed=i) for i in range(n)]
+
+
+def test_swf_round_trips_handcrafted_trace():
+    jobs = _handmade(10)
+    text = format_swf(jobs)
+    back = parse_swf(text)
+    assert len(back) == 10
+    for a, b in zip(jobs, back):
+        assert b.job_id == a.job_id
+        assert b.size == a.size
+        assert b.run_s == a.run_s
+        assert b.arrival_s == a.arrival_s
+    # and a second round trip is a fixed point
+    assert format_swf(back) == text
+
+
+def test_swf_round_trips_through_a_file(tmp_path):
+    path = tmp_path / "trace.swf"
+    path.write_text(format_swf(_handmade(4)))
+    back = parse_swf(str(path))
+    assert [j.size for j in back] == [2, 3, 4, 5]
+
+
+def test_swf_parser_skips_comments_and_unknowns():
+    text = "\n".join([
+        "; Comment: archive header",
+        ";",
+        "1 0 -1 10 4 " + " ".join(["-1"] * 13),
+        # allocated procs unknown (-1): falls back to requested procs (f8)
+        "2 5 -1 10 -1 -1 -1 6 " + " ".join(["-1"] * 10),
+        # runtime unknown: falls back to requested time (f9)
+        "3 9 -1 -1 2 -1 -1 -1 77 " + " ".join(["-1"] * 9),
+        # unusable: no size anywhere -> skipped
+        "4 9 -1 10 -1 -1 -1 -1 " + " ".join(["-1"] * 10),
+    ])
+    jobs = parse_swf(text)
+    assert [j.job_id for j in jobs] == ["swf1", "swf2", "swf3"]
+    assert jobs[1].size == 6
+    assert jobs[2].run_s == 77.0
+    assert jobs[0].arrival_s == 0.0
+
+
+def test_swf_parser_rejects_malformed_lines_and_caps_jobs():
+    with pytest.raises(ValueError, match="malformed"):
+        parse_swf("1 2 3\n")
+    jobs = parse_swf(format_swf(_handmade(10)), max_jobs=3)
+    assert len(jobs) == 3
+
+
+def test_synthetic_trace_is_deterministic_and_well_formed():
+    a = synthetic_trace(12, sizes=(4, 6), weights=(1, 3), arrival_rate=2.0,
+                        mean_run_s=5.0, seed=7)
+    b = synthetic_trace(12, sizes=(4, 6), weights=(1, 3), arrival_rate=2.0,
+                        mean_run_s=5.0, seed=7)
+    assert [(j.job_id, j.size, j.run_s, j.arrival_s) for j in a] == \
+           [(j.job_id, j.size, j.run_s, j.arrival_s) for j in b]
+    arr = [j.arrival_s for j in a]
+    assert arr == sorted(arr) and arr[0] > 0
+    assert all(j.size in (4, 6) and j.run_s > 0 for j in a)
+    assert all(j.C is None for j in a)
+    with pytest.raises(ValueError):
+        synthetic_trace(0)
+    with pytest.raises(ValueError):
+        synthetic_trace(3, sizes=(4, 6), weights=(1.0,))
+
+
+def test_default_flows_properties():
+    C = default_flows(6, seed=1)
+    np.testing.assert_array_equal(C, C.T)
+    assert np.diag(C).sum() == 0
+    for k in range(6):                   # the heavy ring is always present
+        assert C[k, (k + 1) % 6] >= 100.0
+    np.testing.assert_array_equal(C, default_flows(6, seed=1))
+    assert not np.array_equal(C, default_flows(6, seed=2))
+    assert default_flows(1).shape == (1, 1)
