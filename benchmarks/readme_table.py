@@ -1,7 +1,7 @@
 """Regenerate README.md's benchmark table from BENCH_mapper.json.
 
 The benchmarks (``mapper_throughput.py``, ``scheduler_sim.py``,
-``solver_hotloop.py``) merge
+``solver_hotloop.py``, ``sparse_scale.py``) merge
 machine-readable results into ``BENCH_mapper.json``; this script renders
 the sections it finds into a markdown table and splices it between the
 ``BENCH_TABLE_START`` / ``BENCH_TABLE_END`` markers in ``README.md``.
@@ -119,6 +119,27 @@ def render_table(data: dict) -> str:
                 _fmt(wave.get("island", {}).get("maps_per_s"), 1),
                 _fmt(wave.get("wide", {}).get("maps_per_s"), 1),
                 _fmt(wave.get("speedup_wide_vs_island"))))
+    sec = data.get("sparse_scale")
+    if sec:
+        for e in sec.get("eval", []):
+            # baseline: dense O(n^2) objective dispatch; this path: the
+            # sparse O(nnz) dispatch on the same instance (equal results)
+            rows.append((
+                f"sparse objective (n={e.get('n', '?')}, evals/s)",
+                f"torus flows, density {_fmt(e.get('density'), 4)}",
+                _fmt(e.get("dense_objective_evals_per_s"), 1),
+                _fmt(e.get("sparse_objective_evals_per_s"), 1),
+                _fmt(e.get("objective_speedup"))))
+        for m in sec.get("multilevel", []):
+            # baseline: known optimum F0; this path: the multilevel
+            # coarsen->map->refine solve (ratio = quality, F / F0)
+            rows.append((
+                f"multilevel solve (n={m.get('n', '?')}, F)",
+                (f"torus, nnz={m.get('nnz', '?')}, "
+                 f"{_fmt(m.get('seconds'), 1)}s end-to-end"),
+                _fmt(m.get("optimum"), 0),
+                _fmt(m.get("objective"), 0),
+                _fmt(m.get("quality"))))
     if not rows:
         return "_No benchmark results recorded yet — run the commands above._"
     out = ["| benchmark | workload | baseline | this path | ratio |",

@@ -52,7 +52,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ops as kernel_ops
 
-from . import qap
+from . import qap, sparse
 
 Array = jax.Array
 
@@ -75,6 +75,14 @@ class SAConfig:
     event_width: Optional[int] = None  # candidates evaluated per wide round
                                        # (None: backend default, see
                                        # resolved_event_width)
+    flows: str = "dense"             # "dense" | "sparse" flow representation:
+                                     # "sparse" expects C as a
+                                     # core.sparse.SparseFlows (convert once,
+                                     # host-side, via sparse.prepare_flows) and
+                                     # runs the O(nnz) delta/objective
+                                     # dispatches — bitwise-equal to dense on
+                                     # the integer instance families
+                                     # (docs/DESIGN.md §10)
 
 
 class SAState(NamedTuple):
@@ -323,7 +331,17 @@ def _psa_impl(C: Array, M: Array, key: Array, cfg: SAConfig,
     given permutation instead of a random one, so ``best_f`` can never end
     above ``F(init_perm)`` — warm-started solves are no worse than their
     seed on any budget (see ``seed_chain0``).
+
+    With ``cfg.flows="sparse"`` ``C`` must be a ``sparse.SparseFlows``
+    (checked at trace time — conversion is host-side, so it cannot happen
+    here under jit); every objective/delta then runs the sparse O(nnz)
+    dispatches.  A sparse ``C`` with ``flows="dense"`` is allowed — the
+    representation alone decides the dispatch path.
     """
+    if cfg.flows == "sparse" and not isinstance(C, sparse.SparseFlows):
+        raise TypeError(
+            "SAConfig.flows='sparse' requires C as a core.sparse.SparseFlows"
+            " — convert host-side with sparse.prepare_flows(C, 'sparse')")
     if n_valid is not None:
         C = qap.mask_flows(C, n_valid)
     kinit, kbeta, krun = jax.random.split(key, 3)

@@ -44,7 +44,7 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from . import qap
+from . import qap, sparse
 from repro.kernels import ops
 
 Array = jax.Array
@@ -66,6 +66,12 @@ class GAConfig:
                                  # initial population (placement use case)
     eval: str = "wide"           # "wide" | "island" generation realisation
                                  # (bitwise-identical; see module docstring)
+    flows: str = "dense"         # "dense" | "sparse" flow representation:
+                                 # "sparse" expects C as a
+                                 # core.sparse.SparseFlows (convert host-side
+                                 # via sparse.prepare_flows); the wide
+                                 # generation's objective dispatch then runs
+                                 # O(nnz) per offspring (docs/DESIGN.md §10)
 
 
 class GAState(NamedTuple):
@@ -481,6 +487,10 @@ def _pga_impl(C: Array, M: Array, key: Array, cfg: GAConfig,
     """
     if cfg.eval not in ("wide", "island"):
         raise ValueError(f"unknown generation realisation {cfg.eval!r}")
+    if cfg.flows == "sparse" and not isinstance(C, sparse.SparseFlows):
+        raise TypeError(
+            "GAConfig.flows='sparse' requires C as a core.sparse.SparseFlows"
+            " — convert host-side with sparse.prepare_flows(C, 'sparse')")
     if n_valid is not None:
         C = qap.mask_flows(C, n_valid)
     n = C.shape[0]

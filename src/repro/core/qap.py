@@ -20,6 +20,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from . import sparse
+
 Array = jax.Array
 
 
@@ -30,8 +32,13 @@ def objective(C: Array, M: Array, p: Array) -> Array:
     correctness path: the solver hot loops evaluate permutation batches
     through the leading-batch kernel dispatch ``repro.kernels.ops.
     qap_objective`` instead (one wide dispatch per GA generation, Pallas
-    MXU kernel on TPU — docs/DESIGN.md §4).
+    MXU kernel on TPU — docs/DESIGN.md §4).  A ``sparse.SparseFlows``
+    ``C`` routes through that dispatch's sparse path (O(nnz), bitwise-
+    equal on the integer-valued instance families — docs/DESIGN.md §10).
     """
+    if isinstance(C, sparse.SparseFlows):
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.qap_objective(C, M, p)
     if p.ndim == 1:
         Mp = M[p][:, p]          # (N, N) gather rows then columns
         return jnp.sum(C * Mp)
@@ -73,7 +80,11 @@ def valid_mask(n: int, n_valid: Array) -> Array:
 
 def mask_flows(C: Array, n_valid: Array) -> Array:
     """Zero every flow touching a padded slot, making the plain objective /
-    delta of the padded instance equal the masked one."""
+    delta of the padded instance equal the masked one.  Works on dense
+    matrices and ``sparse.SparseFlows`` alike (value-level masking keeps
+    the sparse pattern — and so every downstream shape — static)."""
+    if isinstance(C, sparse.SparseFlows):
+        return sparse.mask_flows_sparse(C, n_valid)
     return C * masked_weights(valid_mask(C.shape[0], n_valid), C.dtype)
 
 
@@ -127,8 +138,14 @@ def swap_delta(C: Array, M: Array, p: Array, a: Array, b: Array) -> Array:
 
     Exact for arbitrary (asymmetric, nonzero-diagonal) C and M.  This is the
     simulated-annealing hot path: the paper (S5) contrasts SA's incremental
-    recomputation against the GA's full re-evaluation per descendant.
+    recomputation against the GA's full re-evaluation per descendant.  A
+    ``sparse.SparseFlows`` ``C`` routes the single pair through the batched
+    sparse dispatch (O(max_degree) instead of O(N) per swap).
     """
+    if isinstance(C, sparse.SparseFlows):
+        pair = jnp.stack([jnp.asarray(a, jnp.int32),
+                          jnp.asarray(b, jnp.int32)])[None]
+        return swap_delta_batch(C, M, p, pair)[0]
     u, v = p[a], p[b]
     n = p.shape[0]
     idx = jnp.arange(n)
@@ -177,10 +194,24 @@ def random_permutations(key: Array, batch: int, n: int) -> Array:
 
 
 def is_permutation(p: Array) -> Array:
-    """True iff p is a permutation of 0..N-1 (batched over leading dims)."""
+    """True iff p is a permutation of 0..N-1 (batched over leading dims).
+
+    Scatter-add (bincount) formulation: O(N) memory per permutation.  The
+    previous ``jax.nn.one_hot`` form materialized an (N, N) int32 per
+    permutation — 64 MiB each at n=4096, across every validation call
+    site.  Out-of-range and negative entries are dropped from the counts,
+    so some slot then counts 0 and the check still returns False.
+    """
     n = p.shape[-1]
-    one_hot = jax.nn.one_hot(p, n, dtype=jnp.int32)
-    return jnp.all(one_hot.sum(axis=-2) == 1, axis=-1)
+    lead = p.shape[:-1]
+    flat = p.reshape(-1, n).astype(jnp.int32)
+    b = flat.shape[0]
+    in_range = (flat >= 0) & (flat < n)
+    idx = jnp.where(in_range, flat, 0) + n * jnp.arange(
+        b, dtype=jnp.int32)[:, None]
+    counts = jnp.zeros((b * n,), jnp.int32).at[idx.reshape(-1)].add(
+        in_range.reshape(-1).astype(jnp.int32))
+    return jnp.all(counts.reshape((b, n)) == 1, axis=-1).reshape(lead)
 
 
 def compose(p: Array, q: Array) -> Array:

@@ -1,0 +1,163 @@
+"""Padded CSR-ish (ELL) storage for sparse flow matrices.
+
+Real program graphs are sparse — VieM (Schulz & Träff, arXiv:1703.05509)
+frames process mapping as *sparse* quadratic assignment — while every
+dense path in this repo materializes C as (N, N), making objective and
+delta evaluation O(n²) regardless of how many flows are actually nonzero.
+:class:`SparseFlows` breaks that wall (docs/DESIGN.md §10):
+
+* **Padded row blocks, static shapes.**  Row k keeps its nonzero column
+  ids in ``cols[k, :]`` (ascending) and their values in ``vals[k, :]``,
+  both padded to a shared width ``D`` = max row degree.  Padding entries
+  carry value 0 (their column id is an arbitrary in-range index), so
+  every consumer can process full (N, D) blocks without ragged logic —
+  the shape is static, which keeps the structure jit-traceable,
+  batchable (a leading instance axis maps over every leaf), and
+  streamable by Pallas BlockSpecs.
+* **Both orientations.**  ``cols_t``/``vals_t`` hold the same layout for
+  C^T, so delta evaluation can read column ``a`` of an asymmetric C as a
+  contiguous row — the sparse analogue of the dense kernels' C^T input.
+* **A pytree.**  ``SparseFlows`` is a NamedTuple of arrays: it passes
+  through ``jax.jit`` / ``vmap`` / ``lax`` control flow unchanged, and
+  the solver entry points accept it wherever they accept a dense ``C``
+  (the ``.shape`` property mimics the dense (N, N) view the solvers
+  consult for sizes).
+
+Conversion (:func:`from_dense`) is host-side numpy — the padded width is
+data-dependent, so it cannot run under jit; convert once per instance,
+then everything downstream is traced.  :func:`to_dense` is traceable and
+exact: scattering the padded blocks back adds only zeros on padding.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+class SparseFlows(NamedTuple):
+    """ELL-format flow matrix (see module docstring).
+
+    Leaves may carry leading batch dims: ``cols``/``vals``/``cols_t``/
+    ``vals_t`` are (..., N, D), ``deg``/``deg_t`` are (..., N).  Padding
+    entries have value 0; their column ids are valid in-range indices, so
+    gathers through them are safe and their contributions vanish.
+    ``deg`` records the *stored pattern's* row degrees (masking zeroes
+    values but keeps the pattern).
+    """
+    cols: Array     # (..., N, D) int32 column ids of C's rows
+    vals: Array     # (..., N, D) f32 values of C's rows
+    cols_t: Array   # (..., N, D) int32 column ids of C^T's rows
+    vals_t: Array   # (..., N, D) f32 values of C^T's rows
+    deg: Array      # (..., N) int32 nonzeros per row of C
+    deg_t: Array    # (..., N) int32 nonzeros per row of C^T
+
+    @property
+    def n(self) -> int:
+        return self.cols.shape[-2]
+
+    @property
+    def max_degree(self) -> int:
+        return self.cols.shape[-1]
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        """The dense-equivalent shape (..., N, N) — call sites that only
+        need sizes (``C.shape[0]``) work unchanged on sparse flows."""
+        return self.cols.shape[:-1] + (self.n,)
+
+    @property
+    def dtype(self):
+        return self.vals.dtype
+
+    def nnz(self) -> Array:
+        """Stored nonzeros (per leading batch entry, if any)."""
+        return self.deg.sum(axis=-1)
+
+
+def max_degree(C) -> int:
+    """Padded width needed to store ``C``: max nonzeros over rows of C
+    and of C^T (host-side; accepts leading batch dims)."""
+    A = np.asarray(C)
+    nz = A != 0
+    d = max(int(nz.sum(axis=-1).max(initial=0)),
+            int(nz.sum(axis=-2).max(initial=0)))
+    return max(d, 1)
+
+
+def _rows_to_ell(A: np.ndarray, width: int):
+    """One orientation's padded blocks: nonzero columns first (ascending),
+    values gathered in place — entries past each row's degree gather a
+    zero of A, so padding values are exactly 0."""
+    n = A.shape[0]
+    order = np.argsort(A == 0, axis=1, kind="stable")   # False < True
+    cols = order[:, :width].astype(np.int32)
+    vals = np.take_along_axis(A, cols, axis=1).astype(np.float32)
+    deg = (A != 0).sum(axis=1).astype(np.int32)
+    return cols, vals, deg
+
+
+def from_dense(C, width: Optional[int] = None) -> SparseFlows:
+    """Convert a dense (..., N, N) flow matrix to :class:`SparseFlows`.
+
+    Host-side (numpy): the padded width is data-dependent.  ``width``
+    pins the padded block width (e.g. to share one jit program across
+    instances of different density); it must hold the densest row.
+    """
+    A = np.asarray(C, dtype=np.float32)
+    if A.ndim < 2 or A.shape[-1] != A.shape[-2]:
+        raise ValueError(f"flow matrix must be (..., N, N), got {A.shape}")
+    d = max_degree(A)
+    if width is None:
+        width = d
+    elif width < d:
+        raise ValueError(f"width={width} < max row degree {d}")
+    if A.ndim > 2:
+        lead = A.shape[:-2]
+        parts = [from_dense(a, width) for a in A.reshape((-1,) + A.shape[-2:])]
+        return SparseFlows(*(
+            jnp.stack(leaf).reshape(lead + leaf[0].shape)
+            for leaf in zip(*parts)))
+    cols, vals, deg = _rows_to_ell(A, width)
+    cols_t, vals_t, deg_t = _rows_to_ell(np.ascontiguousarray(A.T), width)
+    return SparseFlows(cols=jnp.asarray(cols), vals=jnp.asarray(vals),
+                       cols_t=jnp.asarray(cols_t), vals_t=jnp.asarray(vals_t),
+                       deg=jnp.asarray(deg), deg_t=jnp.asarray(deg_t))
+
+
+def to_dense(S: SparseFlows) -> Array:
+    """Exact traceable inverse of :func:`from_dense` (padding adds zeros)."""
+    if S.cols.ndim > 2:
+        return jax.vmap(lambda cols, vals: to_dense(
+            S._replace(cols=cols, vals=vals)))(S.cols, S.vals)
+    n = S.n
+    rows = jnp.broadcast_to(jnp.arange(n, dtype=S.cols.dtype)[:, None],
+                            S.cols.shape)
+    return jnp.zeros((n, n), S.vals.dtype).at[
+        rows.reshape(-1), S.cols.reshape(-1)].add(S.vals.reshape(-1))
+
+
+def mask_flows_sparse(S: SparseFlows, n_valid: Array) -> SparseFlows:
+    """Sparse counterpart of ``qap.mask_flows``: zero every flow touching
+    a padded slot (value-level masking; the stored pattern — cols, deg —
+    is untouched, so shapes stay static under jit).  ``n_valid`` is a
+    traceable scalar; leading batch dims on the leaves are fine."""
+    w = (jnp.arange(S.n) < n_valid).astype(S.vals.dtype)
+    return S._replace(vals=S.vals * w[:, None] * w[S.cols],
+                      vals_t=S.vals_t * w[:, None] * w[S.cols_t])
+
+
+def prepare_flows(C, flows: str, width: Optional[int] = None):
+    """Host-side flow-representation hook for the solver configs'
+    ``flows`` field: ``"sparse"`` converts a dense matrix once (a no-op
+    if ``C`` already is :class:`SparseFlows`); ``"dense"`` passes
+    through.  Call *outside* jit — conversion shapes depend on data."""
+    if flows not in ("dense", "sparse"):
+        raise ValueError(f"flows must be 'dense' or 'sparse', got {flows!r}")
+    if flows == "sparse" and not isinstance(C, SparseFlows):
+        return from_dense(C, width)
+    return C

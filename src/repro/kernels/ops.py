@@ -23,6 +23,13 @@ whenever a scalar-prefetch operand is batched (the delta kernel's case)
 — the exact failure mode the wide dispatch removes; a trace-level
 regression test in ``tests/test_kernels.py`` pins this for all three
 batch solvers.
+
+The sparse dispatches (``qap_objective_sparse`` / ``qap_delta_sparse``)
+mirror the dense ones one-for-one — same custom-vmap fold-into-grid
+rules, same shared/instance-batched split — over a
+``core.sparse.SparseFlows`` pytree instead of a dense ``C``; the generic
+entry points route on ``isinstance``, so every ``core`` call site gains
+the sparse path without change.
 """
 from __future__ import annotations
 
@@ -31,10 +38,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ..core.sparse import SparseFlows
 from . import ref
 from .qap_delta import qap_delta_pallas_batch
 from .qap_objective import (qap_objective_pallas_batch, MAX_KERNEL_N,
                             _pad_to, LANE)
+from .qap_sparse import (qap_delta_sparse_pallas_batch,
+                         qap_objective_sparse_pallas_batch,
+                         MAX_SPARSE_KERNEL_N)
 
 Array = jax.Array
 
@@ -46,6 +57,25 @@ def _on_tpu() -> bool:
 def _bcast(x: Array, batched: bool, axis_size: int) -> Array:
     """Give unbatched operands the mapped axis explicitly (leading)."""
     return x if batched else jnp.broadcast_to(x, (axis_size,) + x.shape)
+
+
+def _sparse_any(sb_tree) -> bool:
+    """Is any leaf of a SparseFlows-of-bools batched?  (custom_vmap hands
+    pytree operands' batch flags in the operand's own structure.)"""
+    return any(jax.tree_util.tree_leaves(sb_tree))
+
+
+def _sparse_bcast(S: SparseFlows, sb_tree, axis_size: int) -> SparseFlows:
+    """Leaf-wise :func:`_bcast` for a SparseFlows operand."""
+    return jax.tree_util.tree_map(
+        lambda x, bb: _bcast(x, bb, axis_size), S, sb_tree)
+
+
+def _sparse_merge(S: SparseFlows) -> SparseFlows:
+    """Merge the two leading axes of every leaf (vmap-over-instance-axis
+    folding, the sparse analogue of ``Cs.reshape((-1,) + Cs.shape[2:])``)."""
+    return jax.tree_util.tree_map(
+        lambda x: x.reshape((-1,) + x.shape[2:]), S)
 
 
 # ---------------------------------------------------------------- objective
@@ -114,7 +144,13 @@ def qap_objective(C: Array, M: Array, perms: Array, *,
     (leading-dim, permutation) pair, with outer vmaps (e.g. the batched
     solvers' instance axis) folded into the grid rather than batching the
     kernel.
+
+    A ``SparseFlows`` ``C`` routes to :func:`qap_objective_sparse`, so
+    the solvers' call sites are representation-agnostic.
     """
+    if isinstance(C, SparseFlows):
+        return qap_objective_sparse(C, M, perms, force_pallas=force_pallas,
+                                    interpret=interpret)
     n = perms.shape[-1]
     fits = _pad_to(max(n, LANE), LANE) <= MAX_KERNEL_N
     if force_pallas or (_on_tpu() and fits):
@@ -190,8 +226,159 @@ def qap_delta(C: Array, M: Array, p: Array, pairs: Array, *,
     to ``core.qap.swap_delta``), on TPU the Pallas kernel — a single
     launch whose grid spans every (leading-dim, candidate) pair, with
     outer vmaps (chains, solvers, instances) folded into the grid.
+
+    A ``SparseFlows`` ``C`` routes to :func:`qap_delta_sparse`, so the
+    solvers' call sites are representation-agnostic.
     """
+    if isinstance(C, SparseFlows):
+        return qap_delta_sparse(C, M, p, pairs, force_pallas=force_pallas,
+                                interpret=interpret)
     on_tpu = _on_tpu()
     if not (force_pallas or on_tpu):
         return ref.qap_delta_ref(C, M, p, pairs)
     return _delta_shared(bool(interpret or not on_tpu))(C, M, p, pairs)
+
+
+# ---------------------------------------------------------------- sparse
+
+@functools.lru_cache(maxsize=None)
+def _sparse_objective_shared(interpret: bool):
+    """Sparse kernel dispatch for shared flows; perms (..., N) -> (...)."""
+    @jax.custom_batching.custom_vmap
+    def obj(S, M, perms):
+        lead = perms.shape[:-1]
+        out = qap_objective_sparse_pallas_batch(
+            S, M, perms.reshape((1, -1, perms.shape[-1])), interpret=interpret)
+        return out.reshape(lead)
+
+    @obj.def_vmap
+    def obj_vmap(axis_size, in_batched, S, M, perms):
+        sb_tree, mb, pb = in_batched
+        perms = _bcast(perms, pb, axis_size)
+        if not (_sparse_any(sb_tree) or mb):
+            return obj(S, M, perms), True        # axis joins the leading dims
+        return _sparse_objective_inst(interpret)(
+            _sparse_bcast(S, sb_tree, axis_size),
+            _bcast(M, mb, axis_size), perms), True
+
+    return obj
+
+
+@functools.lru_cache(maxsize=None)
+def _sparse_objective_inst(interpret: bool):
+    """Instance-batched sparse form: S leaves/M carry (B, ...) leading."""
+    @jax.custom_batching.custom_vmap
+    def obj_i(S, Ms, perms):
+        b, n = Ms.shape[0], perms.shape[-1]
+        lead = perms.shape[:-1]
+        out = qap_objective_sparse_pallas_batch(
+            S, Ms, perms.reshape((b, -1, n)), interpret=interpret)
+        return out.reshape(lead)
+
+    @obj_i.def_vmap
+    def obj_i_vmap(axis_size, in_batched, S, Ms, perms):
+        sb_tree, mb, pb = in_batched
+        S = _sparse_bcast(S, sb_tree, axis_size)
+        Ms = _bcast(Ms, mb, axis_size)
+        perms = _bcast(perms, pb, axis_size)
+        b0 = Ms.shape[1]
+        out = obj_i(_sparse_merge(S),
+                    Ms.reshape((-1,) + Ms.shape[2:]),
+                    perms.reshape((-1,) + perms.shape[2:]))
+        return out.reshape((axis_size, b0) + out.shape[1:]), True
+
+    return obj_i
+
+
+def qap_objective_sparse(S: SparseFlows, M: Array, perms: Array, *,
+                         force_pallas: bool = False,
+                         interpret: bool = False) -> Array:
+    """Sparse leading-batch objective dispatch — O(nnz) per permutation.
+
+    Same contract as :func:`qap_objective` with ``C`` replaced by a
+    ``core.sparse.SparseFlows``: perms (..., P, N) -> (..., P), CPU runs
+    the vectorized sparse reference (bitwise-equal to the dense dispatch
+    on integer-valued instances), TPU one row-streaming Pallas launch
+    with outer vmaps folded into the grid.  The kernel keeps only M
+    *rows* resident, so the size ceiling is ``MAX_SPARSE_KERNEL_N``
+    (4096), not the dense ``MAX_KERNEL_N``.
+    """
+    n = perms.shape[-1]
+    fits = _pad_to(max(n, LANE), LANE) <= MAX_SPARSE_KERNEL_N
+    if force_pallas or (_on_tpu() and fits):
+        return _sparse_objective_shared(
+            bool(interpret or not _on_tpu()))(S, M, perms)
+    return ref.qap_objective_sparse_ref(S, M, perms)
+
+
+@functools.lru_cache(maxsize=None)
+def _sparse_delta_shared(interpret: bool):
+    """Sparse delta dispatch for shared flows; (..., N) x (..., K, 2)."""
+    @jax.custom_batching.custom_vmap
+    def delta(S, M, p, pairs):
+        n, k = p.shape[-1], pairs.shape[-2]
+        lead = p.shape[:-1]
+        out = qap_delta_sparse_pallas_batch(
+            S, M, p.reshape((-1, n)), pairs.reshape((-1, k, 2)),
+            interpret=interpret)
+        return out.reshape(lead + (k,))
+
+    @delta.def_vmap
+    def delta_vmap(axis_size, in_batched, S, M, p, pairs):
+        sb_tree, mb, pb, rb = in_batched
+        p = _bcast(p, pb, axis_size)
+        pairs = _bcast(pairs, rb, axis_size)
+        if not (_sparse_any(sb_tree) or mb):
+            return delta(S, M, p, pairs), True
+        return _sparse_delta_inst(interpret)(
+            _sparse_bcast(S, sb_tree, axis_size),
+            _bcast(M, mb, axis_size), p, pairs), True
+
+    return delta
+
+
+@functools.lru_cache(maxsize=None)
+def _sparse_delta_inst(interpret: bool):
+    """Instance-batched sparse delta form (S leaves/M lead with B)."""
+    @jax.custom_batching.custom_vmap
+    def delta_i(S, Ms, p, pairs):
+        n, k = p.shape[-1], pairs.shape[-2]
+        lead = p.shape[:-1]
+        out = qap_delta_sparse_pallas_batch(
+            S, Ms, p.reshape((-1, n)), pairs.reshape((-1, k, 2)),
+            interpret=interpret)
+        return out.reshape(lead + (k,))
+
+    @delta_i.def_vmap
+    def delta_i_vmap(axis_size, in_batched, S, Ms, p, pairs):
+        sb_tree, mb, pb, rb = in_batched
+        S = _sparse_bcast(S, sb_tree, axis_size)
+        Ms = _bcast(Ms, mb, axis_size)
+        p = _bcast(p, pb, axis_size)
+        pairs = _bcast(pairs, rb, axis_size)
+        b0 = Ms.shape[1]
+        out = delta_i(_sparse_merge(S),
+                      Ms.reshape((-1,) + Ms.shape[2:]),
+                      p.reshape((-1,) + p.shape[2:]),
+                      pairs.reshape((-1,) + pairs.shape[2:]))
+        return out.reshape((axis_size, b0) + out.shape[1:]), True
+
+    return delta_i
+
+
+def qap_delta_sparse(S: SparseFlows, M: Array, p: Array, pairs: Array, *,
+                     force_pallas: bool = False,
+                     interpret: bool = False) -> Array:
+    """Sparse leading-batch swap deltas — O(max_degree) per candidate.
+
+    Same contract as :func:`qap_delta` over a SparseFlows: the SA
+    acceptance-event loop's wide candidate evaluation goes through here
+    when ``SAConfig.flows="sparse"``.  CPU runs the sparse reference
+    (bitwise-equal to the dense dispatch on integer-valued instances);
+    TPU one Pallas launch streaming four sparse rows + four M rows per
+    candidate.
+    """
+    on_tpu = _on_tpu()
+    if not (force_pallas or on_tpu):
+        return ref.qap_delta_sparse_ref(S, M, p, pairs)
+    return _sparse_delta_shared(bool(interpret or not on_tpu))(S, M, p, pairs)

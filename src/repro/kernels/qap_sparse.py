@@ -1,0 +1,259 @@
+"""Pallas TPU kernels: gather-based sparse QAP objective and swap delta.
+
+Sparse counterparts of ``qap_objective.py`` / ``qap_delta.py`` for
+``core.sparse.SparseFlows`` instances (docs/DESIGN.md §10).  Neither
+kernel ever holds a dense C — only M *rows* and padded sparse row blocks
+are resident, so per-program VMEM stays O(N + D) and the FLOPs per
+evaluation are O(nnz), not O(n²):
+
+* **Objective** (``qap_objective_sparse_pallas_batch``): one grid step
+  per (permutation, flow row).  The permutation values themselves form
+  the scalar-prefetch table — program g streams M row ``p[g % n]`` via
+  its BlockSpec index map, gathers ``p[cols[r, :]]`` from the resident
+  permutation row, and writes the row's partial sum
+  ``sum_d vals[r, d] * M[p[r], p[cols[r, d]]]``; partial sums reduce to
+  per-permutation objectives outside the kernel.
+* **Delta** (``qap_delta_sparse_pallas_batch``): same grid and
+  scalar-prefetch table (a, b, u=p[a], v=p[b]) as the dense delta
+  kernel, but the four streamed C rows shrink from (1, n_pad) dense rows
+  to (1, d_pad) sparse blocks of C and C^T; the col/row sums gather
+  ``p[cols]`` then the M rows at those nodes — two chained dynamic
+  gathers, which Mosaic supports — and the corner scalars are sparse
+  row lookups.
+
+Both kernels accept shared or instance-batched operands (leading ``B0``
+dim on the SparseFlows leaves and M, with ``B0`` dividing the flat
+permutation batch), mirroring the dense kernels' fold-into-grid
+contract; correctness is validated in interpret mode against the sparse
+references in ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .qap_delta import LANE, _pad_to
+
+Array = jax.Array
+
+# M rows (not matrices) are what the sparse kernels keep resident, so the
+# size ceiling is the row length we are willing to stream per program —
+# far beyond the dense kernels' MAX_KERNEL_N full-matrix budget.
+MAX_SPARSE_KERNEL_N = 4096
+
+
+def _sparse_pad(S, d_pad: int):
+    """Pad the ELL blocks to lane width: values with 0 (contributions
+    vanish), column ids with 0 (a valid gather target)."""
+    pad_d = d_pad - S.cols.shape[-1]
+    widen = [(0, 0)] * (S.cols.ndim - 1) + [(0, pad_d)]
+    cv = jnp.pad(S.vals.astype(jnp.float32), widen)
+    cc = jnp.pad(S.cols.astype(jnp.int32), widen)
+    tv = jnp.pad(S.vals_t.astype(jnp.float32), widen)
+    tc = jnp.pad(S.cols_t.astype(jnp.int32), widen)
+    return cv, cc, tv, tc
+
+
+def _objective_sparse_kernel(pv_ref,          # (B*P*n,) int32: p[r] per program
+                             p_ref,           # (1, n_pad) permutation row
+                             cv_ref, cc_ref,  # (1, d_pad) vals/cols row r
+                             m_ref,           # (1, n_pad) M row p[r]
+                             out_ref,         # (1,) f32 row partial sum
+                             *, mat_batched: bool = False):
+    del pv_ref                                # consumed by the index maps
+    row = (lambda r: r[0, 0, :]) if mat_batched else (lambda r: r[0, :])
+    p = p_ref[0, :]
+    cv = row(cv_ref)
+    cc = row(cc_ref)
+    m = row(m_ref).astype(jnp.float32)
+    pc = jnp.take(p, cc)                      # p[cols[r, :]]
+    out_ref[0] = jnp.sum(cv * jnp.take(m, pc))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def qap_objective_sparse_pallas_batch(S, M: Array, ps: Array,
+                                      interpret: bool = False) -> Array:
+    """Sparse objectives in one launch: ps (B, P, N) -> (B, P) f32.
+
+    ``S`` leaves are (N, D) shared blocks or (B, N, D) instance-batched
+    (M correspondingly (N, N) or (B, N, N)) — the batched solvers' case,
+    where the dispatch layer folds the instance axis into the grid.  One
+    grid step per (permutation, flow row); the per-row partial sums are
+    reduced outside the kernel (f32 — exact on integer instances).
+    """
+    bsz, p_cnt, n = ps.shape
+    mat_batched = M.ndim == 3
+    if mat_batched and M.shape[0] != bsz:
+        raise ValueError(
+            f"batched S/M leading dim {M.shape[0]} must equal B={bsz}")
+    n_pad = _pad_to(max(n, LANE), LANE)
+    d_pad = _pad_to(max(S.cols.shape[-1], LANE), LANE)
+
+    cv, cc, _, _ = _sparse_pad(S, d_pad)
+    mat_pad = ((0, 0), (0, n_pad - n), (0, n_pad - n)) if mat_batched else \
+        ((0, n_pad - n), (0, n_pad - n))
+    Mp = jnp.pad(M.astype(jnp.float32), mat_pad)
+    flat = ps.reshape(-1, n).astype(jnp.int32)            # (B*P, n)
+    tail = jnp.broadcast_to(jnp.arange(n, n_pad, dtype=jnp.int32),
+                            (flat.shape[0], n_pad - n))
+    pp = jnp.concatenate([flat, tail], axis=1)            # (B*P, n_pad)
+    pv = flat.reshape(-1)                                 # (B*P*n,) = p[g % n]
+
+    if mat_batched:
+        ell_block, m_block = (1, 1, d_pad), (1, 1, n_pad)
+        ell = lambda g, pv_ref: (g // (p_cnt * n), (g % n), 0)
+        mrow = lambda g, pv_ref: (g // (p_cnt * n), pv_ref[g], 0)
+    else:
+        ell_block, m_block = (1, d_pad), (1, n_pad)
+        ell = lambda g, pv_ref: ((g % n), 0)
+        mrow = lambda g, pv_ref: (pv_ref[g], 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bsz * p_cnt * n,),
+        in_specs=[
+            pl.BlockSpec((1, n_pad), lambda g, pv_ref: (g // n, 0)),  # p row
+            pl.BlockSpec(ell_block, ell),                 # vals row r
+            pl.BlockSpec(ell_block, ell),                 # cols row r
+            pl.BlockSpec(m_block, mrow),                  # M[p[r], :]
+        ],
+        out_specs=pl.BlockSpec((1,), lambda g, pv_ref: (g,)),
+    )
+    partial = pl.pallas_call(
+        functools.partial(_objective_sparse_kernel, mat_batched=mat_batched),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz * p_cnt * n,), jnp.float32),
+        interpret=interpret,
+    )(pv, pp, cv, cc, Mp)
+    return partial.reshape(bsz, p_cnt, n).sum(-1)
+
+
+def _delta_sparse_kernel(info_ref,            # (B*K, 4) int32: a, b, u, v
+                         p_ref,               # (1, n_pad) permutation row
+                         cv_a, cv_b,          # (1, d_pad) C rows a, b: values
+                         cc_a, cc_b,          # (1, d_pad) C rows a, b: cols
+                         tv_a, tv_b,          # (1, d_pad) C^T rows a, b: values
+                         tc_a, tc_b,          # (1, d_pad) C^T rows a, b: cols
+                         m_row_u, m_row_v,    # (1, n_pad) rows of M
+                         mt_row_u, mt_row_v,  # (1, n_pad) rows of M^T
+                         out_ref,             # (1,) f32
+                         *, mat_batched: bool = False):
+    k = pl.program_id(0)
+    a = info_ref[k, 0]
+    b = info_ref[k, 1]
+    u = info_ref[k, 2]
+    v = info_ref[k, 3]
+
+    row = (lambda r: r[0, 0, :]) if mat_batched else (lambda r: r[0, :])
+    p = p_ref[0, :]
+    mu = row(m_row_u).astype(jnp.float32)      # M[u, :]
+    mv = row(m_row_v).astype(jnp.float32)      # M[v, :]
+    mtu = row(mt_row_u).astype(jnp.float32)    # M[:, u]
+    mtv = row(mt_row_v).astype(jnp.float32)    # M[:, v]
+
+    def col_part(tc, tv):                      # one sparse row of C^T
+        ks = row(tc)
+        ws = row(tv)
+        pk = jnp.take(p, ks)                   # p[k] for stored k
+        g = jnp.take(mtv, pk) - jnp.take(mtu, pk)   # M[p[k],v] - M[p[k],u]
+        return jnp.where((ks != a) & (ks != b), ws * g, 0.0).sum()
+
+    def row_part(cc, cv):                      # one sparse row of C
+        ls = row(cc)
+        ws = row(cv)
+        pl_ = jnp.take(p, ls)
+        g = jnp.take(mv, pl_) - jnp.take(mu, pl_)   # M[v,p[l]] - M[u,p[l]]
+        return jnp.where((ls != a) & (ls != b), ws * g, 0.0).sum()
+
+    col = col_part(tc_a, tv_a) - col_part(tc_b, tv_b)
+    rowt = row_part(cc_a, cv_a) - row_part(cc_b, cv_b)
+
+    # Corner scalars: C entries via sparse row lookups, M entries via
+    # dynamic picks from the already-resident rows.
+    caa = jnp.where(row(cc_a) == a, row(cv_a), 0.0).sum()
+    cbb = jnp.where(row(cc_b) == b, row(cv_b), 0.0).sum()
+    cab = jnp.where(row(cc_a) == b, row(cv_a), 0.0).sum()
+    cba = jnp.where(row(cc_b) == a, row(cv_b), 0.0).sum()
+    muu = jnp.take(mu, u)
+    mvv = jnp.take(mv, v)
+    muv = jnp.take(mu, v)                      # M[u, v]
+    mvu = jnp.take(mv, u)                      # M[v, u]
+
+    corner = ((caa - cbb) * (mvv - muu)
+              + cab * (mvu - muv)
+              + cba * (muv - mvu))
+    out_ref[0] = col + rowt + corner
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def qap_delta_sparse_pallas_batch(S, M: Array, ps: Array, pairs: Array,
+                                  interpret: bool = False) -> Array:
+    """Sparse leading-batch swap deltas in one launch.
+
+    ps: (B, N); pairs: (B, K, 2)  ->  (B, K) f32; grid B*K, candidate q
+    works on permutation row q // K.  ``S`` leaves/M are shared or
+    instance-batched with ``B0`` dividing B (rows r*B//B0 .. belong to
+    instance r), exactly like the dense ``qap_delta_pallas_batch``.
+    """
+    n = ps.shape[-1]
+    bsz, k = pairs.shape[0], pairs.shape[1]
+    mat_batched = M.ndim == 3
+    if mat_batched and (bsz % M.shape[0] != 0):
+        raise ValueError(
+            f"batched S/M leading dim {M.shape[0]} must divide B={bsz}")
+    rpt = (bsz // M.shape[0]) if mat_batched else 1
+    n_pad = _pad_to(max(n, LANE), LANE)
+    d_pad = _pad_to(max(S.cols.shape[-1], LANE), LANE)
+
+    cv, cc, tv, tc = _sparse_pad(S, d_pad)
+    mat_pad = ((0, 0), (0, n_pad - n), (0, n_pad - n)) if mat_batched else \
+        ((0, n_pad - n), (0, n_pad - n))
+    Mp = jnp.pad(M.astype(jnp.float32), mat_pad)
+    MpT = Mp.swapaxes(-2, -1)
+    tail = jnp.broadcast_to(jnp.arange(n, n_pad, dtype=jnp.int32),
+                            (bsz, n_pad - n))
+    pp = jnp.concatenate([ps.astype(jnp.int32), tail], axis=1)
+
+    ab = pairs.astype(jnp.int32)
+    u = jnp.take_along_axis(pp, ab[..., 0], axis=1)
+    v = jnp.take_along_axis(pp, ab[..., 1], axis=1)
+    info = jnp.stack([ab[..., 0].reshape(-1), ab[..., 1].reshape(-1),
+                      u.reshape(-1), v.reshape(-1)], axis=1)      # (B*K, 4)
+
+    if mat_batched:
+        row = lambda col: (lambda i, info_ref:
+                           (i // (k * rpt), info_ref[i, col], 0))
+        ell_block, m_block = (1, 1, d_pad), (1, 1, n_pad)
+    else:
+        row = lambda col: (lambda i, info_ref: (info_ref[i, col], 0))
+        ell_block, m_block = (1, d_pad), (1, n_pad)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bsz * k,),
+        in_specs=[
+            pl.BlockSpec((1, n_pad), lambda i, info_ref: (i // k, 0)),  # p row
+            pl.BlockSpec(ell_block, row(0)),              # C row a: values
+            pl.BlockSpec(ell_block, row(1)),              # C row b: values
+            pl.BlockSpec(ell_block, row(0)),              # C row a: cols
+            pl.BlockSpec(ell_block, row(1)),              # C row b: cols
+            pl.BlockSpec(ell_block, row(0)),              # C^T row a: values
+            pl.BlockSpec(ell_block, row(1)),              # C^T row b: values
+            pl.BlockSpec(ell_block, row(0)),              # C^T row a: cols
+            pl.BlockSpec(ell_block, row(1)),              # C^T row b: cols
+            pl.BlockSpec(m_block, row(2)),                # M[u, :]
+            pl.BlockSpec(m_block, row(3)),                # M[v, :]
+            pl.BlockSpec(m_block, row(2)),                # M^T[u, :]
+            pl.BlockSpec(m_block, row(3)),                # M^T[v, :]
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i, info_ref: (i,)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_delta_sparse_kernel, mat_batched=mat_batched),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz * k,), jnp.float32),
+        interpret=interpret,
+    )(info, pp, cv, cv, cc, cc, tv, tv, tc, tc, Mp, Mp, MpT, MpT)
+    return out.reshape(bsz, k)

@@ -46,6 +46,12 @@ resource manager's timeout.  The engine is built around that contract:
      compile (``benchmarks/scheduler_sim.py --warmup`` measures the
      warm-vs-cold p99 difference).
 
+  8. Orders above every dense bucket route by *large bucket*
+     (512/1024/4096 by default) to the sparse + multilevel pipeline
+     (``core.multilevel``) once they reach ``multilevel_min_n`` — the
+     dense O(n²) ceiling stops applying (docs/DESIGN.md §10); smaller
+     oversize orders keep the unpadded exact-size path.
+
 Queue, cache, and stats are thread-safe; solves are serialized by a
 dispatch lock so the flusher and synchronous callers can coexist.
 
@@ -88,9 +94,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (annealing, batch_sharded, composite, genetic,
-                        mapping as mapping_lib)
+                        mapping as mapping_lib, multilevel)
 
 DEFAULT_BUCKETS = (32, 64, 128)
+
+# Routing labels for the sparse/multilevel path: orders above the dense
+# buckets (and >= multilevel_min_n) group under the smallest large bucket
+# that holds them and solve via core.multilevel at exact size — the dense
+# O(n²) solvers never see these instances (docs/DESIGN.md §10).
+LARGE_BUCKETS = (512, 1024, 4096)
 
 ALGORITHMS = ("psa", "pga", "pca")
 AUTO = "auto"                       # algorithm chosen by the deadline policy
@@ -287,10 +299,23 @@ class MappingEngine:
                  warm_start: bool = True,
                  pad_batches: bool = True,
                  mesh=None,
-                 instance_axis: str = batch_sharded.DEFAULT_AXIS):
+                 instance_axis: str = batch_sharded.DEFAULT_AXIS,
+                 large_buckets: Sequence[int] = LARGE_BUCKETS,
+                 multilevel_min_n: int = 256,
+                 multilevel_cfg: Optional[multilevel.MultilevelConfig] = None):
         self.buckets = tuple(sorted(int(b) for b in buckets))
         if not self.buckets:
             raise ValueError("need at least one size bucket")
+        # Large buckets are routing labels, not padded sizes: an order
+        # above every dense bucket (and >= multilevel_min_n) groups under
+        # its large bucket and solves through core.multilevel at exact
+        # size.  Orders below the threshold keep the seed-era unpadded
+        # exact-size path (bucket None).  A value also present in the
+        # dense buckets stays dense — bucket_for() wins.
+        self.large_buckets = tuple(sorted(int(b) for b in large_buckets))
+        self._large_set = frozenset(self.large_buckets) - frozenset(self.buckets)
+        self.multilevel_min_n = int(multilevel_min_n)
+        self.multilevel_cfg = multilevel_cfg or multilevel.MultilevelConfig()
         self.cache_size = int(cache_size)
         self.num_processes = int(num_processes)
         self.polish_rounds = int(polish_rounds)
@@ -338,22 +363,46 @@ class MappingEngine:
                 return b
         return None                      # oversize: solved at exact size
 
+    def large_bucket_for(self, n: int) -> Optional[int]:
+        """Routing label for the multilevel path: the smallest large
+        bucket holding an order-n instance, or the largest one for orders
+        beyond it (multilevel has no size ceiling — the label only groups
+        the wave).  None below ``multilevel_min_n``: small oversize
+        instances keep the unpadded dense exact-size path."""
+        if n < self.multilevel_min_n or not self._large_set:
+            return None
+        for b in self.large_buckets:
+            if b in self._large_set and n <= b:
+                return b
+        return max(self._large_set)
+
+    def _route(self, n: int) -> Optional[int]:
+        """Bucket label for an order-n request: dense bucket first, then
+        the multilevel large buckets, else None (exact-size path)."""
+        b = self.bucket_for(n)
+        return b if b is not None else self.large_bucket_for(n)
+
     def digest(self, req: MapRequest, algorithm: Optional[str] = None,
                tier: str = "default") -> str:
         """Exact-tier cache key: the instance and everything that shapes its
         solution (resolved algorithm + budget tier).  The seed is excluded
         by default -- repeated job shapes are served from cache regardless
         of the request's key -- unless the request opts in via
-        ``cache_seed``."""
+        ``cache_seed``.  Multilevel-routed orders fold the multilevel
+        config in instead — that is what shapes their solve."""
         algorithm = algorithm or req.algorithm
         sa_cfg, ga_cfg = self._tier_cfgs[tier]
         h = hashlib.sha1()
         C = np.ascontiguousarray(req.C, dtype=np.float32)
         M = np.ascontiguousarray(req.M, dtype=np.float32)
         seed_part = f"|s{req.seed}" if req.cache_seed else ""
-        h.update(f"{C.shape[0]}|{algorithm}|{tier}|{self.num_processes}|"
+        n = C.shape[0]
+        ml_part = ""
+        if self.bucket_for(n) is None and self.large_bucket_for(n) is not None:
+            ml_part = f"|ml|{self.multilevel_cfg}"
+        h.update(f"{n}|{algorithm}|{tier}|{self.num_processes}|"
                  f"{self.polish_rounds}|{sa_cfg}|{ga_cfg}"
-                 f"{seed_part}".encode())
+                 f"{seed_part}{ml_part}".encode())
         h.update(C.tobytes())
         h.update(M.tobytes())
         return h.hexdigest()
@@ -438,6 +487,11 @@ class MappingEngine:
 
         Returns the number of programs compiled (also accumulated in
         ``stats.warmup_programs``).
+
+        Only the dense padded buckets are warmable: the multilevel large
+        buckets solve at exact size with data-dependent coarsening shapes,
+        so their programs compile on first dispatch (the persistent JAX
+        compilation cache still amortizes repeats across processes).
         """
         buckets = tuple(self.buckets if buckets is None else
                         sorted(int(b) for b in buckets))
@@ -649,7 +703,7 @@ class MappingEngine:
         self.stop()
 
     def _group_key(self, p: _Pending) -> Tuple[Optional[int], str, str]:
-        return (self.bucket_for(p.req.C.shape[0]), p.algorithm, p.tier)
+        return (self._route(p.req.C.shape[0]), p.algorithm, p.tier)
 
     def _take_ready_locked(self) -> Tuple[List[_Pending], Optional[float]]:
         """Pick the requests the flusher should dispatch now (caller holds
@@ -730,7 +784,7 @@ class MappingEngine:
                     self.stats.cache_hits += 1
                     resp = self._respond(
                         p, perm, objective,
-                        bucket=self.bucket_for(p.req.C.shape[0]),
+                        bucket=self._route(p.req.C.shape[0]),
                         cached=True, seconds=0.0, batch_size=0)
                     responses[p.req.job_id] = resp
                     p.future._resolve(resp)
@@ -750,6 +804,13 @@ class MappingEngine:
                     if bucket is None:
                         solved = [self._solve_exact(p.req, algorithm, tier, w)
                                   for p, w in zip(heads, warms)]
+                    elif bucket in self._large_set:
+                        # Multilevel path: per-head host-side coarsening +
+                        # warm-started sparse refinement; shape-tier warm
+                        # starts are ignored (the coarse solve is the seed).
+                        solved = [self._solve_multilevel(p.req)
+                                  for p in heads]
+                        warms = [None] * len(heads)
                     else:
                         solved = self._solve_bucket(
                             bucket, algorithm, tier,
@@ -907,6 +968,21 @@ class MappingEngine:
             self.stats.solver_batches += 1
             self.stats.solver_calls += 1
         return np.asarray(p, np.int32), float(f)
+
+    def _solve_multilevel(self, req: MapRequest) -> Tuple[np.ndarray, float]:
+        """Large-bucket instances run the coarsen → map → refine pipeline
+        (``core.multilevel``) at exact size: host-side heavy-edge
+        coarsening, dense coarse solve, warm-started *sparse* refinement
+        per level — O(nnz) per candidate, so orders far beyond the dense
+        buckets stay schedulable.  The tier's solver budgets do not apply;
+        ``multilevel_cfg`` governs (and is folded into the cache digest
+        for these orders)."""
+        res = multilevel.solve_multilevel(
+            req.C, req.M, jax.random.PRNGKey(req.seed), self.multilevel_cfg)
+        with self._lock:
+            self.stats.solver_batches += 1
+            self.stats.solver_calls += 1
+        return np.asarray(res.perm, np.int32), float(res.objective)
 
     def _dispatch(self, algorithm: str, tier: str, Cs, Ms, keys, nvs, ips):
         sa_cfg, ga_cfg = self._tier_cfgs[tier]

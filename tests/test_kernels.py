@@ -12,7 +12,9 @@ from repro.kernels import ref, ops
 from repro.kernels.qap_objective import (qap_objective_pallas,
                                          qap_objective_pallas_batch)
 from repro.kernels.qap_delta import qap_delta_pallas, qap_delta_pallas_batch
-from repro.core import qap
+from repro.kernels.qap_sparse import (qap_delta_sparse_pallas_batch,
+                                      qap_objective_sparse_pallas_batch)
+from repro.core import qap, sparse
 
 
 def _instance(rng, n, dtype):
@@ -267,6 +269,109 @@ def test_ops_objective_under_vmap_matches_flat_dispatch():
         np.asarray(flat()).tobytes()
 
 
+# ------------------------------------------------------------ sparse kernels
+def _sparse_instance(rng, n, density=0.25):
+    C, M = _instance(rng, n, np.float32)
+    C = jnp.asarray(np.where(rng.random((n, n)) < density,
+                             np.asarray(C), 0.0).astype(np.float32))
+    return sparse.from_dense(np.asarray(C)), C, M
+
+
+@pytest.mark.parametrize("n", [16, 27, 45, 128])
+@pytest.mark.parametrize("batch,p_cnt", [(1, 4), (3, 5)])
+def test_objective_sparse_kernel_matches_ref(n, batch, p_cnt):
+    """Interpret-mode gather kernel vs the jnp sparse ref (which is itself
+    bitwise-equal to the dense ref on these integer instances)."""
+    rng = np.random.default_rng(n + batch)
+    S, C, M = _sparse_instance(rng, n)
+    perms = qap.random_permutations(jax.random.PRNGKey(n), batch * p_cnt,
+                                    n).reshape(batch, p_cnt, n)
+    got = qap_objective_sparse_pallas_batch(S, M, perms, interpret=True)
+    want = ref.qap_objective_sparse_ref(S, M, perms)
+    assert got.shape == (batch, p_cnt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(want),
+                                  np.asarray(ref.qap_objective_ref(C, M,
+                                                                   perms)))
+
+
+@pytest.mark.parametrize("n", [16, 45, 128])
+@pytest.mark.parametrize("batch,k", [(1, 8), (4, 12)])
+def test_delta_sparse_kernel_matches_ref(n, batch, k):
+    rng = np.random.default_rng(n + batch + k)
+    S, C, M = _sparse_instance(rng, n)
+    ps, pairs = _batched_candidates(rng, n, batch, k)
+    got = qap_delta_sparse_pallas_batch(S, M, ps, pairs, interpret=True)
+    want = ref.qap_delta_sparse_ref(S, M, ps, pairs)
+    assert got.shape == (batch, k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(want),
+                                  np.asarray(ref.qap_delta_ref(C, M, ps,
+                                                               pairs)))
+
+
+def test_sparse_kernel_batch_instance_matrices():
+    """S/M may carry the leading instance axis (the batched solvers'
+    case) for both sparse kernels."""
+    rng = np.random.default_rng(8)
+    n, b0, p_cnt, rpt, k = 27, 3, 4, 2, 6
+    per = [_sparse_instance(rng, n) for _ in range(b0)]
+    S = sparse.from_dense(np.stack([np.asarray(c) for _, c, _ in per]))
+    Ms = jnp.stack([m for _, _, m in per])
+    perms = qap.random_permutations(jax.random.PRNGKey(3), b0 * p_cnt,
+                                    n).reshape(b0, p_cnt, n)
+    got = qap_objective_sparse_pallas_batch(S, Ms, perms, interpret=True)
+    want = jnp.stack([ref.qap_objective_sparse_ref(
+        jax.tree_util.tree_map(lambda x: x[b], S), Ms[b], perms[b])
+        for b in range(b0)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+    ps, pairs = _batched_candidates(rng, n, b0 * rpt, k)
+    gotd = qap_delta_sparse_pallas_batch(S, Ms, ps, pairs, interpret=True)
+    wantd = jnp.concatenate([
+        ref.qap_delta_sparse_ref(
+            jax.tree_util.tree_map(lambda x: x[r], S), Ms[r],
+            ps[r * rpt:(r + 1) * rpt], pairs[r * rpt:(r + 1) * rpt])
+        for r in range(b0)])
+    np.testing.assert_allclose(np.asarray(gotd), np.asarray(wantd),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_ops_sparse_dispatch_forced_pallas():
+    """The public sparse dispatches: CPU path bitwise-equal to the ref,
+    forced-Pallas interpret path allclose, under-vmap fold included."""
+    rng = np.random.default_rng(9)
+    n, batch, p_cnt, k = 27, 3, 4, 8
+    S, C, M = _sparse_instance(rng, n)
+    perms = qap.random_permutations(jax.random.PRNGKey(5), batch * p_cnt,
+                                    n).reshape(batch, p_cnt, n)
+    got = ops.qap_objective_sparse(S, M, perms)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ref.qap_objective_sparse_ref(S, M,
+                                                                 perms)))
+    gotp = ops.qap_objective_sparse(S, M, perms, force_pallas=True,
+                                    interpret=True)
+    np.testing.assert_allclose(np.asarray(gotp), np.asarray(got), rtol=1e-5)
+
+    ps, pairs = _batched_candidates(rng, n, batch, k)
+    gotd = ops.qap_delta_sparse(S, M, ps, pairs)
+    np.testing.assert_array_equal(
+        np.asarray(gotd), np.asarray(ref.qap_delta_sparse_ref(S, M, ps,
+                                                              pairs)))
+    gotdp = ops.qap_delta_sparse(S, M, ps, pairs, force_pallas=True,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(gotdp), np.asarray(gotd),
+                               rtol=1e-4, atol=1e-3)
+
+    # vmapped dispatch folds into the leading batch (same values)
+    vm = jax.vmap(lambda p: ops.qap_objective_sparse(S, M, p,
+                                                     force_pallas=True,
+                                                     interpret=True))
+    np.testing.assert_allclose(np.asarray(vm(perms)), np.asarray(got),
+                               rtol=1e-5)
+
+
 # -------------------------------------------------- no pallas under vmap
 def _count_pallas_calls(jaxpr):
     """Count pallas_call eqns in a jaxpr, descending into sub-jaxprs."""
@@ -329,9 +434,13 @@ def test_no_pallas_call_under_vmap_on_tpu_paths(monkeypatch):
         nvs = jnp.full((B,), n, jnp.int32)
         sa = replace(SA_SMALL, solvers=3)
         pca = replace(PCA_SMALL, ga=replace(GA_SMALL, tournament=3))
+        Ss = sparse.from_dense(np.asarray(Cs))
         solvers = {
             "psa": lambda: annealing.run_psa_batch(Cs, Ms, keys, sa, procs,
                                                    n_valid=nvs),
+            "psa_sparse": lambda: annealing.run_psa_batch(
+                Ss, Ms, keys, replace(sa, flows="sparse"), procs,
+                n_valid=nvs),
             "pga": lambda: genetic.run_pga_batch(Cs, Ms, keys, GA_SMALL,
                                                  procs, n_valid=nvs),
             "pca": lambda: composite.run_pca_batch(Cs, Ms, keys, pca, procs,
