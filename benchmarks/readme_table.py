@@ -91,6 +91,21 @@ def render_table(data: dict) -> str:
         rows.append((f"RM replay: utilization{suffix}", what,
                      _fmt(u0), _fmt(u1),
                      _fmt(u1 / u0 if u0 and u1 else None)))
+    sec = data.get("fleet")
+    if sec:
+        cfg = sec.get("config", {})
+        what = (f"{cfg.get('jobs', '?')} jobs, "
+                f"{cfg.get('workers', '?')} workers, "
+                f"worker 0 killed mid-wave")
+        kill = sec.get("fleet_kill")
+        if kill:
+            # baseline: one engine; this path: the fleet surviving a
+            # worker kill (zero lost requests, bitwise-equal mappings)
+            rows.append((
+                "fleet replay: recovered mapped-jobs/s", what,
+                _fmt(sec.get("single", {}).get("mapped_jobs_per_s"), 2),
+                _fmt(kill.get("mapped_jobs_per_s"), 2),
+                _fmt(sec.get("recovered_ratio"))))
     sec = data.get("solver_hotloop")
     if sec:
         cfg = sec.get("config", {})

@@ -52,6 +52,7 @@ import numpy as np
 
 from repro.core import annealing, instances
 from repro.serve.cluster import ClusterState
+from repro.serve.fleet import EngineFleet, FaultPlan
 from repro.serve.mapper import MapRequest, MappingEngine
 from repro.serve.rm import ResourceManager
 from repro.serve.trace import parse_swf, synthetic_trace
@@ -240,6 +241,105 @@ def run_replay(specs, M, mesh, sa_cfg, buckets, args) -> Dict[str, object]:
     return out
 
 
+def run_fleet_replay(specs, M, sa_cfg, buckets, args) -> Dict[str, object]:
+    """Fleet mode (``--workers N``): replay the same co-optimized trace
+    through a single engine and through an :class:`EngineFleet`; with
+    ``--kill-one``, replay a third time while worker 0 is killed
+    mid-wave.  Proves (by assertion, not by eye) that no request is
+    lost and every run's mappings are bitwise-identical -- the kill
+    only costs wall time for the re-solve."""
+    def engine_kwargs():
+        # warm_start off everywhere: fleet determinism requires solves to
+        # be pure functions of the request (see serve/fleet.py), so the
+        # single-engine baseline must match.
+        return dict(buckets=buckets, num_processes=2, sa_cfg=sa_cfg,
+                    polish_rounds=args.polish_rounds,
+                    max_batch=args.max_batch, warm_start=False)
+
+    # Dies after completing candidates+1 requests: mid-second-wave, so
+    # the kill provably exercises the requeue path (some of a dispatched
+    # wave delivered, the rest recovered by another worker).
+    kill_at = args.candidates + 1
+    runs = [("single", lambda: MappingEngine(**engine_kwargs()))]
+    runs.append(("fleet", lambda: EngineFleet(
+        workers=args.workers, **engine_kwargs())))
+    if args.kill_one:
+        runs.append(("fleet_kill", lambda: EngineFleet(
+            workers=args.workers,
+            fault_plan=FaultPlan(kill_worker_at={0: kill_at}),
+            **engine_kwargs())))
+
+    out: Dict[str, object] = {}
+    mappings: Dict[str, Dict[str, tuple]] = {}
+    for name, mk in runs:
+        engine = mk()
+        try:
+            rm = ResourceManager(M, engine, candidates=args.candidates,
+                                 policies=tuple(args.policies),
+                                 algorithm=args.algorithm,
+                                 deadline_ms=args.deadline_ms)
+            for s in specs:
+                rm.submit_job(s)
+            t0 = time.perf_counter()
+            rep = rm.run()
+            wall = time.perf_counter() - t0
+        finally:
+            if isinstance(engine, EngineFleet):
+                engine.stop()
+        # zero lost requests: every job finished with a mapping
+        assert rep.jobs == len(specs), (
+            f"{name}: {len(specs) - rep.jobs} jobs never finished")
+        assert all(h.response is not None for h in rm.handles), (
+            f"{name}: a job finished without a mapping")
+        # a kill may re-solve one wave on a second worker; anything more
+        # means batching broke
+        limit = 2 if name == "fleet_kill" else 1
+        assert rep.max_batches_per_wave <= limit, (
+            f"{name}: a candidate wave took "
+            f"{rep.max_batches_per_wave} solver batches (limit {limit})")
+        mappings[name] = {
+            h.job_id: (h.response.perm.tolist(), h.response.objective)
+            for h in rm.handles}
+        entry = {**rep.asdict(), "wall_s": wall,
+                 "mapped_jobs_per_s": len(specs) / max(wall, 1e-9)}
+        if isinstance(engine, EngineFleet):
+            st = engine.stats
+            entry.update(requeued=st.requeued,
+                         worker_deaths=st.worker_deaths,
+                         respawns=st.respawns,
+                         duplicate_results=st.duplicate_results,
+                         dispatched_waves=st.dispatched_waves,
+                         solver_batches=st.solver_batches,
+                         cache_hits=st.cache_hits)
+        out[name] = entry
+        extra = ""
+        if isinstance(engine, EngineFleet):
+            extra = (f", deaths {engine.stats.worker_deaths}, "
+                     f"requeued {engine.stats.requeued}")
+        print(f"{name:>10}: makespan {rep.makespan_s:8.1f} s, "
+              f"{entry['mapped_jobs_per_s']:6.2f} mapped-jobs/s, "
+              f"wall {wall:5.1f} s{extra}")
+    # bitwise equality: same perm and objective per job across every run
+    base = mappings["single"]
+    for name, got in mappings.items():
+        assert got == base, (
+            f"{name}: mappings differ from the single-engine replay")
+    out["bitwise_equal"] = True
+    out["zero_lost"] = True
+    if args.kill_one:
+        assert out["fleet_kill"]["worker_deaths"] >= 1
+        assert out["fleet_kill"]["requeued"] >= 1, (
+            "the kill never exercised the requeue path")
+        out["recovered_ratio"] = (
+            out["fleet_kill"]["mapped_jobs_per_s"]
+            / max(out["single"]["mapped_jobs_per_s"], 1e-9))
+        print(f"kill-one recovery: {out['fleet_kill']['requeued']} "
+              f"requests requeued, throughput "
+              f"{out['recovered_ratio']:.2f}x of the single engine, "
+              f"results bitwise-equal")
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--jobs", type=int, default=50)
@@ -274,6 +374,14 @@ def main():
     ap.add_argument("--solvers", type=int, default=8)
     ap.add_argument("--polish-rounds", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--workers", type=int, default=None, metavar="N",
+                    help="replay through an N-worker EngineFleet (plus a "
+                         "single-engine baseline) and assert bitwise-equal "
+                         "mappings; results land under 'fleet'")
+    ap.add_argument("--kill-one", action="store_true",
+                    help="with --workers: replay a third time while worker "
+                         "0 is killed mid-wave, asserting zero lost "
+                         "requests and recovered throughput")
     ap.add_argument("--mesh-shape", type=int, default=None, metavar="N",
                     help="shard bucket waves over an N-device instance "
                          "mesh (CPU: set XLA_FLAGS="
@@ -302,6 +410,12 @@ def main():
         args.max_batch = 4
     if len(args.sizes) != len(args.weights):
         ap.error("--sizes and --weights must have the same length")
+    if args.kill_one and args.workers is None:
+        ap.error("--kill-one requires --workers N")
+    if args.workers is not None and args.stream:
+        ap.error("--workers is a replay mode; drop --stream")
+    if args.workers is not None and args.workers < 1:
+        ap.error("--workers must be >= 1")
 
     M = instances.grid_distance_matrix(tuple(args.grid))
     if max(args.sizes) > M.shape[0]:
@@ -321,6 +435,35 @@ def main():
                                 iters_per_exchange=args.iters_per_exchange,
                                 num_exchanges=args.num_exchanges,
                                 solvers=args.solvers)
+    if args.workers is not None:
+        specs = load_trace(args, M.shape[0])
+        buckets = tuple(sorted(set(
+            max(4, int(2 ** np.ceil(np.log2(max(s.size, 2)))))
+            for s in specs)))
+        print(f"fleet replay: {len(specs)} jobs over {M.shape[0]} nodes, "
+              f"{args.workers} workers"
+              + (", killing worker 0 mid-wave" if args.kill_one else ""))
+        out = run_fleet_replay(specs, M, sa_cfg, buckets, args)
+        if args.json:
+            payload = {
+                "config": {"jobs": len(specs), "grid": list(args.grid),
+                           "trace": args.trace,
+                           "workers": args.workers,
+                           "kill_one": args.kill_one,
+                           "kill_at": args.candidates + 1,
+                           "candidates": args.candidates,
+                           "policies": list(args.policies),
+                           "algorithm": args.algorithm,
+                           "max_batch": args.max_batch,
+                           "dry_run": args.dry_run},
+                **out,
+            }
+            common.write_bench_json(args.json, "fleet", payload)
+            print(f"wrote {args.json} [fleet]")
+        if args.dry_run:
+            print("dry-run OK")
+        return
+
     if not args.stream:
         specs = load_trace(args, M.shape[0])
         buckets = tuple(sorted(set(

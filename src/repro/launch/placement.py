@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import warnings
 from dataclasses import dataclass
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -39,6 +39,7 @@ import jax
 from jax.sharding import Mesh
 
 from repro.core import annealing, genetic, mapping as mapping_lib
+from repro.serve.fleet import EngineFleet, FaultPlan
 from repro.serve.mapper import MapFuture, MapRequest, MappingEngine
 from repro.topology import hlocost, tpu, traffic as traffic_lib
 from .mesh import make_mesh_with_devices
@@ -109,27 +110,47 @@ class PlacementService:
     batch.  Everything the old module globals did lives here as
     methods; the module-level functions below are conveniences over
     ``default_service()``.
+
+    With ``workers >= 1`` the service builds an
+    :class:`~repro.serve.fleet.EngineFleet` of that many worker engines
+    instead of a single ``MappingEngine`` -- the submit/flush surface is
+    identical, placements shard across the workers, and a worker death
+    (injectable through ``fault_plan`` for tests) requeues its in-flight
+    placements instead of losing them.  The fleet runs with
+    ``warm_start=False`` so results stay bitwise-identical to a
+    single-engine service with warm starts disabled.
     """
 
     def __init__(self, *, mesh: Optional[Mesh] = None,
                  instance_axis: str = "instances",
                  num_processes: int = 4,
                  sa_cfg: Optional[annealing.SAConfig] = None,
-                 ga_cfg: Optional[genetic.GAConfig] = None):
+                 ga_cfg: Optional[genetic.GAConfig] = None,
+                 workers: int = 0,
+                 fault_plan: Optional[FaultPlan] = None):
         self._mesh = mesh
         self._axis = instance_axis
         self._num_processes = num_processes
         self._sa_cfg = sa_cfg or _FAST_SA
         self._ga_cfg = ga_cfg or _FAST_GA
-        self._engine: Optional[MappingEngine] = None
+        self._workers = int(workers)
+        self._fault_plan = fault_plan
+        self._engine: Optional[Union[MappingEngine, EngineFleet]] = None
 
     @property
-    def engine(self) -> MappingEngine:
+    def engine(self) -> Union[MappingEngine, EngineFleet]:
         if self._engine is None:
-            self._engine = MappingEngine(
+            kwargs = dict(
                 num_processes=self._num_processes, sa_cfg=self._sa_cfg,
-                ga_cfg=self._ga_cfg, mesh=self._mesh,
-                instance_axis=self._axis)
+                ga_cfg=self._ga_cfg)
+            if self._workers >= 1:
+                self._engine = EngineFleet(
+                    workers=self._workers, fault_plan=self._fault_plan,
+                    meshes=None if self._mesh is None else [self._mesh],
+                    instance_axis=self._axis, **kwargs)
+            else:
+                self._engine = MappingEngine(
+                    mesh=self._mesh, instance_axis=self._axis, **kwargs)
         return self._engine
 
     def configure_mesh(self, mesh: Optional[Mesh],

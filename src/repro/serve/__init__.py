@@ -9,6 +9,7 @@ internal.  See ``docs/DESIGN.md`` §9 for the control-plane design and
 the old-name -> new-name migration table.
 """
 from repro.serve.cluster import Allocation, Candidate, ClusterState
+from repro.serve.fleet import EngineFleet, EngineWorker, FaultPlan, FleetStats
 from repro.serve.mapper import (DeadlinePolicy, MapFuture, MappingEngine,
                                 MapRequest, MapResponse)
 from repro.serve.rm import (JobHandle, JobSpec, ReplayReport,
@@ -23,6 +24,8 @@ __all__ = [
     # mapping engine
     "MappingEngine", "MapRequest", "MapResponse", "MapFuture",
     "DeadlinePolicy",
+    # distributed fleet (drop-in engine with failure recovery)
+    "EngineFleet", "EngineWorker", "FaultPlan", "FleetStats",
     # cluster model
     "ClusterState", "Allocation", "Candidate",
     # traces

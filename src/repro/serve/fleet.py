@@ -1,0 +1,667 @@
+"""Distributed engine fleet: a coordinator sharding waves over worker
+engines, with deterministic fault injection and failure recovery.
+
+One :class:`~repro.serve.mapper.MappingEngine` process is the ceiling on
+the ROADMAP's "millions of users" target: the paper's premise is that
+mapping happens *inside* the resource manager's scheduling window, and a
+real RM cannot stall its queue because one solver process died mid-wave.
+:class:`EngineFleet` removes that ceiling while keeping the engine's
+``submit() -> MapFuture`` contract, so it drops into
+:class:`~repro.serve.rm.ResourceManager` /
+``launch.placement.PlacementService`` unchanged:
+
+  1. The coordinator owns N :class:`EngineWorker` threads, each wrapping
+     a private ``MappingEngine`` (optionally with its own device mesh).
+     Queued requests group by (bucket, algorithm, tier) exactly like the
+     single engine, and each wave is dispatched to the live worker with
+     the fewest outstanding requests (ties: least recently assigned) --
+     the ``weiyu0824/Idunno`` coordinator's fewest-resources-first rule.
+  2. Failure recovery: a worker is dead when it says so (injected
+     faults), when its wave raises unexpectedly at the thread boundary,
+     or when its heartbeat goes stale (``heartbeat_timeout_s``).  Every
+     unresolved request a dead worker held is requeued and re-dispatched
+     to a surviving worker; when none survive, a fresh worker is
+     respawned.  A :class:`~repro.serve.mapper.MapFuture` is therefore
+     never lost -- and a first-result-wins guard makes sure it is never
+     resolved twice, even when a declared-dead "zombie" worker delivers
+     late.
+  3. Straggler re-dispatch: a request in flight longer than
+     ``straggler_after_s`` is duplicated to a second worker; the first
+     result wins (``stats.duplicate_results`` counts the losers).
+  4. A shared exact-digest cache tier sits above the workers: once any
+     worker solved an instance, every later identical request is served
+     by the coordinator without a dispatch -- a warm entry anywhere
+     serves the whole fleet (workers keep their private caches too).
+  5. :class:`FaultPlan` is the injection seam that makes all of this
+     deterministic and testable: ``kill_worker_at`` kills a worker after
+     it completed exactly k requests (count-based, not timing-based),
+     ``delay_worker_s`` slows a worker down, ``drop_heartbeats`` silences
+     one so the staleness detector -- not the worker -- declares the
+     death.
+
+Determinism: workers default to ``warm_start=False`` so every solve is a
+pure function of the request alone -- history-dependent shape-tier warm
+starts would otherwise let sharding order, kills, and straggler
+duplicates change results.  With that default the fleet is
+bitwise-identical to a single ``MappingEngine(warm_start=False)`` on any
+request set, for any worker count, under any :class:`FaultPlan` that
+leaves at least the respawn path alive (``tests/test_fleet.py`` pins
+this).
+
+Synchronous use mirrors the engine: without :meth:`EngineFleet.start`
+(no dispatcher thread), :meth:`EngineFleet.flush` drives dispatch,
+failure detection, and requeue inline until every submitted request is
+resolved.  ``start()``/``stop()`` (or the context manager) run the same
+logic in a background dispatcher with the engine's deadline/full-bucket
+batching rules.  ``stop()`` drains, then shuts the workers down; a
+stopped fleet does not accept further work.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import OrderedDict, deque
+from dataclasses import dataclass, field
+from typing import (Callable, Dict, List, Mapping, Optional, Sequence, Set,
+                    Tuple)
+
+import numpy as np
+
+from repro.serve.mapper import (MapFuture, MappingEngine, MapRequest,
+                                MapResponse, validate_request)
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """Deterministic fault injection, keyed by worker id.
+
+    ``kill_worker_at[wid] = k``: worker ``wid`` dies after *completing*
+    exactly ``k`` requests -- before delivering the (k+1)-th, even
+    mid-wave -- leaving its remaining assignments to the requeue path.
+    Count-based, so the same plan on the same request stream kills at
+    the same request every run.
+
+    ``delay_worker_s[wid]``: sleep this long before processing each
+    wave (build stragglers and lose races deterministically).
+
+    ``drop_heartbeats``: these workers stop heartbeating the moment they
+    start; with a ``heartbeat_timeout_s`` configured the staleness
+    detector declares them dead while their thread may still be solving
+    -- which is exactly how a zombie delivery into the first-result-wins
+    guard is produced on purpose.
+
+    Respawned workers get fresh ids beyond the initial range, so a plan
+    written for workers ``0..N-1`` never re-kills the replacements.
+    """
+    kill_worker_at: Mapping[int, int] = field(default_factory=dict)
+    delay_worker_s: Mapping[int, float] = field(default_factory=dict)
+    drop_heartbeats: frozenset = frozenset()
+
+    def kill_at(self, wid: int) -> Optional[int]:
+        return self.kill_worker_at.get(wid)
+
+    def delay_s(self, wid: int) -> float:
+        return float(self.delay_worker_s.get(wid, 0.0))
+
+    def beats(self, wid: int) -> bool:
+        return wid not in self.drop_heartbeats
+
+
+@dataclass
+class FleetStats:
+    """Coordinator-level counters.  The first block mirrors
+    :class:`~repro.serve.mapper.EngineStats` so stream harnesses reading
+    engine stats work unchanged (``warm_starts`` stays 0 under the
+    fleet's deterministic ``warm_start=False`` default); the second
+    block is fleet-specific fault accounting."""
+    submitted: int = 0
+    resolved: int = 0
+    failed: int = 0
+    cache_hits: int = 0            # shared-tier hits served by the coordinator
+    warm_starts: int = 0
+    solver_batches: int = 0        # summed from worker engines, per wave
+    solver_calls: int = 0
+    full_bucket_flushes: int = 0
+    deadline_flushes: int = 0
+    dispatched_waves: int = 0
+    requeued: int = 0              # in-flight requests recovered from a death
+    worker_deaths: int = 0
+    respawns: int = 0
+    straggler_redispatches: int = 0
+    duplicate_results: int = 0     # late deliveries the first-wins guard ate
+
+
+@dataclass(eq=False)               # identity hash: instances live in sets
+class _FleetPending:
+    """One submitted request as the coordinator tracks it across
+    dispatch, death, requeue, and (possibly duplicated) delivery."""
+    req: MapRequest
+    future: MapFuture
+    algorithm: str                 # resolved by the deadline policy
+    tier: str
+    digest: str                    # shared-cache key (proto engine digest)
+    t_submit: float
+    resolved: bool = False
+    dispatches: int = 0
+    last_dispatch: float = 0.0
+    holders: Set[int] = field(default_factory=set)   # worker ids in flight
+
+
+class EngineWorker:
+    """One thread-backed worker: a private ``MappingEngine`` fed waves
+    through an inbox, heartbeating through the coordinator's lock.
+
+    The engine is used synchronously (its flusher never starts): the
+    worker submits a whole wave and flushes once, so a wave is a single
+    batched dispatch exactly like the plain engine -- the RM's
+    one-dispatch-per-candidate-wave invariant survives the fleet.
+    """
+
+    def __init__(self, fleet: "EngineFleet", wid: int,
+                 engine: MappingEngine):
+        self.fleet = fleet
+        self.wid = wid
+        self.engine = engine
+        self.inbox: deque = deque()            # waves; guarded by fleet lock
+        self.assigned: Set[_FleetPending] = set()
+        self.alive = True
+        self.completed = 0                     # delivered results (kill_at)
+        self.outstanding = 0
+        self.last_beat = time.monotonic()
+        self.last_assigned = 0                 # dispatch tie-break sequence
+        self._thread = threading.Thread(
+            target=self._run, name=f"fleet-worker-{wid}", daemon=True)
+
+    def start(self) -> None:
+        self._thread.start()
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        if self._thread.is_alive():
+            self._thread.join(timeout)
+
+    # ------------------------------------------------------------- thread
+    def _beat_locked(self) -> None:
+        if self.fleet.fault_plan.beats(self.wid):
+            self.last_beat = time.monotonic()
+
+    def _run(self) -> None:
+        fleet = self.fleet
+        while True:
+            with fleet._cond:
+                self._beat_locked()
+                while (self.alive and not fleet._shutdown
+                       and not self.inbox):
+                    fleet._cond.wait(timeout=fleet.tick_s)
+                    self._beat_locked()
+                if not self.alive or fleet._shutdown:
+                    return
+                wave = self.inbox.popleft()
+            if not self._process(wave):
+                return                         # injected death
+
+    def _process(self, wave: List[_FleetPending]) -> bool:
+        """Solve one wave and deliver per-request.  Returns False when an
+        injected kill fired (the thread must exit)."""
+        fleet = self.fleet
+        plan = fleet.fault_plan
+        delay = plan.delay_s(self.wid)
+        if delay > 0:
+            time.sleep(delay)
+        kill_at = plan.kill_at(self.wid)
+        with fleet._cond:
+            if kill_at is not None and self.completed >= kill_at:
+                fleet._declare_dead_locked(self)
+                return False
+        b0 = self.engine.stats.solver_batches
+        c0 = self.engine.stats.solver_calls
+        try:
+            futs = [self.engine.submit(p.req) for p in wave]
+            self.engine.flush()
+        except BaseException as e:
+            # A whole-wave failure is deterministic (it would fail on any
+            # worker): fail the futures instead of requeueing forever.
+            with fleet._cond:
+                for p in wave:
+                    fleet._fail_locked(self, p, e)
+            return True
+        with fleet._cond:
+            fleet.stats.solver_batches += (
+                self.engine.stats.solver_batches - b0)
+            fleet.stats.solver_calls += (
+                self.engine.stats.solver_calls - c0)
+        for p, f in zip(wave, futs):
+            with fleet._cond:
+                if kill_at is not None and self.completed >= kill_at:
+                    # Dies between deliveries: the rest of the wave stays
+                    # undelivered and is requeued by the reap.
+                    fleet._declare_dead_locked(self)
+                    return False
+                exc = f.exception(timeout=0)
+                if exc is not None:
+                    fleet._fail_locked(self, p, exc)
+                else:
+                    fleet._deliver_locked(self, p, f.result(timeout=0))
+        return True
+
+
+class EngineFleet:
+    """Coordinator + N worker engines; a drop-in ``MappingEngine``
+    replacement with failure recovery (see the module docstring).
+
+    ``engine_kwargs`` configure every worker engine (same signature as
+    ``MappingEngine``; ``warm_start`` defaults to False for fleet-wide
+    determinism -- see module docstring); alternatively pass
+    ``engine_factory(wid) -> MappingEngine`` to build heterogeneous
+    workers (all workers must then share digest-relevant config:
+    buckets, tier budgets, policy, processes -- the coordinator groups
+    and caches with worker 0's config).  ``meshes`` assigns one device
+    mesh per worker round-robin through the default factory.
+
+    ``heartbeat_timeout_s=None`` (default) disables the staleness
+    detector: a cold worker's first wave may legitimately sit in XLA
+    compilation far longer than any useful timeout, and injected faults
+    plus thread-boundary exceptions already cover in-process failure.
+    Enable it (generously, or after ``warmup()``) when workers can
+    actually wedge.  A false positive is safe -- requeue plus the
+    first-result-wins guard keep results exact -- just wasteful.
+    """
+
+    def __init__(self, workers: int = 2, *,
+                 fault_plan: Optional[FaultPlan] = None,
+                 heartbeat_timeout_s: Optional[float] = None,
+                 straggler_after_s: Optional[float] = None,
+                 max_dispatches: int = 2,
+                 shared_cache_size: int = 1024,
+                 tick_s: float = 0.02,
+                 engine_factory: Optional[
+                     Callable[[int], MappingEngine]] = None,
+                 meshes: Optional[Sequence] = None,
+                 **engine_kwargs):
+        if workers < 1:
+            raise ValueError("need at least one worker")
+        self.fault_plan = fault_plan or FaultPlan()
+        self.heartbeat_timeout_s = heartbeat_timeout_s
+        self.straggler_after_s = straggler_after_s
+        self.max_dispatches = int(max_dispatches)
+        self.shared_cache_size = int(shared_cache_size)
+        self.tick_s = float(tick_s)
+        if engine_factory is None:
+            kwargs = dict(engine_kwargs)
+            kwargs.setdefault("warm_start", False)
+            mesh_list = list(meshes) if meshes else []
+
+            def engine_factory(wid: int) -> MappingEngine:
+                kw = dict(kwargs)
+                if mesh_list:
+                    kw["mesh"] = mesh_list[wid % len(mesh_list)]
+                return MappingEngine(**kw)
+        elif engine_kwargs or meshes:
+            raise ValueError(
+                "pass either engine_factory or engine kwargs/meshes")
+        self._factory = engine_factory
+        self._lock = threading.RLock()
+        self._cond = threading.Condition(self._lock)
+        self._queue: List[_FleetPending] = []
+        self._inflight: Set[_FleetPending] = set()
+        self._cache: "OrderedDict[str, Tuple[np.ndarray, float]]" = \
+            OrderedDict()
+        self.stats = FleetStats()
+        self.workers: List[EngineWorker] = []
+        self._next_wid = 0
+        self._assign_seq = 1
+        self._dispatcher: Optional[threading.Thread] = None
+        self._stop = False
+        self._shutdown = False
+        for _ in range(workers):
+            self._spawn_worker_locked()
+        # Config/digest/grouping proxy: worker 0's engine (pure reads --
+        # usable even after that worker dies).
+        self._proto = self.workers[0].engine
+
+    # ------------------------------------------------------ engine surface
+    @property
+    def max_batch(self) -> int:
+        return self._proto.max_batch
+
+    @property
+    def policy(self):
+        return self._proto.policy
+
+    @property
+    def flush_deadline_ms(self) -> float:
+        return self._proto.flush_deadline_ms
+
+    def warmup(self, **kwargs) -> int:
+        """AOT-precompile one worker's bucket programs; jit and
+        persistent compilation caches are process-wide, so every worker
+        (and every respawn) shares the result."""
+        for w in self.workers:
+            if w.alive:
+                return w.engine.warmup(**kwargs)
+        return 0
+
+    def submit(self, req: MapRequest) -> MapFuture:
+        """Queue one request; non-blocking.  Same contract as
+        :meth:`MappingEngine.submit`: the future is resolved by the
+        background dispatcher (when started) or by the next
+        :meth:`flush`."""
+        validate_request(req)
+        algorithm, tier = self._proto.policy.resolve(
+            req.algorithm, req.deadline_ms)
+        p = _FleetPending(
+            req=req, future=MapFuture(), algorithm=algorithm, tier=tier,
+            digest=self._proto.digest(req, algorithm, tier),
+            t_submit=time.monotonic())
+        with self._cond:
+            if self._shutdown:
+                raise RuntimeError("fleet is stopped")
+            self.stats.submitted += 1
+            self._queue.append(p)
+            self._cond.notify_all()
+        return p.future
+
+    def flush(self) -> Dict[str, MapResponse]:
+        """Dispatch everything queued and pump monitor/requeue until all
+        of it (and anything already in flight) is resolved; returns
+        {job_id: response} and re-raises the first failure, exactly like
+        the engine's ``flush()``."""
+        with self._cond:
+            targets = list(self._queue) + [p for p in self._inflight
+                                           if not p.resolved]
+            ready, self._queue = self._queue, []
+            self._dispatch_ready_locked(ready)
+        while True:
+            with self._cond:
+                self._monitor_locked()
+                if self._queue:                # requeued orphans
+                    ready, self._queue = self._queue, []
+                    self._dispatch_ready_locked(ready)
+                if all(p.resolved for p in targets):
+                    break
+                self._cond.wait(timeout=self.tick_s)
+        responses: Dict[str, MapResponse] = {}
+        first_error: Optional[BaseException] = None
+        for p in targets:
+            exc = p.future.exception(timeout=0)
+            if exc is not None:
+                first_error = first_error or exc
+            else:
+                responses[p.req.job_id] = p.future.result(timeout=0)
+        if first_error is not None:
+            raise first_error
+        return responses
+
+    def map_one(self, C: np.ndarray, M: np.ndarray, algorithm: str = "psa",
+                job_id: str = "job", seed: int = 0,
+                cache_seed: bool = False,
+                deadline_ms: Optional[float] = None) -> MapResponse:
+        """Single-request convenience path, mirroring the engine's."""
+        fut = self.submit(MapRequest(job_id=job_id, C=np.asarray(C),
+                                     M=np.asarray(M), algorithm=algorithm,
+                                     seed=seed, cache_seed=cache_seed,
+                                     deadline_ms=deadline_ms))
+        if not self.running:
+            self.flush()
+        return fut.result()
+
+    # --------------------------------------------------- dispatcher thread
+    @property
+    def running(self) -> bool:
+        return self._dispatcher is not None and self._dispatcher.is_alive()
+
+    def start(self) -> "EngineFleet":
+        """Start the background dispatcher thread (idempotent)."""
+        with self._cond:
+            if self._shutdown:
+                raise RuntimeError("fleet is stopped")
+            if self.running:
+                return self
+            self._stop = False
+            self._dispatcher = threading.Thread(
+                target=self._dispatch_loop, name="fleet-dispatcher",
+                daemon=True)
+            self._dispatcher.start()
+        return self
+
+    def stop(self, flush_pending: bool = True) -> None:
+        """Stop the dispatcher, drain (by default), then shut the workers
+        down.  Same claim-under-the-lock hand-over as the engine's
+        ``stop()``.  A stopped fleet rejects further submits."""
+        with self._cond:
+            self._stop = True
+            dispatcher, self._dispatcher = self._dispatcher, None
+            self._cond.notify_all()
+        if dispatcher is not None:
+            dispatcher.join()
+        if flush_pending:
+            self.flush()
+        with self._cond:
+            self._shutdown = True
+            self._cond.notify_all()
+        for w in list(self.workers):
+            w.join(timeout=5.0)
+
+    def __enter__(self) -> "EngineFleet":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def _dispatch_loop(self) -> None:
+        me = threading.current_thread()
+        while True:
+            with self._cond:
+                if self._dispatcher is not me or self._stop:
+                    return                 # stop() claimed the hand-over
+                self._monitor_locked()
+                ready, wait_s = self._take_ready_locked()
+                if ready:
+                    self._dispatch_ready_locked(ready)
+                timeout = self.tick_s if wait_s is None \
+                    else max(min(wait_s, self.tick_s), 0.001)
+                self._cond.wait(timeout=timeout)
+
+    def _take_ready_locked(self
+                           ) -> Tuple[List[_FleetPending], Optional[float]]:
+        """Engine-style batching for the dispatcher: take full groups and
+        groups holding an overdue request; requeued requests (already
+        dispatched once) count as overdue immediately -- recovery must
+        not wait out a fresh flush deadline."""
+        if not self._queue:
+            return [], None
+        now = time.monotonic()
+        deadline_s = self.flush_deadline_ms / 1000.0
+        counts: Dict[Tuple[Optional[int], str, str], int] = {}
+        due = set()
+        for p in self._queue:
+            if p.resolved:                 # zombie delivery beat the requeue
+                continue
+            k = self._group_key(p)
+            counts[k] = counts.get(k, 0) + 1
+            if p.dispatches > 0 or now - p.t_submit >= deadline_s:
+                due.add(k)
+        if not counts:
+            self._queue = []
+            return [], None
+        full = {k for k, c in counts.items() if c >= self.max_batch}
+        take = full | due
+        if take:
+            ready = [p for p in self._queue
+                     if not p.resolved and self._group_key(p) in take]
+            self._queue = [p for p in self._queue
+                           if not p.resolved
+                           and self._group_key(p) not in take]
+            self.stats.full_bucket_flushes += len(full)
+            self.stats.deadline_flushes += len(due - full)
+            return ready, None
+        oldest = min(p.t_submit for p in self._queue if not p.resolved)
+        return [], deadline_s - (now - oldest)
+
+    # ------------------------------------------------- dispatch + recovery
+    def _group_key(self, p: _FleetPending
+                   ) -> Tuple[Optional[int], str, str]:
+        return (self._proto._route(p.req.C.shape[0]), p.algorithm, p.tier)
+
+    def _spawn_worker_locked(self) -> EngineWorker:
+        wid = self._next_wid
+        self._next_wid += 1
+        w = EngineWorker(self, wid, self._factory(wid))
+        self.workers.append(w)
+        w.start()
+        return w
+
+    def _pick_worker_locked(self, exclude: Set[int] = frozenset()
+                            ) -> Optional[EngineWorker]:
+        live = [w for w in self.workers
+                if w.alive and w.wid not in exclude]
+        if not live:
+            return None
+        return min(live, key=lambda w: (w.outstanding, w.last_assigned,
+                                        w.wid))
+
+    def _dispatch_ready_locked(self, ready: List[_FleetPending]) -> None:
+        """Shared-cache pass, then group misses and assign waves
+        fewest-outstanding-first (caller holds the lock)."""
+        groups: Dict[Tuple[Optional[int], str, str],
+                     List[_FleetPending]] = OrderedDict()
+        for p in ready:
+            if p.resolved:
+                continue
+            hit = self._cache.get(p.digest)
+            if hit is not None:
+                self._cache.move_to_end(p.digest)
+                perm, objective = hit
+                self.stats.cache_hits += 1
+                self._resolve_locked(
+                    p, self._cached_response(p, perm, objective))
+                continue
+            groups.setdefault(self._group_key(p), []).append(p)
+        for ps in groups.values():
+            for i in range(0, len(ps), self.max_batch):
+                self._assign_wave_locked(ps[i:i + self.max_batch])
+
+    def _assign_wave_locked(self, wave: List[_FleetPending],
+                            exclude: Set[int] = frozenset()
+                            ) -> Optional[EngineWorker]:
+        w = self._pick_worker_locked(exclude)
+        if w is None:
+            if exclude:
+                return None        # straggler duplicate: never respawn for it
+            w = self._spawn_worker_locked()
+            self.stats.respawns += 1
+        now = time.monotonic()
+        for p in wave:
+            p.holders.add(w.wid)
+            p.dispatches += 1
+            p.last_dispatch = now
+            w.assigned.add(p)
+            self._inflight.add(p)
+        w.inbox.append(list(wave))
+        w.outstanding += len(wave)
+        w.last_assigned = self._assign_seq
+        self._assign_seq += 1
+        self.stats.dispatched_waves += 1
+        self._cond.notify_all()
+        return w
+
+    def _monitor_locked(self) -> None:
+        """Failure detector + straggler re-dispatch (caller holds the
+        lock); called from every flush pump tick and dispatcher tick."""
+        now = time.monotonic()
+        if self.heartbeat_timeout_s is not None:
+            for w in list(self.workers):
+                if w.alive and now - w.last_beat > self.heartbeat_timeout_s:
+                    self._declare_dead_locked(w)
+        if self.straggler_after_s is not None:
+            overdue = [p for p in list(self._inflight)
+                       if not p.resolved
+                       and p.dispatches < self.max_dispatches
+                       and now - p.last_dispatch > self.straggler_after_s]
+            for p in overdue:
+                if self._assign_wave_locked([p], exclude=set(p.holders)):
+                    self.stats.straggler_redispatches += 1
+
+    def _declare_dead_locked(self, w: EngineWorker) -> None:
+        if not w.alive:
+            return
+        w.alive = False
+        self.stats.worker_deaths += 1
+        self._reap_locked(w)
+
+    def _reap_locked(self, w: EngineWorker) -> None:
+        """Requeue every unresolved request a dead worker held, unless a
+        straggler duplicate is still in flight elsewhere."""
+        w.inbox.clear()
+        orphans, w.assigned = w.assigned, set()
+        w.outstanding = 0
+        for p in orphans:
+            p.holders.discard(w.wid)
+            if p.resolved or p.holders:
+                continue
+            self._inflight.discard(p)
+            self._queue.append(p)
+            self.stats.requeued += 1
+        self._cond.notify_all()
+
+    # -------------------------------------------------- delivery (workers)
+    def _release_locked(self, w: EngineWorker, p: _FleetPending) -> None:
+        w.assigned.discard(p)
+        w.outstanding = max(0, w.outstanding - 1)
+        w.completed += 1
+        if self.fault_plan.beats(w.wid):
+            w.last_beat = time.monotonic()
+        p.holders.discard(w.wid)
+
+    def _deliver_locked(self, w: EngineWorker, p: _FleetPending,
+                        resp: MapResponse) -> None:
+        self._release_locked(w, p)
+        if p.resolved:                     # first result won already
+            self.stats.duplicate_results += 1
+            return
+        self._cache_put_locked(p.digest, resp.perm, resp.objective)
+        self._resolve_locked(p, resp)
+
+    def _fail_locked(self, w: EngineWorker, p: _FleetPending,
+                     exc: BaseException) -> None:
+        self._release_locked(w, p)
+        if p.resolved:
+            self.stats.duplicate_results += 1
+            return
+        p.resolved = True
+        self.stats.failed += 1
+        self._inflight.discard(p)
+        p.future._fail(exc)
+        self._cond.notify_all()
+
+    def _resolve_locked(self, p: _FleetPending, resp: MapResponse) -> None:
+        p.resolved = True
+        self.stats.resolved += 1
+        self._inflight.discard(p)
+        p.future._resolve(resp)
+        self._cond.notify_all()
+
+    # -------------------------------------------------------- shared cache
+    def _cache_put_locked(self, digest: str, perm: np.ndarray,
+                          objective: float) -> None:
+        self._cache[digest] = (np.array(perm, copy=True), float(objective))
+        self._cache.move_to_end(digest)
+        while len(self._cache) > self.shared_cache_size:
+            self._cache.popitem(last=False)
+
+    def _cached_response(self, p: _FleetPending, perm: np.ndarray,
+                         objective: float) -> MapResponse:
+        """Shared-tier hit: same response shape the engine's exact tier
+        produces (cached=True, zero amortized seconds, batch_size=0),
+        including the never-worse-than-identity guard."""
+        req = p.req
+        n = req.C.shape[0]
+        baseline = float((np.asarray(req.C, np.float64)
+                          * np.asarray(req.M, np.float64)).sum())
+        if objective > baseline:
+            perm, objective = np.arange(n, dtype=np.int32), baseline
+        return MapResponse(
+            job_id=req.job_id, perm=np.array(perm, copy=True),
+            objective=float(objective), baseline=baseline,
+            algorithm=p.algorithm, n=n,
+            bucket=self._proto._route(n), cached=True, seconds=0.0,
+            batch_size=0, tier=p.tier, warm_start=False)

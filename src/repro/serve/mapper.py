@@ -261,6 +261,22 @@ class _Pending:
     t_submit: float            # time.monotonic()
 
 
+def validate_request(req: MapRequest) -> None:
+    """Reject malformed requests in the caller's thread (shared by
+    :meth:`MappingEngine.submit` and the fleet coordinator): a digest or
+    cast error inside a flusher/worker thread would otherwise surface
+    nowhere."""
+    if req.algorithm not in ALGORITHMS + (AUTO,):
+        raise ValueError(
+            f"algorithm must be one of {ALGORITHMS + (AUTO,)}")
+    if req.C.shape != req.M.shape or req.C.shape[0] != req.C.shape[1]:
+        raise ValueError("C and M must be square and same order")
+    for name, a in (("C", req.C), ("M", req.M)):
+        if not np.issubdtype(np.asarray(a).dtype, np.number) or \
+                np.iscomplexobj(a):
+            raise ValueError(f"{name} must be a real numeric matrix")
+
+
 def _tighten_sa(cfg: annealing.SAConfig) -> annealing.SAConfig:
     """Reduced-budget SA for the tight deadline tier (~1/4 the work)."""
     return replace(cfg,
@@ -616,17 +632,7 @@ class MappingEngine:
         """Queue one request; non-blocking.  Returns the request's future,
         resolved by the background flusher (when started) or by the next
         explicit :meth:`flush`."""
-        if req.algorithm not in ALGORITHMS + (AUTO,):
-            raise ValueError(
-                f"algorithm must be one of {ALGORITHMS + (AUTO,)}")
-        if req.C.shape != req.M.shape or req.C.shape[0] != req.C.shape[1]:
-            raise ValueError("C and M must be square and same order")
-        for name, a in (("C", req.C), ("M", req.M)):
-            if not np.issubdtype(np.asarray(a).dtype, np.number) or \
-                    np.iscomplexobj(a):
-                # reject here, in the caller's thread: a digest/cast error
-                # inside the flusher would otherwise surface nowhere
-                raise ValueError(f"{name} must be a real numeric matrix")
+        validate_request(req)
         algorithm, tier = self.policy.resolve(req.algorithm, req.deadline_ms)
         pending = _Pending(req=req, future=MapFuture(), algorithm=algorithm,
                            tier=tier, t_submit=time.monotonic())
@@ -686,14 +692,44 @@ class MappingEngine:
 
     def stop(self, flush_pending: bool = True) -> None:
         """Stop the flusher; by default drain what is still queued so no
-        future is left unresolved."""
+        future is left unresolved.
+
+        The queue and the flusher handle are claimed *together with* the
+        stop flag, under the lock.  The pre-fix ordering joined the
+        flusher first and only drained afterwards, which raced concurrent
+        ``start()``/``submit()`` calls: ``stop()`` could join (and hang
+        on) a freshly-started flusher it never signalled, and a request
+        queued during an in-flight ``_flush_pending`` sat in the queue
+        until the racing drains happened to line up.  Claiming under the
+        lock makes the hand-over atomic: once ``stop()`` holds the queue
+        slice, it alone resolves those futures, and ``running`` is
+        already False so later submitters fall back to synchronous
+        ``flush()``.  With ``flush_pending=False`` the queue is left
+        intact for a later explicit :meth:`flush`.
+        """
         with self._cond:
             self._stop = True
+            # Claim the flusher handle under the lock: a concurrent
+            # start() can no longer swap in a thread we would join but
+            # never signal.  The claimed thread notices it is no longer
+            # self._flusher and exits without touching the queue.
+            flusher, self._flusher = self._flusher, None
+            drained: List[_Pending] = []
+            if flush_pending:
+                drained, self._queue = self._queue, []
             self._cond.notify_all()
-        if self._flusher is not None:
-            self._flusher.join()
-            self._flusher = None
+        if flusher is not None:
+            flusher.join()
         if flush_pending:
+            try:
+                self._flush_pending(drained, raise_errors=True)
+            except BaseException as e:
+                for p in drained:            # no future may be left hanging
+                    if not p.future.done():
+                        p.future._fail(e)
+                raise
+            # Final sweep: requests that raced in between the claim above
+            # and the join are in the queue, not in ``drained``.
             self.flush()
 
     def __enter__(self) -> "MappingEngine":
@@ -737,27 +773,27 @@ class MappingEngine:
         return [], deadline_s - (now - oldest)
 
     def _flush_loop(self) -> None:
+        me = threading.current_thread()
         while True:
             with self._cond:
-                while not self._stop and not self._queue:
+                while (self._flusher is me and not self._stop
+                       and not self._queue):
                     self._cond.wait()
-                if self._stop:
-                    ready, self._queue = self._queue, []
-                else:
-                    ready, wait_s = self._take_ready_locked()
-                    if not ready:
-                        self._cond.wait(timeout=wait_s)
-                        continue
-            if ready:
-                try:
-                    self._flush_pending(ready, raise_errors=False)
-                except BaseException as e:   # never let the flusher die with
-                    for p in ready:          # unresolved futures behind it
-                        if not p.future.done():
-                            p.future._fail(e)
-            with self._cond:
-                if self._stop and not self._queue:
+                if self._flusher is not me or self._stop:
+                    # stop() claimed the handle (and, with flush_pending,
+                    # the queue) under the lock; whatever is still queued
+                    # is stop()'s to serve, not ours.
                     return
+                ready, wait_s = self._take_ready_locked()
+                if not ready:
+                    self._cond.wait(timeout=wait_s)
+                    continue
+            try:
+                self._flush_pending(ready, raise_errors=False)
+            except BaseException as e:       # never let the flusher die with
+                for p in ready:              # unresolved futures behind it
+                    if not p.future.done():
+                        p.future._fail(e)
 
     # ---------------------------------------------------------- solve paths
     def _flush_pending(self, pending: List[_Pending], raise_errors: bool

@@ -62,6 +62,7 @@ from typing import Callable, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.serve.cluster import Candidate, ClusterState
+from repro.serve.fleet import EngineFleet
 from repro.serve.mapper import MapRequest, MapResponse, MappingEngine
 
 DEFAULT_POLICIES = ("compact", "slab", "scatter")
@@ -243,10 +244,19 @@ class ResourceManager:
     see :func:`dilation_score`.  An engine built by the manager is
     used synchronously (no flusher thread): every wave is flushed
     explicitly so its K instances ride one batched dispatch.
+
+    ``engine`` may also be an :class:`~repro.serve.fleet.EngineFleet`
+    -- the submit/flush contract is identical, waves shard across the
+    fleet's workers, and (with the fleet's default
+    ``warm_start=False``) a replay is bitwise-identical to the
+    single-engine run even under injected worker failures; only
+    ``wave_batches`` can exceed 1 on a wave whose worker died and was
+    re-solved elsewhere.
     """
 
     def __init__(self, system: Union[np.ndarray, ClusterState],
-                 engine: Optional[MappingEngine] = None, *,
+                 engine: Optional[Union[MappingEngine,
+                                        EngineFleet]] = None, *,
                  candidates: int = 3,
                  policies: Sequence[str] = DEFAULT_POLICIES,
                  backfill: bool = True,

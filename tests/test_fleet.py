@@ -1,0 +1,339 @@
+"""EngineFleet: deterministic fault injection via FaultPlan.
+
+Every failure here is injected by count (kill after k completions) or by
+construction (dropped heartbeats + a delayed worker), never by racing
+real crashes -- so kill-one requeue, kill-mid-wave respawn, the
+first-result-wins double-resolution guard, straggler re-dispatch, and
+the shared cache tier are all asserted deterministically, and every
+recovered result is checked bitwise against a single
+``MappingEngine(warm_start=False)``.
+"""
+import time
+from contextlib import contextmanager
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # optional test dependency
+    from _hypothesis_compat import given, settings, st
+
+from repro.core import instances
+from repro.serve import (EngineFleet, FaultPlan, JobSpec, MappingEngine,
+                         MapRequest, ResourceManager)
+from repro.serve.cluster import ClusterState
+
+from _fixtures import SA_SMALL, instance as _instance
+
+# One shared engine config across the module (and with the single-engine
+# references), so every solve reuses the same compiled bucket programs.
+ENGINE_KW = dict(buckets=(8,), sa_cfg=SA_SMALL, polish_rounds=0,
+                 max_batch=4, num_processes=2, flush_deadline_ms=10.0)
+
+
+def make_reqs(k, n=6, algorithm="psa", seed0=0):
+    """k distinct instances (distinct digests -- no dedup in a wave)."""
+    reqs = []
+    for i in range(k):
+        C, M = _instance(n, seed0 + i)
+        reqs.append(MapRequest(job_id=f"j{i}", C=C, M=M,
+                               algorithm=algorithm, seed=seed0 + i))
+    return reqs
+
+
+def single_engine_results(reqs):
+    """Reference run: the same requests through one plain engine with
+    warm starts off (the fleet's determinism contract)."""
+    eng = MappingEngine(warm_start=False, **ENGINE_KW)
+    futs = [eng.submit(r) for r in reqs]
+    eng.flush()
+    return {r.job_id: f.result(timeout=0) for r, f in zip(reqs, futs)}
+
+
+def assert_bitwise_equal(resps, refs):
+    assert set(resps) == set(refs)
+    for job_id, resp in resps.items():
+        ref = refs[job_id]
+        np.testing.assert_array_equal(resp.perm, ref.perm)
+        assert resp.objective == ref.objective
+        assert (resp.algorithm, resp.tier) == (ref.algorithm, ref.tier)
+
+
+@contextmanager
+def make_fleet(**kw):
+    fleet = EngineFleet(**{**ENGINE_KW, **kw})
+    try:
+        yield fleet
+    finally:
+        if not fleet._shutdown:
+            fleet.stop()
+
+
+def wait_until(pred, timeout=10.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(0.01)
+    return False
+
+
+# ----------------------------------------------------- drop-in equivalence
+def test_fleet_of_one_matches_plain_engine_bitwise():
+    reqs = make_reqs(5)
+    refs = single_engine_results(reqs)
+    with make_fleet(workers=1) as fleet:
+        futs = [fleet.submit(r) for r in reqs]
+        out = fleet.flush()
+        assert all(f.done() for f in futs)
+    assert_bitwise_equal(out, refs)
+    assert fleet.stats.worker_deaths == 0
+    assert fleet.stats.requeued == 0
+
+
+def test_fleet_shards_across_workers_bitwise():
+    reqs = make_reqs(9, seed0=20)
+    refs = single_engine_results(reqs)
+    with make_fleet(workers=3) as fleet:
+        [fleet.submit(r) for r in reqs]
+        out = fleet.flush()
+    assert_bitwise_equal(out, refs)
+    # 9 distinct requests, max_batch 4 -> 3 waves, spread over the fleet
+    assert fleet.stats.dispatched_waves == 3
+    assert fleet.stats.solver_calls == 9
+
+
+def test_fleet_map_one_and_validation():
+    C, M = _instance(6, seed=3)
+    with make_fleet(workers=2) as fleet:
+        resp = fleet.map_one(C, M, algorithm="psa", seed=3)
+        ref = MappingEngine(warm_start=False, **ENGINE_KW).map_one(
+            C, M, algorithm="psa", seed=3)
+        np.testing.assert_array_equal(resp.perm, ref.perm)
+        assert resp.objective == ref.objective
+        with pytest.raises(ValueError, match="algorithm"):
+            fleet.submit(MapRequest(job_id="bad", C=C, M=M,
+                                    algorithm="nope"))
+        with pytest.raises(ValueError, match="square"):
+            fleet.submit(MapRequest(job_id="bad", C=C[:3], M=M,
+                                    algorithm="psa"))
+    # a stopped fleet rejects new work instead of hanging it forever
+    with pytest.raises(RuntimeError, match="stopped"):
+        fleet.submit(MapRequest(job_id="late", C=C, M=M, algorithm="psa"))
+    fleet.stop()                           # idempotent
+
+
+# ------------------------------------------------------------ kill + requeue
+def test_kill_one_requeues_and_stays_bitwise():
+    """Worker 0 dies after one completion; every orphaned in-flight
+    request is requeued to the survivor and no future is lost."""
+    reqs = make_reqs(6, seed0=40)
+    refs = single_engine_results(reqs)
+    with make_fleet(workers=2,
+                    fault_plan=FaultPlan(kill_worker_at={0: 1})) as fleet:
+        futs = [fleet.submit(r) for r in reqs]
+        out = fleet.flush()
+        assert all(f.done() for f in futs)
+    assert_bitwise_equal(out, refs)
+    assert fleet.stats.worker_deaths == 1
+    assert fleet.stats.requeued >= 1
+    assert fleet.stats.resolved == 6
+    assert fleet.stats.failed == 0
+
+
+def test_kill_mid_wave_respawns_when_no_worker_survives():
+    """A fleet of one loses its only worker mid-wave (2 of 4 delivered):
+    the coordinator respawns a fresh worker for the requeued half."""
+    reqs = make_reqs(4, seed0=60)
+    refs = single_engine_results(reqs)
+    with make_fleet(workers=1,
+                    fault_plan=FaultPlan(kill_worker_at={0: 2})) as fleet:
+        [fleet.submit(r) for r in reqs]
+        out = fleet.flush()
+    assert_bitwise_equal(out, refs)
+    assert fleet.stats.worker_deaths == 1
+    assert fleet.stats.requeued == 2       # the undelivered half of the wave
+    assert fleet.stats.respawns == 1
+    # the respawned worker got a fresh id outside the fault plan's range
+    assert [w.wid for w in fleet.workers] == [0, 1]
+    assert not fleet.workers[0].alive and fleet.workers[1].alive
+
+
+def test_kill_during_background_flush():
+    """Same kill, but under the background dispatcher instead of an
+    explicit flush: futures must still all resolve."""
+    reqs = make_reqs(6, seed0=80)
+    refs = single_engine_results(reqs)
+    with EngineFleet(workers=2, fault_plan=FaultPlan(kill_worker_at={0: 1}),
+                     **ENGINE_KW) as fleet:
+        futs = [fleet.submit(r) for r in reqs]
+        out = {r.job_id: f.result(timeout=60.0)
+               for r, f in zip(reqs, futs)}
+    assert_bitwise_equal(out, refs)
+    assert fleet.stats.worker_deaths == 1
+    assert fleet.stats.resolved == 6
+
+
+# ------------------------------------- stragglers + double-resolution guard
+def test_straggler_redispatch_first_result_wins():
+    """Worker 0 sleeps well past the straggler threshold, so the request
+    is duplicated to worker 1, whose result wins; the zombie's late
+    delivery hits the first-wins guard instead of the future."""
+    reqs = make_reqs(1, seed0=100)
+    refs = single_engine_results(reqs)
+    with make_fleet(workers=2,
+                    fault_plan=FaultPlan(delay_worker_s={0: 0.6}),
+                    straggler_after_s=0.05) as fleet:
+        fut = fleet.submit(reqs[0])
+        out = fleet.flush()
+        assert fut.done()
+        assert fleet.stats.straggler_redispatches == 1
+        perm_first = np.array(fut.result(timeout=0).perm, copy=True)
+        # the delayed worker eventually delivers its duplicate
+        assert wait_until(lambda: fleet.stats.duplicate_results >= 1)
+        np.testing.assert_array_equal(fut.result(timeout=0).perm,
+                                      perm_first)
+    assert_bitwise_equal(out, refs)
+    assert fleet.stats.resolved == 1       # resolved exactly once
+
+
+def test_dropped_heartbeats_declare_death_and_zombie_hits_guard():
+    """Worker 0 never heartbeats and sleeps through the timeout: the
+    staleness detector (not the worker) declares it dead and requeues;
+    the zombie thread later delivers into the first-wins guard."""
+    reqs = make_reqs(1, seed0=120)
+    refs = single_engine_results(reqs)
+    with make_fleet(workers=2,
+                    fault_plan=FaultPlan(delay_worker_s={0: 0.6},
+                                         drop_heartbeats=frozenset({0})),
+                    heartbeat_timeout_s=0.05) as fleet:
+        fut = fleet.submit(reqs[0])
+        out = fleet.flush()
+        assert fut.done()
+        assert fleet.stats.worker_deaths == 1
+        assert fleet.stats.requeued == 1
+        assert wait_until(
+            lambda: fleet.stats.duplicate_results >= 1), \
+            "zombie delivery never arrived"
+        assert fleet.stats.resolved == 1
+    assert_bitwise_equal(out, refs)
+
+
+# ------------------------------------------------------------- shared cache
+def test_shared_cache_serves_other_workers_and_survives_deaths():
+    """A digest lives in the coordinator's cache, not the solving
+    worker: it keeps serving the whole fleet after that worker died."""
+    C, M = _instance(6, seed=140)
+    C2, M2 = _instance(6, seed=141)
+    with make_fleet(workers=1,
+                    fault_plan=FaultPlan(kill_worker_at={0: 1})) as fleet:
+        first = fleet.map_one(C, M, algorithm="psa", seed=140, job_id="a")
+        assert fleet.stats.cache_hits == 0
+        # the second distinct request trips the kill counter: worker 0
+        # dies before delivering it, a respawned worker re-solves it
+        fleet.map_one(C2, M2, algorithm="psa", seed=141, job_id="c")
+        assert fleet.stats.worker_deaths == 1
+        assert not fleet.workers[0].alive
+        # worker 0's digest still serves, straight from the coordinator,
+        # with no dispatch at all
+        waves = fleet.stats.dispatched_waves
+        again = fleet.map_one(C, M, algorithm="psa", seed=140, job_id="b")
+        assert fleet.stats.cache_hits == 1
+        assert fleet.stats.dispatched_waves == waves
+        assert again.cached and not first.cached
+        np.testing.assert_array_equal(again.perm, first.perm)
+        assert again.objective == first.objective
+
+
+# --------------------------------------------------------- RM drop-in path
+def test_resource_manager_replay_on_fleet_is_bitwise_equal():
+    """A full RM trace replay over a killed fleet equals the
+    single-engine replay: same mappings, same makespan, no lost jobs."""
+    M = instances.grid_distance_matrix((2, 2, 2))
+    specs = [JobSpec(job_id=f"job{i}", size=4 + 2 * (i % 2), run_s=0.01,
+                     arrival_s=0.0, seed=i) for i in range(6)]
+
+    def replay(engine):
+        rm = ResourceManager(M, engine, candidates=2,
+                             policies=("compact", "scatter"))
+        for s in specs:
+            rm.submit_job(s)
+        rep = rm.run()
+        return rep, {h.job_id: (h.response.perm.tolist(),
+                                h.response.objective) for h in rm.handles}
+
+    rep_single, maps_single = replay(MappingEngine(warm_start=False,
+                                                   **ENGINE_KW))
+    with make_fleet(workers=2,
+                    fault_plan=FaultPlan(kill_worker_at={0: 3})) as fleet:
+        rep_fleet, maps_fleet = replay(fleet)
+    assert rep_fleet.jobs == rep_single.jobs == len(specs)
+    assert maps_fleet == maps_single
+    assert rep_fleet.makespan_s == rep_single.makespan_s
+    assert fleet.stats.worker_deaths == 1
+    # the killed wave re-solved on the survivor; all other waves stayed
+    # single-dispatch
+    assert rep_fleet.max_batches_per_wave <= 2
+    assert rep_single.max_batches_per_wave <= 1
+
+
+# ------------------------------------------------------ property-based sweep
+def _random_stream_random_kills(case_seed):
+    """Random request streams x random kill schedules: every future
+    resolves exactly once with a valid permutation, results match the
+    single engine bitwise, and cluster occupancy is conserved after
+    recovery."""
+    rng = np.random.default_rng(case_seed)
+    workers = int(rng.integers(1, 4))
+    nreq = int(rng.integers(2, 9))
+    kill = {w: int(rng.integers(0, 5)) for w in range(workers)
+            if rng.random() < 0.5}
+    sizes = [int(rng.integers(2, 7)) for _ in range(nreq)]
+    cluster = ClusterState(instances.grid_distance_matrix((2, 2, 2)))
+    free0 = cluster.num_free
+    reqs, allocs = [], []
+    for i, n in enumerate(sizes):
+        alloc = cluster.allocate(f"p{i}", n)
+        if alloc is None:                 # cluster full: recycle capacity
+            for a in allocs:
+                cluster.release(a)
+            allocs = []
+            alloc = cluster.allocate(f"p{i}", n)
+        allocs.append(f"p{i}")
+        C, _ = _instance(n, seed=1000 + i)
+        reqs.append(MapRequest(job_id=f"p{i}", C=C, M=alloc.M_sub,
+                               algorithm="psa", seed=i))
+    refs = single_engine_results(reqs)
+    with make_fleet(workers=workers,
+                    fault_plan=FaultPlan(kill_worker_at=kill)) as fleet:
+        futs = [fleet.submit(r) for r in reqs]
+        out = fleet.flush()
+        assert all(f.done() for f in futs)
+    # no future lost, none resolved twice
+    assert fleet.stats.resolved == nreq
+    assert fleet.stats.failed == 0
+    assert fleet.stats.resolved + fleet.stats.cache_hits >= nreq
+    assert_bitwise_equal(out, refs)
+    for r in reqs:                        # every result a real permutation
+        perm = out[r.job_id].perm
+        assert sorted(perm.tolist()) == list(range(r.C.shape[0]))
+    # occupancy conserved: release everything still held, back to empty
+    for a in allocs:
+        cluster.release(a)
+    assert cluster.num_free == free0
+
+
+@pytest.mark.slow
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=6, deadline=None)
+def test_random_streams_random_kills_lose_nothing(case_seed):
+    _random_stream_random_kills(case_seed)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("case_seed", [7, 1234, 99991])
+def test_random_streams_random_kills_fixed_seeds(case_seed):
+    """Deterministic fallback sweep so the property holds even where
+    hypothesis is not installed."""
+    _random_stream_random_kills(case_seed)

@@ -1,5 +1,8 @@
 """Batched mapping engine: batch==sequential equality, cache, padding,
-async futures/flusher, deadline policy, and warm starts."""
+async futures/flusher, stop-path races, deadline policy, warm starts."""
+import threading
+import time
+
 import numpy as np
 import pytest
 import jax
@@ -308,6 +311,66 @@ def test_stop_flushes_pending_futures():
     eng.stop()                     # drains the queue; future must resolve
     assert fut.done()
     assert sorted(fut.result().perm.tolist()) == list(range(10))
+
+
+def test_stop_claims_queue_while_flusher_is_mid_flush():
+    """Regression: stop() must claim the queue under the lock *before*
+    joining the flusher.  The pre-fix ordering joined first, so a
+    request submitted while the flusher was busy inside _flush_pending
+    stayed stranded in the queue until the join returned -- this test
+    holds the flusher mid-flush and fails on that ordering."""
+    eng = _engine(flush_deadline_ms=5.0, max_batch=64)
+    gate, release = threading.Event(), threading.Event()
+    orig = eng._flush_pending
+
+    def gated(pending, raise_errors=False):
+        if pending:
+            gate.set()
+            release.wait(timeout=60)
+        return orig(pending, raise_errors=raise_errors)
+
+    eng._flush_pending = gated
+    eng.start()
+    C, M = _instance(8, 200)
+    f1 = eng.submit(MapRequest(job_id="a", C=C, M=M))
+    assert gate.wait(timeout=60)       # flusher now holds f1 in flight
+    gate.clear()
+    C2, M2 = _instance(8, 201)
+    f2 = eng.submit(MapRequest(job_id="b", C=C2, M=M2))
+    stopper = threading.Thread(target=eng.stop)
+    stopper.start()
+    # stop() is blocked joining the gated flusher, yet b is already
+    # claimed out of the queue -- the old code left it there
+    deadline = time.monotonic() + 10.0
+    while eng._queue and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert not eng._queue, "stop() left a submitted request in the queue"
+    assert not eng.running             # later submitters flush inline
+    release.set()
+    stopper.join(timeout=120)
+    assert not stopper.is_alive()
+    assert f1.done() and f2.done()
+    assert sorted(f1.result().perm.tolist()) == list(range(8))
+    assert sorted(f2.result().perm.tolist()) == list(range(8))
+
+
+def test_start_stop_interleave_resolves_everything():
+    """Repeated start/submit/stop cycles: no hang, no stranded future,
+    no leaked flusher thread, and the engine restarts cleanly."""
+    eng = _engine(flush_deadline_ms=60_000.0, max_batch=64)
+    futs = []
+    for i in range(3):
+        eng.start()
+        assert eng.running
+        C, M = _instance(8, 210 + i)
+        futs.append(eng.submit(MapRequest(job_id=f"s{i}", C=C, M=M)))
+        eng.stop()
+        assert not eng.running
+    assert all(f.done() for f in futs)
+    for f in futs:
+        assert sorted(f.result().perm.tolist()) == list(range(8))
+    assert not any(t.name == "mapper-flusher" and t.is_alive()
+                   for t in threading.enumerate())
 
 
 def test_map_one_blocks_on_running_flusher():

@@ -84,3 +84,84 @@ def test_default_flows_properties():
     np.testing.assert_array_equal(C, default_flows(6, seed=1))
     assert not np.array_equal(C, default_flows(6, seed=2))
     assert default_flows(1).shape == (1, 1)
+
+
+# ------------------------------------------------------------- edge cases
+def _replay(jobs, num_nodes=8):
+    from repro.core import instances
+    from repro.serve import MappingEngine, ResourceManager
+    from _fixtures import SA_SMALL
+    M = instances.grid_distance_matrix((2, 2, 2))[:num_nodes, :num_nodes]
+    eng = MappingEngine(buckets=(8,), sa_cfg=SA_SMALL, polish_rounds=0,
+                        num_processes=2, warm_start=False)
+    rm = ResourceManager(M, eng, candidates=1, policies=("compact",))
+    for j in jobs:
+        rm.submit_job(j)
+    rep = rm.run()
+    return rm, rep
+
+
+def test_zero_duration_jobs_parse_and_replay():
+    """Run time 0 is a legal SWF value (instant jobs): the parser keeps
+    it as 0.0 rather than treating it as unknown, and a replay finishes
+    the job the instant it starts without wedging the schedule."""
+    text = "\n".join([
+        "1 0 -1 0 4 " + " ".join(["-1"] * 13),
+        "2 5 -1 10 4 " + " ".join(["-1"] * 13),
+    ])
+    jobs = parse_swf(text)
+    assert [j.run_s for j in jobs] == [0.0, 10.0]
+    rm, rep = _replay(jobs)
+    assert rep.jobs == 2
+    zero = next(h for h in rm.handles if h.spec.job_id == "swf1")
+    assert zero.finish_s == zero.start_s        # instant, still mapped
+    assert zero.response is not None
+    assert sorted(zero.response.perm.tolist()) == list(range(4))
+    # negative run time with no requested-time fallback clamps to 0
+    clamped = parse_swf("3 0 -1 -1 4 " + " ".join(["-1"] * 13) + "\n")
+    assert clamped[0].run_s == 0.0
+
+
+def test_jobs_larger_than_cluster_are_rejected_not_lost():
+    """The parser keeps oversized jobs (it cannot know the cluster);
+    admission is where they fail, loudly -- and the benchmark's trace
+    loader filters them out up front instead of crashing the replay."""
+    jobs = parse_swf("\n".join([
+        "1 0 -1 5 4 " + " ".join(["-1"] * 13),
+        "2 0 -1 5 4096 " + " ".join(["-1"] * 13),
+    ]))
+    assert [j.size for j in jobs] == [4, 4096]   # parser keeps both
+    from repro.core import instances
+    from repro.serve import MappingEngine, ResourceManager
+    from _fixtures import SA_SMALL
+    M = instances.grid_distance_matrix((2, 2, 2))
+    eng = MappingEngine(buckets=(8,), sa_cfg=SA_SMALL, polish_rounds=0,
+                        num_processes=2)
+    rm = ResourceManager(M, eng, candidates=1, policies=("compact",))
+    rm.submit_job(jobs[0])
+    with pytest.raises(ValueError, match=r"not in \[1, 8\]"):
+        rm.submit_job(jobs[1])
+    assert rm.run().jobs == 1                    # the fitting job replays
+    # format_swf round-trips the oversized spec unchanged
+    assert parse_swf(format_swf([jobs[1]]))[0].size == 4096
+
+
+def test_out_of_order_submit_times_replay_in_arrival_order():
+    """SWF archives are usually sorted by submit time, but nothing
+    guarantees it: the parser preserves per-line arrival times and the
+    manager's arrival heap replays them correctly anyway."""
+    text = "\n".join([
+        "1 20 -1 5 4 " + " ".join(["-1"] * 13),   # arrives last
+        "2 0 -1 5 4 " + " ".join(["-1"] * 13),
+        "3 10 -1 5 4 " + " ".join(["-1"] * 13),
+    ])
+    jobs = parse_swf(text)
+    assert [j.arrival_s for j in jobs] == [20.0, 0.0, 10.0]
+    rm, rep = _replay(jobs)
+    assert rep.jobs == 3
+    for h in rm.handles:
+        assert h.start_s is not None and h.start_s >= h.arrival_s
+    by_id = {h.spec.job_id: h for h in rm.handles}
+    # swf2 (t=0) must not wait for the later arrivals to be admitted
+    assert by_id["swf2"].start_s <= by_id["swf3"].start_s \
+        <= by_id["swf1"].start_s
