@@ -94,9 +94,11 @@ def render_table(data: dict) -> str:
     sec = data.get("fleet")
     if sec:
         cfg = sec.get("config", {})
+        kill_word = ("SIGKILLed" if cfg.get("sigkill") else "killed")
         what = (f"{cfg.get('jobs', '?')} jobs, "
-                f"{cfg.get('workers', '?')} workers, "
-                f"worker 0 killed mid-wave")
+                f"{cfg.get('workers', '?')} "
+                f"{cfg.get('transport', 'thread')} workers, "
+                f"worker 0 {kill_word} mid-wave")
         kill = sec.get("fleet_kill")
         if kill:
             # baseline: one engine; this path: the fleet surviving a
@@ -106,6 +108,24 @@ def render_table(data: dict) -> str:
                 _fmt(sec.get("single", {}).get("mapped_jobs_per_s"), 2),
                 _fmt(kill.get("mapped_jobs_per_s"), 2),
                 _fmt(sec.get("recovered_ratio"))))
+    sec = data.get("chaos")
+    if sec:
+        what = (f"{sec.get('fault', '?')} fault, "
+                f"{sec.get('transport', '?')} transport")
+        # baseline: completed jobs the crashed run finished; this path:
+        # jobs ResourceManager.recover reproduced from the journal
+        n = sec.get("recovered_completed_jobs")
+        rows.append((
+            "chaos: journal-recovered completed jobs", what,
+            _fmt(n, 0), _fmt(n, 0),
+            "1.00" if sec.get("journal_recovery_equal") else "--"))
+        lat = sec.get("recovery_latency_s")
+        rows.append((
+            "chaos: kill -> first requeued result (s)", what,
+            "--", _fmt(lat), "--"))
+        rows.append((
+            "chaos: degraded-response rate", what,
+            "0.00", _fmt(sec.get("degraded_rate")), "--"))
     sec = data.get("solver_hotloop")
     if sec:
         cfg = sec.get("config", {})

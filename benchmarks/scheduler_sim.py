@@ -44,6 +44,8 @@ from __future__ import annotations
 
 import argparse
 import heapq
+import os
+import tempfile
 import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
@@ -54,7 +56,7 @@ from repro.core import annealing, instances
 from repro.serve.cluster import ClusterState
 from repro.serve.fleet import EngineFleet, FaultPlan
 from repro.serve.mapper import MapRequest, MappingEngine
-from repro.serve.rm import ResourceManager
+from repro.serve.rm import ResourceManager, RMJournal
 from repro.serve.trace import parse_swf, synthetic_trace
 
 try:                                     # package form (benchmarks.run)
@@ -243,11 +245,17 @@ def run_replay(specs, M, mesh, sa_cfg, buckets, args) -> Dict[str, object]:
 
 def run_fleet_replay(specs, M, sa_cfg, buckets, args) -> Dict[str, object]:
     """Fleet mode (``--workers N``): replay the same co-optimized trace
-    through a single engine and through an :class:`EngineFleet`; with
-    ``--kill-one``, replay a third time while worker 0 is killed
-    mid-wave.  Proves (by assertion, not by eye) that no request is
-    lost and every run's mappings are bitwise-identical -- the kill
-    only costs wall time for the re-solve."""
+    through a single engine and through an :class:`EngineFleet` (thread
+    or subprocess workers via ``--transport``); with ``--kill-one``,
+    replay a third time while worker 0 is killed mid-wave (``--sigkill``
+    makes that a real SIGKILL to a subprocess worker).  Proves (by
+    assertion, not by eye) that no request is lost and every
+    non-degraded mapping is bitwise-identical -- the kill only costs
+    wall time for the re-solve.  The kill run writes an
+    :class:`~repro.serve.rm.RMJournal` and is replayed through
+    :meth:`ResourceManager.recover`; the chaos metrics (degraded rate,
+    recovery latency, journal-replay equality) land under ``"chaos"``.
+    """
     def engine_kwargs():
         # warm_start off everywhere: fleet determinism requires solves to
         # be pure functions of the request (see serve/fleet.py), so the
@@ -260,24 +268,33 @@ def run_fleet_replay(specs, M, sa_cfg, buckets, args) -> Dict[str, object]:
     # the kill provably exercises the requeue path (some of a dispatched
     # wave delivered, the rest recovered by another worker).
     kill_at = args.candidates + 1
+    if args.sigkill:
+        plan = FaultPlan(sigkill_worker_at={0: kill_at})
+    else:
+        plan = FaultPlan(kill_worker_at={0: kill_at})
     runs = [("single", lambda: MappingEngine(**engine_kwargs()))]
     runs.append(("fleet", lambda: EngineFleet(
-        workers=args.workers, **engine_kwargs())))
+        workers=args.workers, transport=args.transport,
+        **engine_kwargs())))
     if args.kill_one:
         runs.append(("fleet_kill", lambda: EngineFleet(
-            workers=args.workers,
-            fault_plan=FaultPlan(kill_worker_at={0: kill_at}),
-            **engine_kwargs())))
+            workers=args.workers, transport=args.transport,
+            fault_plan=plan, **engine_kwargs())))
 
+    journal_path = os.path.join(
+        tempfile.mkdtemp(prefix="rm-journal-"), "rm.jsonl")
     out: Dict[str, object] = {}
     mappings: Dict[str, Dict[str, tuple]] = {}
+    managers: Dict[str, ResourceManager] = {}
     for name, mk in runs:
         engine = mk()
         try:
-            rm = ResourceManager(M, engine, candidates=args.candidates,
-                                 policies=tuple(args.policies),
-                                 algorithm=args.algorithm,
-                                 deadline_ms=args.deadline_ms)
+            rm = ResourceManager(
+                M, engine, candidates=args.candidates,
+                policies=tuple(args.policies),
+                algorithm=args.algorithm,
+                deadline_ms=args.deadline_ms,
+                journal=journal_path if name == "fleet_kill" else None)
             for s in specs:
                 rm.submit_job(s)
             t0 = time.perf_counter()
@@ -286,6 +303,9 @@ def run_fleet_replay(specs, M, sa_cfg, buckets, args) -> Dict[str, object]:
         finally:
             if isinstance(engine, EngineFleet):
                 engine.stop()
+        if rm._journal is not None:
+            rm._journal.close()
+        managers[name] = rm
         # zero lost requests: every job finished with a mapping
         assert rep.jobs == len(specs), (
             f"{name}: {len(specs) - rep.jobs} jobs never finished")
@@ -297,9 +317,11 @@ def run_fleet_replay(specs, M, sa_cfg, buckets, args) -> Dict[str, object]:
         assert rep.max_batches_per_wave <= limit, (
             f"{name}: a candidate wave took "
             f"{rep.max_batches_per_wave} solver batches (limit {limit})")
+        # degraded responses (deadline fallbacks) are flagged and exempt
+        # from the bitwise contract; everything else must match exactly
         mappings[name] = {
             h.job_id: (h.response.perm.tolist(), h.response.objective)
-            for h in rm.handles}
+            for h in rm.handles if not h.response.degraded}
         entry = {**rep.asdict(), "wall_s": wall,
                  "mapped_jobs_per_s": len(specs) / max(wall, 1e-9)}
         if isinstance(engine, EngineFleet):
@@ -310,7 +332,10 @@ def run_fleet_replay(specs, M, sa_cfg, buckets, args) -> Dict[str, object]:
                          duplicate_results=st.duplicate_results,
                          dispatched_waves=st.dispatched_waves,
                          solver_batches=st.solver_batches,
-                         cache_hits=st.cache_hits)
+                         cache_hits=st.cache_hits,
+                         degraded=st.degraded,
+                         breaker_trips=st.breaker_trips,
+                         first_recovery_s=st.first_recovery_s)
         out[name] = entry
         extra = ""
         if isinstance(engine, EngineFleet):
@@ -320,10 +345,14 @@ def run_fleet_replay(specs, M, sa_cfg, buckets, args) -> Dict[str, object]:
               f"{entry['mapped_jobs_per_s']:6.2f} mapped-jobs/s, "
               f"wall {wall:5.1f} s{extra}")
     # bitwise equality: same perm and objective per job across every run
+    # (degraded mappings, if a --deadline-ms was set, are exempt but
+    # counted)
     base = mappings["single"]
     for name, got in mappings.items():
-        assert got == base, (
-            f"{name}: mappings differ from the single-engine replay")
+        for jid, pair in got.items():
+            assert pair == base[jid], (
+                f"{name}: mapping for {jid} differs from the "
+                f"single-engine replay")
     out["bitwise_equal"] = True
     out["zero_lost"] = True
     if args.kill_one:
@@ -337,7 +366,44 @@ def run_fleet_replay(specs, M, sa_cfg, buckets, args) -> Dict[str, object]:
               f"requests requeued, throughput "
               f"{out['recovered_ratio']:.2f}x of the single engine, "
               f"results bitwise-equal")
+        out["chaos"] = _chaos_metrics(M, journal_path,
+                                      managers["fleet_kill"], args)
     return out
+
+
+def _chaos_metrics(M, journal_path: str, rm_kill: ResourceManager,
+                   args) -> Dict[str, object]:
+    """Chaos accounting for the kill run: degraded-response rate,
+    recovery latency (kill -> first requeued request resolved), and
+    journal-recovery equality -- :meth:`ResourceManager.recover` replayed
+    from the kill run's journal must reproduce its exact completed-job
+    set and ``ClusterState`` occupancy."""
+    st = rm_kill.engine.stats
+    degraded_rate = st.degraded / max(st.resolved, 1)
+    rec = ResourceManager.recover(M, journal_path)
+    done_orig = sorted(h.job_id for h in rm_kill.handles if h.done())
+    done_rec = sorted(h.job_id for h in rec.handles if h.done())
+    occupancy_equal = (rec.cluster.num_free == rm_kill.cluster.num_free
+                       and rec.clock == rm_kill.clock)
+    assert done_rec == done_orig, (
+        "journal recovery lost or invented completed jobs")
+    assert occupancy_equal, "journal recovery occupancy mismatch"
+    chaos = {
+        "transport": args.transport,
+        "fault": "sigkill" if args.sigkill else "exit",
+        "degraded_responses": st.degraded,
+        "degraded_rate": degraded_rate,
+        "recovery_latency_s": st.first_recovery_s,
+        "journal_events": len(RMJournal.read_events(journal_path)),
+        "journal_recovery_equal": True,
+        "recovered_completed_jobs": len(done_rec),
+    }
+    lat = ("n/a" if st.first_recovery_s is None
+           else f"{st.first_recovery_s * 1e3:.0f} ms")
+    print(f"chaos: degraded rate {degraded_rate:.1%}, recovery latency "
+          f"{lat}, journal recovery reproduced "
+          f"{len(done_rec)}/{len(done_orig)} completed jobs exactly")
+    return chaos
 
 
 def main():
@@ -381,7 +447,17 @@ def main():
     ap.add_argument("--kill-one", action="store_true",
                     help="with --workers: replay a third time while worker "
                          "0 is killed mid-wave, asserting zero lost "
-                         "requests and recovered throughput")
+                         "requests and recovered throughput; the kill run "
+                         "is journaled and replayed through "
+                         "ResourceManager.recover (chaos metrics)")
+    ap.add_argument("--transport", choices=("thread", "subprocess"),
+                    default="thread",
+                    help="fleet worker backing: in-process threads "
+                         "(default) or isolated subprocess workers")
+    ap.add_argument("--sigkill", action="store_true",
+                    help="with --kill-one --transport subprocess: the "
+                         "worker SIGKILLs itself (real hard death) "
+                         "instead of exiting cleanly")
     ap.add_argument("--mesh-shape", type=int, default=None, metavar="N",
                     help="shard bucket waves over an N-device instance "
                          "mesh (CPU: set XLA_FLAGS="
@@ -412,6 +488,11 @@ def main():
         ap.error("--sizes and --weights must have the same length")
     if args.kill_one and args.workers is None:
         ap.error("--kill-one requires --workers N")
+    if args.sigkill and not args.kill_one:
+        ap.error("--sigkill requires --kill-one")
+    if args.sigkill and args.transport != "subprocess":
+        ap.error("--sigkill requires --transport subprocess (threads "
+                 "cannot be SIGKILLed individually)")
     if args.workers is not None and args.stream:
         ap.error("--workers is a replay mode; drop --stream")
     if args.workers is not None and args.workers < 1:
@@ -440,16 +521,20 @@ def main():
         buckets = tuple(sorted(set(
             max(4, int(2 ** np.ceil(np.log2(max(s.size, 2)))))
             for s in specs)))
+        kill_word = " SIGKILLing" if args.sigkill else ", killing"
         print(f"fleet replay: {len(specs)} jobs over {M.shape[0]} nodes, "
-              f"{args.workers} workers"
-              + (", killing worker 0 mid-wave" if args.kill_one else ""))
+              f"{args.workers} {args.transport} workers"
+              + (f"{kill_word} worker 0 mid-wave" if args.kill_one else ""))
         out = run_fleet_replay(specs, M, sa_cfg, buckets, args)
+        chaos = out.pop("chaos", None)
         if args.json:
             payload = {
                 "config": {"jobs": len(specs), "grid": list(args.grid),
                            "trace": args.trace,
                            "workers": args.workers,
+                           "transport": args.transport,
                            "kill_one": args.kill_one,
+                           "sigkill": args.sigkill,
                            "kill_at": args.candidates + 1,
                            "candidates": args.candidates,
                            "policies": list(args.policies),
@@ -459,7 +544,11 @@ def main():
                 **out,
             }
             common.write_bench_json(args.json, "fleet", payload)
-            print(f"wrote {args.json} [fleet]")
+            sections = "[fleet]"
+            if chaos is not None:
+                common.write_bench_json(args.json, "chaos", chaos)
+                sections = "[fleet, chaos]"
+            print(f"wrote {args.json} {sections}")
         if args.dry_run:
             print("dry-run OK")
         return

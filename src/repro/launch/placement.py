@@ -116,7 +116,9 @@ class PlacementService:
     instead of a single ``MappingEngine`` -- the submit/flush surface is
     identical, placements shard across the workers, and a worker death
     (injectable through ``fault_plan`` for tests) requeues its in-flight
-    placements instead of losing them.  The fleet runs with
+    placements instead of losing them.  ``transport="subprocess"`` runs
+    those workers as isolated child processes (crash/OOM/GIL isolation;
+    see ``repro.serve.transport``).  The fleet runs with
     ``warm_start=False`` so results stay bitwise-identical to a
     single-engine service with warm starts disabled.
     """
@@ -127,6 +129,7 @@ class PlacementService:
                  sa_cfg: Optional[annealing.SAConfig] = None,
                  ga_cfg: Optional[genetic.GAConfig] = None,
                  workers: int = 0,
+                 transport: str = "thread",
                  fault_plan: Optional[FaultPlan] = None):
         self._mesh = mesh
         self._axis = instance_axis
@@ -134,6 +137,7 @@ class PlacementService:
         self._sa_cfg = sa_cfg or _FAST_SA
         self._ga_cfg = ga_cfg or _FAST_GA
         self._workers = int(workers)
+        self._transport = transport
         self._fault_plan = fault_plan
         self._engine: Optional[Union[MappingEngine, EngineFleet]] = None
 
@@ -144,9 +148,16 @@ class PlacementService:
                 num_processes=self._num_processes, sa_cfg=self._sa_cfg,
                 ga_cfg=self._ga_cfg)
             if self._workers >= 1:
+                if self._transport == "subprocess":
+                    if self._mesh is not None:
+                        raise ValueError("subprocess fleet workers cannot "
+                                         "share the service's device mesh")
+                    meshes = None
+                else:
+                    meshes = None if self._mesh is None else [self._mesh]
                 self._engine = EngineFleet(
-                    workers=self._workers, fault_plan=self._fault_plan,
-                    meshes=None if self._mesh is None else [self._mesh],
+                    workers=self._workers, transport=self._transport,
+                    fault_plan=self._fault_plan, meshes=meshes,
                     instance_axis=self._axis, **kwargs)
             else:
                 self._engine = MappingEngine(
@@ -214,8 +225,21 @@ class PlacementService:
     @staticmethod
     def result(future: MapFuture,
                timeout: Optional[float] = None) -> PlacementResult:
-        """Resolve a :meth:`submit` future into a :class:`PlacementResult`."""
-        return _result_from_response(future.result(timeout))
+        """Resolve a :meth:`submit` future into a :class:`PlacementResult`.
+
+        On timeout the future is *cancelled* before re-raising: an
+        abandoned request must not sit in the engine's queue forever
+        with nobody to collect it.  If the real result lands in the
+        instant between the timeout and the cancel, the cancel loses the
+        claim race and the (still readable) result is returned instead.
+        """
+        try:
+            resp = future.result(timeout)
+        except TimeoutError:
+            if future.cancel():
+                raise
+            resp = future.result(timeout=0)   # lost the race: result stands
+        return _result_from_response(resp)
 
     def solve_batch(self,
                     instances: Sequence[Tuple[np.ndarray, np.ndarray]],

@@ -10,22 +10,25 @@ the old-name -> new-name migration table.
 """
 from repro.serve.cluster import Allocation, Candidate, ClusterState
 from repro.serve.fleet import EngineFleet, EngineWorker, FaultPlan, FleetStats
-from repro.serve.mapper import (DeadlinePolicy, MapFuture, MappingEngine,
-                                MapRequest, MapResponse)
+from repro.serve.mapper import (DeadlinePolicy, MapCancelled, MapFuture,
+                                MappingEngine, MapRequest, MapResponse,
+                                QueueFull)
 from repro.serve.rm import (JobHandle, JobSpec, ReplayReport,
-                            ResourceManager, default_flows, dilation_score,
-                            objective_score)
+                            ResourceManager, RMJournal, default_flows,
+                            dilation_score, objective_score)
 from repro.serve.trace import format_swf, parse_swf, synthetic_trace
+from repro.serve.transport import SubprocessWorker, WorkerTransport
 
 __all__ = [
     # control plane (the front door)
-    "ResourceManager", "JobSpec", "JobHandle", "ReplayReport",
+    "ResourceManager", "RMJournal", "JobSpec", "JobHandle", "ReplayReport",
     "default_flows", "objective_score", "dilation_score",
     # mapping engine
     "MappingEngine", "MapRequest", "MapResponse", "MapFuture",
-    "DeadlinePolicy",
+    "DeadlinePolicy", "QueueFull", "MapCancelled",
     # distributed fleet (drop-in engine with failure recovery)
     "EngineFleet", "EngineWorker", "FaultPlan", "FleetStats",
+    "WorkerTransport", "SubprocessWorker",
     # cluster model
     "ClusterState", "Allocation", "Candidate",
     # traces

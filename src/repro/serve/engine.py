@@ -8,8 +8,9 @@ production mesh with the KV cache sequence-sharded (see DESIGN.md S3).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +27,11 @@ class ServeConfig:
     temperature: float = 0.0       # 0 => greedy
     eos_id: int = 1
     seed: int = 0
+    # Hard wall-clock budget for one generate() call: decode stops at the
+    # first step past the deadline and returns what was produced so far
+    # (eos-padded) -- a degraded-but-on-time answer, mirroring the mapping
+    # service's deadline enforcement.  None = no wall.
+    deadline_ms: Optional[float] = None
 
 
 @dataclass
@@ -41,6 +47,7 @@ class Engine:
 
     def generate(self, tokens: np.ndarray) -> np.ndarray:
         """tokens (B, S) -> generated (B, max_new_tokens)."""
+        t0 = time.monotonic()
         b, s = tokens.shape
         logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(tokens)},
                                       cache_len=s + self.cfg.max_new_tokens)
@@ -53,6 +60,10 @@ class Engine:
             done |= np.asarray(cur) == self.cfg.eos_id
             if done.all():
                 break
+            if (self.cfg.deadline_ms is not None
+                    and (time.monotonic() - t0) * 1000.0
+                    >= self.cfg.deadline_ms):
+                break                  # deadline wall: degrade, don't stall
             key, sub = jax.random.split(key)
             logits, cache = self._decode(self.params, cache,
                                          {"tokens": cur[:, None]},

@@ -10,43 +10,77 @@ real RM cannot stall its queue because one solver process died mid-wave.
 :class:`~repro.serve.rm.ResourceManager` /
 ``launch.placement.PlacementService`` unchanged:
 
-  1. The coordinator owns N :class:`EngineWorker` threads, each wrapping
-     a private ``MappingEngine`` (optionally with its own device mesh).
-     Queued requests group by (bucket, algorithm, tier) exactly like the
-     single engine, and each wave is dispatched to the live worker with
-     the fewest outstanding requests (ties: least recently assigned) --
-     the ``weiyu0824/Idunno`` coordinator's fewest-resources-first rule.
+  1. The coordinator owns N workers behind the
+     :class:`~repro.serve.transport.WorkerTransport` seam: thread-backed
+     :class:`EngineWorker` (default -- one private ``MappingEngine`` per
+     worker thread, optionally with its own device mesh) or
+     process-backed :class:`~repro.serve.transport.SubprocessWorker`
+     (``transport="subprocess"`` -- a spawned interpreter per worker,
+     real isolation from crashes, OOM kills, and the GIL).  Queued
+     requests group by (bucket, algorithm, tier) exactly like the single
+     engine, and each wave is dispatched to the live worker with the
+     fewest outstanding requests (ties: least recently assigned) -- the
+     ``weiyu0824/Idunno`` coordinator's fewest-resources-first rule.
   2. Failure recovery: a worker is dead when it says so (injected
-     faults), when its wave raises unexpectedly at the thread boundary,
-     or when its heartbeat goes stale (``heartbeat_timeout_s``).  Every
-     unresolved request a dead worker held is requeued and re-dispatched
-     to a surviving worker; when none survive, a fresh worker is
-     respawned.  A :class:`~repro.serve.mapper.MapFuture` is therefore
-     never lost -- and a first-result-wins guard makes sure it is never
-     resolved twice, even when a declared-dead "zombie" worker delivers
-     late.
-  3. Straggler re-dispatch: a request in flight longer than
+     faults), when its wave raises unexpectedly at the transport
+     boundary (thread exception, pipe EOF, corrupt frame stream), or
+     when its heartbeat goes stale (``heartbeat_timeout_s``; a worker
+     that has not yet delivered its first result gets
+     ``compiling_grace_s`` on top, so a cold XLA compile is never
+     mistaken for a hang).  Every unresolved request a dead worker held
+     is requeued and re-dispatched to a surviving worker; when none
+     survive, a fresh worker is respawned under exponential backoff
+     with jitter (immediate respawn would hot-spin when worker startup
+     itself crashes).  A :class:`~repro.serve.mapper.MapFuture` is
+     therefore never lost -- and a first-result-wins guard makes sure it
+     is never resolved twice, even when a declared-dead "zombie" worker
+     delivers late.
+  3. Deadline enforcement: a request carrying ``deadline_ms`` is a hard
+     wall, not a hint.  If no worker has answered when it expires, the
+     coordinator resolves the future itself with a *degraded* mapping --
+     the last known permutation for the same (order, system graph) from
+     the shape tier if one exists and is no worse than identity
+     (``degrade_reason="deadline_shape_cache"``), else the deterministic
+     identity/as-allocated placement (``"deadline_identity"``) -- flagged
+     ``MapResponse.degraded=True``.  The caller provably never blocks
+     past its deadline (plus one monitor tick); the late real result is
+     eaten by the first-result-wins guard but still warms the shared
+     cache for the next identical request.
+  4. A circuit breaker routes dispatch around a worker after
+     ``breaker_failures`` *consecutive* request failures
+     (``breaker_cooldown_s`` of open state, then half-open: one success
+     resets it) -- a worker whose device wedged into a failing state
+     stops eating waves other workers would serve.
+  5. Straggler re-dispatch: a request in flight longer than
      ``straggler_after_s`` is duplicated to a second worker; the first
      result wins (``stats.duplicate_results`` counts the losers).
-  4. A shared exact-digest cache tier sits above the workers: once any
+  6. A shared exact-digest cache tier sits above the workers: once any
      worker solved an instance, every later identical request is served
      by the coordinator without a dispatch -- a warm entry anywhere
      serves the whole fleet (workers keep their private caches too).
-  5. :class:`FaultPlan` is the injection seam that makes all of this
+  7. Admission control: with ``max_pending`` set, a submit that finds
+     that many requests queued+in flight is rejected with an
+     already-failed :class:`~repro.serve.mapper.QueueFull` future --
+     explicit backpressure instead of unbounded queue growth.
+  8. :class:`FaultPlan` is the injection seam that makes all of this
      deterministic and testable: ``kill_worker_at`` kills a worker after
      it completed exactly k requests (count-based, not timing-based),
-     ``delay_worker_s`` slows a worker down, ``drop_heartbeats`` silences
-     one so the staleness detector -- not the worker -- declares the
-     death.
+     ``delay_worker_s`` slows a worker down, ``drop_heartbeats``
+     silences one so the staleness detector -- not the worker --
+     declares the death.  Subprocess workers add the *real* fault
+     modes: ``sigkill_worker_at`` (SIGKILL, no cleanup),
+     ``sigstop_worker_at`` (a genuine zombie process), and
+     ``corrupt_stdout_at`` (garbage on the frame stream).
 
 Determinism: workers default to ``warm_start=False`` so every solve is a
 pure function of the request alone -- history-dependent shape-tier warm
 starts would otherwise let sharding order, kills, and straggler
 duplicates change results.  With that default the fleet is
 bitwise-identical to a single ``MappingEngine(warm_start=False)`` on any
-request set, for any worker count, under any :class:`FaultPlan` that
-leaves at least the respawn path alive (``tests/test_fleet.py`` pins
-this).
+request set, for any worker count and either transport, under any
+:class:`FaultPlan` that leaves the respawn path alive
+(``tests/test_fleet.py`` and ``tests/test_transport.py`` pin this);
+only deadline-degraded responses (flagged) are exempt.
 
 Synchronous use mirrors the engine: without :meth:`EngineFleet.start`
 (no dispatcher thread), :meth:`EngineFleet.flush` drives dispatch,
@@ -58,17 +92,29 @@ stopped fleet does not accept further work.
 """
 from __future__ import annotations
 
+import random
 import threading
 import time
-from collections import OrderedDict, deque
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import (Callable, Dict, List, Mapping, Optional, Sequence, Set,
                     Tuple)
 
 import numpy as np
 
-from repro.serve.mapper import (MapFuture, MappingEngine, MapRequest,
-                                MapResponse, validate_request)
+from repro.serve.mapper import (MapCancelled, MapFuture, MappingEngine,
+                                MapRequest, MapResponse, QueueFull,
+                                validate_request)
+from repro.serve.transport import (DEFAULT_HEARTBEAT_INTERVAL_S,
+                                   SubprocessWorker, WorkerBase)
+
+TRANSPORTS = ("thread", "subprocess")
+
+# Subprocess workers heartbeat from a dedicated child thread, so staleness
+# detection is safe to enable by default: generous timeout, plus a first-
+# delivery grace that covers a cold XLA compile.
+DEFAULT_SUBPROCESS_HEARTBEAT_TIMEOUT_S = 15.0
+DEFAULT_SUBPROCESS_COMPILING_GRACE_S = 120.0
 
 
 @dataclass(frozen=True)
@@ -79,14 +125,24 @@ class FaultPlan:
     exactly ``k`` requests -- before delivering the (k+1)-th, even
     mid-wave -- leaving its remaining assignments to the requeue path.
     Count-based, so the same plan on the same request stream kills at
-    the same request every run.
+    the same request every run.  On the thread transport the worker
+    thread exits; on the subprocess transport the child ``sys.exit``\\ s
+    (clean EOF on the pipe).
+
+    ``sigkill_worker_at`` / ``sigstop_worker_at`` / ``corrupt_stdout_at``
+    (subprocess transport only; same count-based semantics): the child
+    SIGKILLs itself (hard death, no cleanup), SIGSTOPs itself (a genuine
+    zombie -- process alive, pipe open, heartbeats frozen; only the
+    staleness detector can tell), or writes garbage into its stdout
+    frame stream (the parent must declare the stream dead, never deliver
+    junk).  The thread transport ignores these.
 
     ``delay_worker_s[wid]``: sleep this long before processing each
     wave (build stragglers and lose races deterministically).
 
     ``drop_heartbeats``: these workers stop heartbeating the moment they
     start; with a ``heartbeat_timeout_s`` configured the staleness
-    detector declares them dead while their thread may still be solving
+    detector declares them dead while they may still be solving
     -- which is exactly how a zombie delivery into the first-result-wins
     guard is produced on purpose.
 
@@ -96,6 +152,9 @@ class FaultPlan:
     kill_worker_at: Mapping[int, int] = field(default_factory=dict)
     delay_worker_s: Mapping[int, float] = field(default_factory=dict)
     drop_heartbeats: frozenset = frozenset()
+    sigkill_worker_at: Mapping[int, int] = field(default_factory=dict)
+    sigstop_worker_at: Mapping[int, int] = field(default_factory=dict)
+    corrupt_stdout_at: Mapping[int, int] = field(default_factory=dict)
 
     def kill_at(self, wid: int) -> Optional[int]:
         return self.kill_worker_at.get(wid)
@@ -105,6 +164,15 @@ class FaultPlan:
 
     def beats(self, wid: int) -> bool:
         return wid not in self.drop_heartbeats
+
+    def sigkill_at(self, wid: int) -> Optional[int]:
+        return self.sigkill_worker_at.get(wid)
+
+    def sigstop_at(self, wid: int) -> Optional[int]:
+        return self.sigstop_worker_at.get(wid)
+
+    def corrupt_at(self, wid: int) -> Optional[int]:
+        return self.corrupt_stdout_at.get(wid)
 
 
 @dataclass
@@ -129,6 +197,12 @@ class FleetStats:
     respawns: int = 0
     straggler_redispatches: int = 0
     duplicate_results: int = 0     # late deliveries the first-wins guard ate
+    cancelled: int = 0             # futures cancelled by their callers
+    rejected: int = 0              # submits refused by max_pending
+    degraded: int = 0              # deadline walls answered by the ladder
+    breaker_trips: int = 0         # circuit breakers opened
+    first_recovery_s: Optional[float] = None   # first death -> first requeued
+    #                                            request resolved (latency)
 
 
 @dataclass(eq=False)               # identity hash: instances live in sets
@@ -140,14 +214,16 @@ class _FleetPending:
     algorithm: str                 # resolved by the deadline policy
     tier: str
     digest: str                    # shared-cache key (proto engine digest)
+    shape_digest: str              # degradation-ladder key (order + M)
     t_submit: float
     resolved: bool = False
     dispatches: int = 0
     last_dispatch: float = 0.0
+    requeued: bool = False         # survived a worker death at least once
     holders: Set[int] = field(default_factory=set)   # worker ids in flight
 
 
-class EngineWorker:
+class EngineWorker(WorkerBase):
     """One thread-backed worker: a private ``MappingEngine`` fed waves
     through an inbox, heartbeating through the coordinator's lock.
 
@@ -155,25 +231,25 @@ class EngineWorker:
     worker submits a whole wave and flushes once, so a wave is a single
     batched dispatch exactly like the plain engine -- the RM's
     one-dispatch-per-candidate-wave invariant survives the fleet.
+
+    This is the thread implementation of the
+    :class:`~repro.serve.transport.WorkerTransport` seam; see
+    :class:`~repro.serve.transport.SubprocessWorker` for the
+    process-isolated one.
     """
 
     def __init__(self, fleet: "EngineFleet", wid: int,
                  engine: MappingEngine):
-        self.fleet = fleet
-        self.wid = wid
+        super().__init__(fleet, wid)
         self.engine = engine
-        self.inbox: deque = deque()            # waves; guarded by fleet lock
-        self.assigned: Set[_FleetPending] = set()
-        self.alive = True
-        self.completed = 0                     # delivered results (kill_at)
-        self.outstanding = 0
-        self.last_beat = time.monotonic()
-        self.last_assigned = 0                 # dispatch tie-break sequence
         self._thread = threading.Thread(
             target=self._run, name=f"fleet-worker-{wid}", daemon=True)
 
     def start(self) -> None:
         self._thread.start()
+
+    def enqueue_wave(self, wave: List[_FleetPending]) -> None:
+        self.inbox.append(wave)            # caller holds (and notifies) lock
 
     def join(self, timeout: Optional[float] = None) -> None:
         if self._thread.is_alive():
@@ -248,46 +324,110 @@ class EngineFleet:
     """Coordinator + N worker engines; a drop-in ``MappingEngine``
     replacement with failure recovery (see the module docstring).
 
+    ``transport`` selects the worker backing: ``"thread"`` (default --
+    PR 8 behavior, workers share this interpreter) or ``"subprocess"``
+    (each worker is a spawned interpreter speaking length-prefixed
+    pickle frames over pipes; see ``repro.serve.transport``).  The
+    submit/flush surface and results are identical either way.
+
     ``engine_kwargs`` configure every worker engine (same signature as
     ``MappingEngine``; ``warm_start`` defaults to False for fleet-wide
     determinism -- see module docstring); alternatively pass
     ``engine_factory(wid) -> MappingEngine`` to build heterogeneous
-    workers (all workers must then share digest-relevant config:
-    buckets, tier budgets, policy, processes -- the coordinator groups
-    and caches with worker 0's config).  ``meshes`` assigns one device
-    mesh per worker round-robin through the default factory.
+    workers (thread transport only; all workers must then share
+    digest-relevant config: buckets, tier budgets, policy, processes --
+    the coordinator groups and caches with worker 0's config).
+    ``meshes`` assigns one device mesh per worker round-robin through
+    the default factory (thread transport only -- device meshes cannot
+    be pickled to a child process).
 
-    ``heartbeat_timeout_s=None`` (default) disables the staleness
-    detector: a cold worker's first wave may legitimately sit in XLA
-    compilation far longer than any useful timeout, and injected faults
-    plus thread-boundary exceptions already cover in-process failure.
-    Enable it (generously, or after ``warmup()``) when workers can
-    actually wedge.  A false positive is safe -- requeue plus the
+    ``heartbeat_timeout_s=None`` keeps the transport default: disabled
+    for threads (injected faults and thread-boundary exceptions already
+    cover in-process failure, and a cold first wave may sit in XLA
+    compilation far longer than any useful timeout) and
+    ``DEFAULT_SUBPROCESS_HEARTBEAT_TIMEOUT_S`` for subprocesses (whose
+    heartbeats come from a dedicated child thread, and whose SIGSTOP
+    zombies are otherwise undetectable).  Pass ``0`` (or any value
+    ``<= 0``) to disable explicitly.  ``compiling_grace_s`` (also
+    per-transport by default) extends the timeout for a worker that has
+    not delivered its first result yet, so a slow cold compile is not
+    reaped as a hang.  A false positive is safe -- requeue plus the
     first-result-wins guard keep results exact -- just wasteful.
+
+    ``max_pending`` bounds queued+in-flight requests (submit returns an
+    already-failed ``QueueFull`` future beyond it); ``respawn_backoff_s``
+    / ``respawn_backoff_max_s`` shape the exponential respawn backoff;
+    ``breaker_failures`` / ``breaker_cooldown_s`` tune the per-worker
+    circuit breaker; ``worker_cache_dir`` gives each subprocess worker
+    ``<dir>/w<wid>`` as its persistent JAX compilation cache (default:
+    children inherit the parent's cache dir).
     """
 
     def __init__(self, workers: int = 2, *,
+                 transport: str = "thread",
                  fault_plan: Optional[FaultPlan] = None,
                  heartbeat_timeout_s: Optional[float] = None,
+                 compiling_grace_s: Optional[float] = None,
                  straggler_after_s: Optional[float] = None,
                  max_dispatches: int = 2,
                  shared_cache_size: int = 1024,
                  tick_s: float = 0.02,
+                 max_pending: Optional[int] = None,
+                 respawn_backoff_s: float = 0.05,
+                 respawn_backoff_max_s: float = 2.0,
+                 breaker_failures: int = 3,
+                 breaker_cooldown_s: float = 1.0,
+                 worker_cache_dir: Optional[str] = None,
+                 heartbeat_interval_s: float = DEFAULT_HEARTBEAT_INTERVAL_S,
                  engine_factory: Optional[
                      Callable[[int], MappingEngine]] = None,
                  meshes: Optional[Sequence] = None,
                  **engine_kwargs):
         if workers < 1:
             raise ValueError("need at least one worker")
+        if transport not in TRANSPORTS:
+            raise ValueError(f"transport must be one of {TRANSPORTS}")
+        self.transport = transport
         self.fault_plan = fault_plan or FaultPlan()
+        if heartbeat_timeout_s is None and transport == "subprocess":
+            heartbeat_timeout_s = DEFAULT_SUBPROCESS_HEARTBEAT_TIMEOUT_S
+        if heartbeat_timeout_s is not None and heartbeat_timeout_s <= 0:
+            heartbeat_timeout_s = None         # explicit disable
         self.heartbeat_timeout_s = heartbeat_timeout_s
+        if compiling_grace_s is None:
+            compiling_grace_s = (DEFAULT_SUBPROCESS_COMPILING_GRACE_S
+                                 if transport == "subprocess" else 0.0)
+        self.compiling_grace_s = float(compiling_grace_s)
         self.straggler_after_s = straggler_after_s
         self.max_dispatches = int(max_dispatches)
         self.shared_cache_size = int(shared_cache_size)
         self.tick_s = float(tick_s)
-        if engine_factory is None:
+        if max_pending is not None and max_pending < 1:
+            raise ValueError("max_pending must be >= 1 (or None)")
+        self.max_pending = max_pending
+        self.respawn_backoff_s = float(respawn_backoff_s)
+        self.respawn_backoff_max_s = float(respawn_backoff_max_s)
+        self.breaker_failures = int(breaker_failures)
+        self.breaker_cooldown_s = float(breaker_cooldown_s)
+        self.worker_cache_dir = worker_cache_dir
+        self.heartbeat_interval_s = float(heartbeat_interval_s)
+        if transport == "subprocess":
+            if engine_factory is not None or meshes:
+                raise ValueError(
+                    "subprocess transport configures workers via "
+                    "engine kwargs only (factories/meshes cannot cross "
+                    "the process boundary)")
+            if "mesh" in engine_kwargs and engine_kwargs["mesh"] is not None:
+                raise ValueError(
+                    "subprocess transport cannot ship a device mesh")
             kwargs = dict(engine_kwargs)
             kwargs.setdefault("warm_start", False)
+            self._engine_kwargs = kwargs
+            self._factory = None
+        elif engine_factory is None:
+            kwargs = dict(engine_kwargs)
+            kwargs.setdefault("warm_start", False)
+            self._engine_kwargs = kwargs
             mesh_list = list(meshes) if meshes else []
 
             def engine_factory(wid: int) -> MappingEngine:
@@ -295,28 +435,43 @@ class EngineFleet:
                 if mesh_list:
                     kw["mesh"] = mesh_list[wid % len(mesh_list)]
                 return MappingEngine(**kw)
+            self._factory = engine_factory
         elif engine_kwargs or meshes:
             raise ValueError(
                 "pass either engine_factory or engine kwargs/meshes")
-        self._factory = engine_factory
+        else:
+            self._engine_kwargs = None
+            self._factory = engine_factory
         self._lock = threading.RLock()
         self._cond = threading.Condition(self._lock)
         self._queue: List[_FleetPending] = []
         self._inflight: Set[_FleetPending] = set()
         self._cache: "OrderedDict[str, Tuple[np.ndarray, float]]" = \
             OrderedDict()
+        # Degradation ladder, tier 1: latest real permutation per (order,
+        # system graph), fed by deliveries; served when a deadline expires.
+        self._shape_perms: "OrderedDict[str, np.ndarray]" = OrderedDict()
         self.stats = FleetStats()
-        self.workers: List[EngineWorker] = []
+        self.workers: List[WorkerBase] = []
         self._next_wid = 0
         self._assign_seq = 1
+        self._respawn_attempts = 0         # consecutive; reset on delivery
+        self._respawn_not_before = 0.0
+        self._last_death_t: Optional[float] = None   # recovery-latency clock
+        self._jitter = random.Random(0x5eed)
         self._dispatcher: Optional[threading.Thread] = None
         self._stop = False
         self._shutdown = False
+        # Config/digest/grouping proxy.  Thread transport: worker 0's
+        # engine (pure reads -- usable even after that worker dies).
+        # Subprocess transport: a coordinator-local engine that never
+        # solves (children own the real ones).
+        if transport == "subprocess":
+            self._proto = MappingEngine(**self._engine_kwargs)
         for _ in range(workers):
             self._spawn_worker_locked()
-        # Config/digest/grouping proxy: worker 0's engine (pure reads --
-        # usable even after that worker dies).
-        self._proto = self.workers[0].engine
+        if transport == "thread":
+            self._proto = self.workers[0].engine
 
     # ------------------------------------------------------ engine surface
     @property
@@ -332,9 +487,14 @@ class EngineFleet:
         return self._proto.flush_deadline_ms
 
     def warmup(self, **kwargs) -> int:
-        """AOT-precompile one worker's bucket programs; jit and
-        persistent compilation caches are process-wide, so every worker
-        (and every respawn) shares the result."""
+        """AOT-precompile bucket programs.  Thread transport: jit and
+        persistent compilation caches are process-wide, so one worker's
+        warmup covers every worker (and every respawn).  Subprocess
+        transport: the coordinator's proto engine compiles into the
+        *persistent* cache, which children sharing the parent's cache
+        dir (the default) reload instead of recompiling."""
+        if self.transport == "subprocess":
+            return self._proto.warmup(**kwargs)
         for w in self.workers:
             if w.alive:
                 return w.engine.warmup(**kwargs)
@@ -344,17 +504,26 @@ class EngineFleet:
         """Queue one request; non-blocking.  Same contract as
         :meth:`MappingEngine.submit`: the future is resolved by the
         background dispatcher (when started) or by the next
-        :meth:`flush`."""
+        :meth:`flush`; beyond ``max_pending`` it comes back already
+        failed with :class:`~repro.serve.mapper.QueueFull`."""
         validate_request(req)
         algorithm, tier = self._proto.policy.resolve(
             req.algorithm, req.deadline_ms)
         p = _FleetPending(
             req=req, future=MapFuture(), algorithm=algorithm, tier=tier,
             digest=self._proto.digest(req, algorithm, tier),
+            shape_digest=self._proto.shape_digest(req),
             t_submit=time.monotonic())
         with self._cond:
             if self._shutdown:
                 raise RuntimeError("fleet is stopped")
+            if (self.max_pending is not None
+                    and len(self._queue) + len(self._inflight)
+                    >= self.max_pending):
+                self.stats.rejected += 1
+                p.future._fail(QueueFull(
+                    f"fleet queue at max_pending={self.max_pending}"))
+                return p.future
             self.stats.submitted += 1
             self._queue.append(p)
             self._cond.notify_all()
@@ -364,7 +533,8 @@ class EngineFleet:
         """Dispatch everything queued and pump monitor/requeue until all
         of it (and anything already in flight) is resolved; returns
         {job_id: response} and re-raises the first failure, exactly like
-        the engine's ``flush()``."""
+        the engine's ``flush()`` (cancelled futures are skipped, not
+        re-raised)."""
         with self._cond:
             targets = list(self._queue) + [p for p in self._inflight
                                            if not p.resolved]
@@ -383,6 +553,8 @@ class EngineFleet:
         first_error: Optional[BaseException] = None
         for p in targets:
             exc = p.future.exception(timeout=0)
+            if isinstance(exc, MapCancelled):
+                continue                       # the caller abandoned it
             if exc is not None:
                 first_error = first_error or exc
             else:
@@ -439,7 +611,11 @@ class EngineFleet:
             self._shutdown = True
             self._cond.notify_all()
         for w in list(self.workers):
+            w.shutdown()
+        for w in list(self.workers):
             w.join(timeout=5.0)
+        for w in list(self.workers):
+            w.kill()                       # reap zombies (SIGSTOP'd children)
 
     def __enter__(self) -> "EngineFleet":
         return self.start()
@@ -502,21 +678,52 @@ class EngineFleet:
                    ) -> Tuple[Optional[int], str, str]:
         return (self._proto._route(p.req.C.shape[0]), p.algorithm, p.tier)
 
-    def _spawn_worker_locked(self) -> EngineWorker:
+    def _worker_spec(self, wid: int) -> Dict:
+        """Child configuration for one subprocess worker: engine kwargs
+        plus this worker's slice of the fault plan (the child executes
+        its own faults -- real signals, deterministic counts)."""
+        plan = self.fault_plan
+        cache_dir = None
+        if self.worker_cache_dir is not None:
+            import os
+            cache_dir = os.path.join(self.worker_cache_dir, f"w{wid}")
+        return dict(
+            wid=wid,
+            engine_kwargs=self._engine_kwargs,
+            heartbeat_s=self.heartbeat_interval_s,
+            beats=plan.beats(wid),
+            delay_s=plan.delay_s(wid),
+            kill_at=plan.kill_at(wid),
+            sigkill_at=plan.sigkill_at(wid),
+            sigstop_at=plan.sigstop_at(wid),
+            corrupt_at=plan.corrupt_at(wid),
+            cache_dir=cache_dir)
+
+    def _spawn_worker_locked(self) -> WorkerBase:
         wid = self._next_wid
         self._next_wid += 1
-        w = EngineWorker(self, wid, self._factory(wid))
+        if self.transport == "subprocess":
+            w: WorkerBase = SubprocessWorker(self, wid,
+                                             self._worker_spec(wid))
+        else:
+            w = EngineWorker(self, wid, self._factory(wid))
         self.workers.append(w)
         w.start()
         return w
 
     def _pick_worker_locked(self, exclude: Set[int] = frozenset()
-                            ) -> Optional[EngineWorker]:
+                            ) -> Optional[WorkerBase]:
         live = [w for w in self.workers
                 if w.alive and w.wid not in exclude]
         if not live:
             return None
-        return min(live, key=lambda w: (w.outstanding, w.last_assigned,
+        now = time.monotonic()
+        closed = [w for w in live if now >= w.breaker_open_until]
+        # All breakers open: degrade to least-bad rather than deadlock --
+        # the breaker sheds load onto healthy peers, it never refuses the
+        # last resort.
+        pool = closed or live
+        return min(pool, key=lambda w: (w.outstanding, w.last_assigned,
                                         w.wid))
 
     def _dispatch_ready_locked(self, ready: List[_FleetPending]) -> None:
@@ -526,6 +733,11 @@ class EngineFleet:
                      List[_FleetPending]] = OrderedDict()
         for p in ready:
             if p.resolved:
+                continue
+            if p.future.done():            # cancelled by the caller
+                p.resolved = True
+                self._inflight.discard(p)
+                self.stats.cancelled += 1
                 continue
             hit = self._cache.get(p.digest)
             if hit is not None:
@@ -542,13 +754,27 @@ class EngineFleet:
 
     def _assign_wave_locked(self, wave: List[_FleetPending],
                             exclude: Set[int] = frozenset()
-                            ) -> Optional[EngineWorker]:
+                            ) -> Optional[WorkerBase]:
         w = self._pick_worker_locked(exclude)
         if w is None:
             if exclude:
                 return None        # straggler duplicate: never respawn for it
+            now = time.monotonic()
+            if now < self._respawn_not_before:
+                # Backoff window after a failed generation of workers:
+                # requeue; the dispatcher/flush pump retries next tick.
+                self._queue.extend(wave)
+                return None
             w = self._spawn_worker_locked()
             self.stats.respawns += 1
+            self._respawn_attempts += 1
+            backoff = min(
+                self.respawn_backoff_s * (2 ** (self._respawn_attempts - 1)),
+                self.respawn_backoff_max_s)
+            # Deterministically-seeded jitter decorrelates respawn storms
+            # without breaking test reproducibility.
+            self._respawn_not_before = now + backoff * (
+                1.0 + 0.5 * self._jitter.random())
         now = time.monotonic()
         for p in wave:
             p.holders.add(w.wid)
@@ -556,7 +782,7 @@ class EngineFleet:
             p.last_dispatch = now
             w.assigned.add(p)
             self._inflight.add(p)
-        w.inbox.append(list(wave))
+        w.enqueue_wave(list(wave))
         w.outstanding += len(wave)
         w.last_assigned = self._assign_seq
         self._assign_seq += 1
@@ -565,13 +791,27 @@ class EngineFleet:
         return w
 
     def _monitor_locked(self) -> None:
-        """Failure detector + straggler re-dispatch (caller holds the
-        lock); called from every flush pump tick and dispatcher tick."""
+        """Failure detector, deadline wall, and straggler re-dispatch
+        (caller holds the lock); called from every flush pump tick and
+        dispatcher tick."""
         now = time.monotonic()
         if self.heartbeat_timeout_s is not None:
             for w in list(self.workers):
-                if w.alive and now - w.last_beat > self.heartbeat_timeout_s:
+                if not w.alive:
+                    continue
+                limit = self.heartbeat_timeout_s
+                if w.completed == 0:
+                    limit += self.compiling_grace_s   # cold compile != hang
+                if now - w.last_beat > limit:
                     self._declare_dead_locked(w)
+        # Deadline hard wall: queued or in flight, an expired request is
+        # answered *now* by the degradation ladder; the real result, if it
+        # ever lands, is eaten by the first-result-wins guard.
+        for p in list(self._queue) + list(self._inflight):
+            if p.resolved or p.req.deadline_ms is None:
+                continue
+            if (now - p.t_submit) * 1000.0 >= p.req.deadline_ms:
+                self._degrade_locked(p)
         if self.straggler_after_s is not None:
             overdue = [p for p in list(self._inflight)
                        if not p.resolved
@@ -581,30 +821,35 @@ class EngineFleet:
                 if self._assign_wave_locked([p], exclude=set(p.holders)):
                     self.stats.straggler_redispatches += 1
 
-    def _declare_dead_locked(self, w: EngineWorker) -> None:
+    def _declare_dead_locked(self, w: WorkerBase) -> None:
         if not w.alive:
             return
         w.alive = False
         self.stats.worker_deaths += 1
         self._reap_locked(w)
 
-    def _reap_locked(self, w: EngineWorker) -> None:
+    def _reap_locked(self, w: WorkerBase) -> None:
         """Requeue every unresolved request a dead worker held, unless a
         straggler duplicate is still in flight elsewhere."""
         w.inbox.clear()
         orphans, w.assigned = w.assigned, set()
         w.outstanding = 0
+        requeues = 0
         for p in orphans:
             p.holders.discard(w.wid)
             if p.resolved or p.holders:
                 continue
             self._inflight.discard(p)
+            p.requeued = True
             self._queue.append(p)
-            self.stats.requeued += 1
+            requeues += 1
+        self.stats.requeued += requeues
+        if requeues and self._last_death_t is None:
+            self._last_death_t = time.monotonic()   # recovery clock starts
         self._cond.notify_all()
 
     # -------------------------------------------------- delivery (workers)
-    def _release_locked(self, w: EngineWorker, p: _FleetPending) -> None:
+    def _release_locked(self, w: WorkerBase, p: _FleetPending) -> None:
         w.assigned.discard(p)
         w.outstanding = max(0, w.outstanding - 1)
         w.completed += 1
@@ -612,33 +857,91 @@ class EngineFleet:
             w.last_beat = time.monotonic()
         p.holders.discard(w.wid)
 
-    def _deliver_locked(self, w: EngineWorker, p: _FleetPending,
+    def _deliver_locked(self, w: WorkerBase, p: _FleetPending,
                         resp: MapResponse) -> None:
         self._release_locked(w, p)
+        w.consecutive_failures = 0         # breaker half-open -> closed
+        self._respawn_attempts = 0         # the fleet is producing again
+        self._respawn_not_before = 0.0
+        # Cache before the resolved guard: a real result that lost to a
+        # deadline degrade (or a straggler duplicate) still warms both
+        # tiers for the next identical / same-shape request.
+        self._cache_put_locked(p.digest, resp.perm, resp.objective)
+        self._shape_put_locked(p.shape_digest, resp.perm)
         if p.resolved:                     # first result won already
             self.stats.duplicate_results += 1
             return
-        self._cache_put_locked(p.digest, resp.perm, resp.objective)
         self._resolve_locked(p, resp)
 
-    def _fail_locked(self, w: EngineWorker, p: _FleetPending,
+    def _fail_locked(self, w: WorkerBase, p: _FleetPending,
                      exc: BaseException) -> None:
         self._release_locked(w, p)
+        w.consecutive_failures += 1
+        if (self.breaker_failures > 0
+                and w.consecutive_failures >= self.breaker_failures):
+            now = time.monotonic()
+            if now >= w.breaker_open_until:
+                w.breaker_open_until = now + self.breaker_cooldown_s
+                self.stats.breaker_trips += 1
         if p.resolved:
             self.stats.duplicate_results += 1
             return
         p.resolved = True
-        self.stats.failed += 1
         self._inflight.discard(p)
-        p.future._fail(exc)
+        if p.future._fail(exc):
+            self.stats.failed += 1
+        else:
+            self.stats.cancelled += 1      # the caller cancelled first
         self._cond.notify_all()
 
     def _resolve_locked(self, p: _FleetPending, resp: MapResponse) -> None:
         p.resolved = True
-        self.stats.resolved += 1
         self._inflight.discard(p)
-        p.future._resolve(resp)
+        if p.future._resolve(resp):
+            self.stats.resolved += 1
+            if (p.requeued and self._last_death_t is not None
+                    and self.stats.first_recovery_s is None):
+                self.stats.first_recovery_s = (
+                    time.monotonic() - self._last_death_t)
+        else:
+            self.stats.cancelled += 1      # the caller cancelled first
         self._cond.notify_all()
+
+    # ------------------------------------------------- deadline degradation
+    def _degrade_locked(self, p: _FleetPending) -> None:
+        """Answer an expired request from the degradation ladder: the
+        shape tier's last real permutation for the same (order, system
+        graph) when it exists and is no worse than identity, else the
+        deterministic identity/as-allocated placement.  Flagged
+        ``degraded=True`` with the reason code; never enters the exact
+        cache (it is not a solve)."""
+        req = p.req
+        n = req.C.shape[0]
+        C = np.asarray(req.C, np.float64)
+        M = np.asarray(req.M, np.float64)
+        baseline = float((C * M).sum())
+        perm: Optional[np.ndarray] = None
+        objective = baseline
+        reason = "deadline_identity"
+        hit = self._shape_perms.get(p.shape_digest)
+        if hit is not None and hit.shape[0] == n:
+            cand = float((C * M[np.ix_(hit, hit)]).sum())
+            if cand <= baseline:           # never worse than identity
+                perm, objective = hit, cand
+                reason = "deadline_shape_cache"
+        if perm is None:
+            perm = np.arange(n, dtype=np.int32)
+        resp = MapResponse(
+            job_id=req.job_id, perm=np.array(perm, copy=True),
+            objective=float(objective), baseline=baseline,
+            algorithm=p.algorithm, n=n, bucket=self._proto._route(n),
+            cached=False, seconds=0.0, batch_size=0, tier=p.tier,
+            warm_start=False, degraded=True, degrade_reason=reason)
+        self.stats.degraded += 1
+        # Drop it from the queue slice it may still occupy; holders (if
+        # any) deliver into the duplicate guard later.
+        self._queue = [q for q in self._queue if q is not p]
+        self._resolve_locked(p, resp)
 
     # -------------------------------------------------------- shared cache
     def _cache_put_locked(self, digest: str, perm: np.ndarray,
@@ -647,6 +950,12 @@ class EngineFleet:
         self._cache.move_to_end(digest)
         while len(self._cache) > self.shared_cache_size:
             self._cache.popitem(last=False)
+
+    def _shape_put_locked(self, shape_digest: str, perm: np.ndarray) -> None:
+        self._shape_perms[shape_digest] = np.array(perm, copy=True)
+        self._shape_perms.move_to_end(shape_digest)
+        while len(self._shape_perms) > self.shared_cache_size:
+            self._shape_perms.popitem(last=False)
 
     def _cached_response(self, p: _FleetPending, perm: np.ndarray,
                          objective: float) -> MapResponse:
@@ -665,3 +974,4 @@ class EngineFleet:
             algorithm=p.algorithm, n=n,
             bucket=self._proto._route(n), cached=True, seconds=0.0,
             batch_size=0, tier=p.tier, warm_start=False)
+

@@ -110,6 +110,23 @@ AUTO = "auto"                       # algorithm chosen by the deadline policy
 TIERS = ("default", "tight")
 
 
+class QueueFull(RuntimeError):
+    """Admission control: the engine/fleet/RM queue is at ``max_pending``.
+
+    :meth:`MappingEngine.submit` (and the fleet's) never raise it -- they
+    return an already-failed future carrying it, so streaming callers keep
+    one code path -- while :meth:`~repro.serve.rm.ResourceManager.submit_job`
+    raises it directly (a rejected job must not get a handle)."""
+
+
+class MapCancelled(RuntimeError):
+    """Raised by :meth:`MapFuture.result` after :meth:`MapFuture.cancel`.
+
+    Deliberately *not* ``concurrent.futures.CancelledError`` (a
+    ``BaseException`` since 3.8): engine/fleet internals and callers
+    uniformly handle ``Exception``."""
+
+
 @dataclass(frozen=True, kw_only=True)
 class MapRequest:
     """One job's mapping problem: program graph C, system graph M.
@@ -153,6 +170,8 @@ class MapResponse:
     batch_size: int = 1        # requests served by the dispatch (0 = cached)
     tier: str = "default"      # solver budget tier the policy picked
     warm_start: bool = False   # solve was seeded from a near-miss cache hit
+    degraded: bool = False     # deadline fallback, not a real solve
+    degrade_reason: str = ""   # "deadline_shape_cache" | "deadline_identity"
 
     @property
     def improvement(self) -> float:
@@ -172,18 +191,40 @@ class MapFuture:
     resolution, so submit-to-resolve latency is
     ``future.resolved_at - t_submit`` — this is what
     ``benchmarks/scheduler_sim.py`` reports as mapping latency.
+
+    Resolution is *claimed* under a per-future lock: exactly one of
+    ``_resolve`` / ``_fail`` / :meth:`cancel` wins, the others are no-ops
+    returning False.  A caller that gives up on a future (e.g. its own
+    ``result(timeout)`` expired) should :meth:`cancel` it -- otherwise the
+    request stays in flight forever with nobody to collect it.  The engine
+    and fleet skip cancelled requests at dispatch when they can and count
+    every cancelled resolution in ``stats.cancelled``.
     """
 
-    __slots__ = ("_event", "_response", "_exception", "resolved_at")
+    __slots__ = ("_event", "_response", "_exception", "resolved_at",
+                 "_claim", "_cancelled")
 
     def __init__(self) -> None:
         self._event = threading.Event()
         self._response: Optional[MapResponse] = None
         self._exception: Optional[BaseException] = None
         self.resolved_at: Optional[float] = None   # time.monotonic() stamp
+        self._claim = threading.Lock()             # resolution claim
+        self._cancelled = False
 
     def done(self) -> bool:
         return self._event.is_set()
+
+    def cancelled(self) -> bool:
+        return self._cancelled
+
+    def cancel(self) -> bool:
+        """Abandon the request: the future resolves with
+        :class:`MapCancelled` and any late real result is discarded by
+        the claim guard.  Returns False when already resolved (cancel
+        lost the race -- the result stands and remains readable)."""
+        return self._fail(MapCancelled("mapping request cancelled by caller"),
+                          cancelled=True)
 
     def result(self, timeout: Optional[float] = None) -> MapResponse:
         if not self._event.wait(timeout):
@@ -199,15 +240,24 @@ class MapFuture:
             raise TimeoutError("mapping future not resolved within timeout")
         return self._exception
 
-    def _resolve(self, response: MapResponse) -> None:
-        self._response = response
-        self.resolved_at = time.monotonic()
-        self._event.set()
+    def _resolve(self, response: MapResponse) -> bool:
+        with self._claim:
+            if self._event.is_set():
+                return False
+            self._response = response
+            self.resolved_at = time.monotonic()
+            self._event.set()
+            return True
 
-    def _fail(self, exc: BaseException) -> None:
-        self._exception = exc
-        self.resolved_at = time.monotonic()
-        self._event.set()
+    def _fail(self, exc: BaseException, cancelled: bool = False) -> bool:
+        with self._claim:
+            if self._event.is_set():
+                return False
+            self._exception = exc
+            self._cancelled = cancelled
+            self.resolved_at = time.monotonic()
+            self._event.set()
+            return True
 
 
 @dataclass(frozen=True)
@@ -249,6 +299,8 @@ class EngineStats:
     full_bucket_flushes: int = 0   # flusher waves triggered by a full group
     deadline_flushes: int = 0      # flusher waves triggered by the deadline
     warmup_programs: int = 0       # programs precompiled by warmup()
+    cancelled: int = 0             # futures cancelled by their callers
+    rejected: int = 0              # submits refused by max_pending
 
 
 @dataclass
@@ -318,7 +370,8 @@ class MappingEngine:
                  instance_axis: str = batch_sharded.DEFAULT_AXIS,
                  large_buckets: Sequence[int] = LARGE_BUCKETS,
                  multilevel_min_n: int = 256,
-                 multilevel_cfg: Optional[multilevel.MultilevelConfig] = None):
+                 multilevel_cfg: Optional[multilevel.MultilevelConfig] = None,
+                 max_pending: Optional[int] = None):
         self.buckets = tuple(sorted(int(b) for b in buckets))
         if not self.buckets:
             raise ValueError("need at least one size bucket")
@@ -338,6 +391,12 @@ class MappingEngine:
         self.flush_deadline_ms = float(flush_deadline_ms)
         self.max_batch = int(max_batch)
         self.policy = policy or DeadlinePolicy()
+        # Admission control: queued-but-undispatched requests beyond this
+        # are rejected (submit returns an already-failed QueueFull future).
+        # None = unbounded, the pre-backpressure behavior.
+        if max_pending is not None and max_pending < 1:
+            raise ValueError("max_pending must be >= 1 (or None)")
+        self.max_pending = max_pending
         self.warm_start = bool(warm_start)
         self.pad_batches = bool(pad_batches)
         # mesh: a jax.sharding.Mesh (or None).  Bucket waves then dispatch
@@ -631,12 +690,23 @@ class MappingEngine:
     def submit(self, req: MapRequest) -> MapFuture:
         """Queue one request; non-blocking.  Returns the request's future,
         resolved by the background flusher (when started) or by the next
-        explicit :meth:`flush`."""
+        explicit :meth:`flush`.
+
+        With ``max_pending`` set, a submit finding the queue full is
+        *rejected*: the returned future is already failed with
+        :class:`QueueFull` (``stats.rejected`` counts them) and nothing is
+        queued -- explicit backpressure instead of unbounded growth."""
         validate_request(req)
         algorithm, tier = self.policy.resolve(req.algorithm, req.deadline_ms)
         pending = _Pending(req=req, future=MapFuture(), algorithm=algorithm,
                            tier=tier, t_submit=time.monotonic())
         with self._cond:
+            if (self.max_pending is not None
+                    and len(self._queue) >= self.max_pending):
+                self.stats.rejected += 1
+                pending.future._fail(QueueFull(
+                    f"engine queue at max_pending={self.max_pending}"))
+                return pending.future
             self.stats.submitted += 1
             self._queue.append(pending)
             self._cond.notify_all()
@@ -813,6 +883,9 @@ class MappingEngine:
                      "OrderedDict[str, List[_Pending]]"] = {}
         with self._lock:
             for p in pending:
+                if p.future.done():          # cancelled while queued: skip
+                    self.stats.cancelled += 1
+                    continue
                 key = self.digest(p.req, p.algorithm, p.tier)
                 hit = self._cache_get(key)
                 if hit is not None:
@@ -822,8 +895,10 @@ class MappingEngine:
                         p, perm, objective,
                         bucket=self._route(p.req.C.shape[0]),
                         cached=True, seconds=0.0, batch_size=0)
-                    responses[p.req.job_id] = resp
-                    p.future._resolve(resp)
+                    if p.future._resolve(resp):
+                        responses[p.req.job_id] = resp
+                    else:                    # cancel won the claim race
+                        self.stats.cancelled += 1
                     continue
                 g = groups.setdefault(self._group_key(p), OrderedDict())
                 g.setdefault(key, []).append(p)
@@ -872,8 +947,10 @@ class MappingEngine:
                                 p, perm, objective, bucket=bucket,
                                 cached=False, seconds=per_instance,
                                 batch_size=total, warm_start=w is not None)
-                            responses[p.req.job_id] = resp
-                            p.future._resolve(resp)
+                            if p.future._resolve(resp):
+                                responses[p.req.job_id] = resp
+                            else:            # cancelled mid-solve
+                                self.stats.cancelled += 1
             if first_error is not None and raise_errors:
                 raise first_error
         return responses

@@ -54,16 +54,20 @@ Design notes live in ``docs/DESIGN.md`` §9.
 from __future__ import annotations
 
 import heapq
+import json
 import math
+import os
 import time
 from dataclasses import asdict, dataclass
-from typing import Callable, List, Optional, Sequence, Tuple, Union
+from typing import (Callable, Dict, List, Optional, Sequence, Tuple,
+                    Union)
 
 import numpy as np
 
 from repro.serve.cluster import Candidate, ClusterState
 from repro.serve.fleet import EngineFleet
-from repro.serve.mapper import MapRequest, MapResponse, MappingEngine
+from repro.serve.mapper import (MapRequest, MapResponse, MappingEngine,
+                                QueueFull)
 
 DEFAULT_POLICIES = ("compact", "slab", "scatter")
 
@@ -231,6 +235,72 @@ class ReplayReport:
         return asdict(self)
 
 
+class RMJournal:
+    """Append-only JSONL write-ahead log of resource-manager decisions.
+
+    One JSON object per line, four event kinds, each stamped with the
+    virtual clock ``t`` at which it was decided:
+
+    - ``arrival``: the full :class:`JobSpec` (``C`` as a nested list, or
+      ``null`` when the spec synthesized :func:`default_flows` -- the
+      synthesis is deterministic in ``(size, seed)``, so it need not be
+      stored);
+    - ``map``: the winning mapping for a starting job (permutation,
+      objective, baseline, resolved algorithm/tier, degraded flag) --
+      written *before* its ``start`` so a start is never applied without
+      its mapping;
+    - ``start``: the committed allocation (physical node ids), start and
+      finish clocks, candidate policy, backfill flag;
+    - ``release``: the job's completion.
+
+    Every append is flushed and ``fsync``'d before the in-memory state
+    mutates (write-ahead), so after a crash the journal is a prefix of
+    the decisions actually taken, with at most a truncated final line --
+    which :meth:`read_events` tolerates by stopping at the first
+    undecodable line.  :meth:`ResourceManager.recover` replays a journal
+    into a fresh manager, reproducing queue contents, running set,
+    ``ClusterState`` occupancy, and the busy-time integral exactly.
+    """
+
+    VERSION = 1
+
+    def __init__(self, path: Union[str, os.PathLike], mode: str = "a"):
+        self.path = os.fspath(path)
+        self._f = open(self.path, mode, encoding="utf-8")
+
+    def append(self, ev: dict) -> None:
+        self._f.write(json.dumps(ev, separators=(",", ":")) + "\n")
+        self._f.flush()
+        os.fsync(self._f.fileno())
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+    def __enter__(self) -> "RMJournal":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    @staticmethod
+    def read_events(path: Union[str, os.PathLike]) -> List[dict]:
+        """Parse a journal, tolerating a truncated tail: a crash mid-
+        append leaves at most one partial last line, so parsing stops at
+        the first undecodable line instead of failing."""
+        events: List[dict] = []
+        with open(os.fspath(path), encoding="utf-8") as f:
+            for line in f:
+                try:
+                    ev = json.loads(line)
+                except json.JSONDecodeError:
+                    break                      # torn tail write
+                if not isinstance(ev, dict) or "ev" not in ev:
+                    break
+                events.append(ev)
+        return events
+
+
 class ResourceManager:
     """The control plane: priority queue + EASY backfilling +
     allocate-then-map candidate waves over one :class:`ClusterState` and
@@ -264,7 +334,10 @@ class ResourceManager:
                  deadline_ms: Optional[float] = None,
                  score: Callable = objective_score,
                  clock: float = 0.0,
-                 map_timeout_s: float = 600.0):
+                 map_timeout_s: float = 600.0,
+                 max_pending: Optional[int] = None,
+                 journal: Optional[Union[str, os.PathLike,
+                                         RMJournal]] = None):
         if isinstance(system, ClusterState):
             self.cluster = system
         else:
@@ -292,15 +365,49 @@ class ResourceManager:
         self._running: List[Tuple[float, int, JobHandle]] = []    # heap
         self._seq = 0
         self._busy_integral = 0.0
+        if max_pending is not None and max_pending < 1:
+            raise ValueError("max_pending must be >= 1 (or None)")
+        self.max_pending = max_pending
+        if journal is None or isinstance(journal, RMJournal):
+            self._journal: Optional[RMJournal] = journal
+        else:
+            self._journal = RMJournal(journal)
 
     # ------------------------------------------------------------------ API
     def submit_job(self, spec: JobSpec) -> JobHandle:
         """Admit one job; returns its :class:`JobHandle`.  Arrivals in
         the virtual future stay ``pending`` until the clock reaches
         them; nothing is scheduled until :meth:`schedule` / :meth:`run`
-        (so a burst of submissions schedules as one pass)."""
+        (so a burst of submissions schedules as one pass).
+
+        With ``max_pending`` set, a submit that finds that many jobs
+        already waiting (pending + queued, not yet started) raises
+        :class:`~repro.serve.mapper.QueueFull` *before* any state
+        mutates: a rejected job leaves no handle, no journal record, and
+        no ``ClusterState`` change."""
         if not isinstance(spec, JobSpec):
             raise TypeError("submit_job takes a JobSpec")
+        if (self.max_pending is not None
+                and len(self._queue) + len(self._arrivals)
+                >= self.max_pending):
+            raise QueueFull(
+                f"resource manager at max_pending={self.max_pending} "
+                f"waiting jobs")
+        h = self._admit(spec)
+        if self._journal is not None:
+            self._journal.append({
+                "ev": "arrival", "t": self.clock, "job_id": spec.job_id,
+                "size": spec.size, "run_s": spec.run_s,
+                "arrival_s": spec.arrival_s, "priority": spec.priority,
+                "algorithm": spec.algorithm,
+                "deadline_ms": spec.deadline_ms, "seed": spec.seed,
+                "C": None if spec.C is None
+                     else np.asarray(spec.C, np.float32).tolist()})
+        return h
+
+    def _admit(self, spec: JobSpec) -> JobHandle:
+        """Validate + enqueue one job (shared by :meth:`submit_job` and
+        journal recovery, which must not re-journal)."""
         if spec.size < 1 or spec.size > self.cluster.num_nodes:
             raise ValueError(f"job size {spec.size} not in "
                              f"[1, {self.cluster.num_nodes}]")
@@ -397,6 +504,88 @@ class ResourceManager:
             map_wall_p50_ms=float(np.percentile(walls, 50)),
             map_wall_p99_ms=float(np.percentile(walls, 99)))
 
+    # ------------------------------------------------------------- recovery
+    @classmethod
+    def recover(cls, system: Union[np.ndarray, ClusterState],
+                journal_path: Union[str, os.PathLike],
+                engine: Optional[Union[MappingEngine,
+                                       EngineFleet]] = None, *,
+                journal: Optional[Union[str, os.PathLike,
+                                        RMJournal]] = None,
+                **kwargs) -> "ResourceManager":
+        """Rebuild a manager from a crash's journal: replay every logged
+        decision (arrival -> admit, map+start -> allocate those exact
+        nodes and restore the mapping, release -> free them) against a
+        fresh :class:`ClusterState`, advancing the virtual clock to each
+        event's stamp so occupancy *and* the busy-time integral match
+        the original run exactly.
+
+        After recovery: jobs that arrived but never started are queued
+        (they will be scheduled afresh -- their mapping was never
+        committed), started-but-unreleased jobs are running with their
+        exact allocation and mapping, released jobs are finished.  The
+        completed-job set, queue contents, and every node's occupancy
+        are identical to the crashed manager's at its last fsync'd
+        record; a torn final line is ignored (see
+        :meth:`RMJournal.read_events`).
+
+        ``journal`` (optional) attaches a journal for decisions *after*
+        recovery; pass the same path to keep appending to it.  Other
+        keyword arguments go to the constructor unchanged.
+        """
+        events = RMJournal.read_events(journal_path)
+        rm = cls(system, engine, **kwargs)
+        by_id: Dict[str, JobHandle] = {}
+        maps: Dict[str, MapResponse] = {}
+        for ev in events:
+            rm._advance(ev["t"])
+            kind = ev["ev"]
+            if kind == "arrival":
+                spec = JobSpec(
+                    job_id=ev["job_id"], size=ev["size"],
+                    run_s=ev["run_s"], arrival_s=ev["arrival_s"],
+                    C=None if ev["C"] is None
+                      else np.asarray(ev["C"], np.float32),
+                    priority=ev["priority"], algorithm=ev["algorithm"],
+                    deadline_ms=ev["deadline_ms"], seed=ev["seed"])
+                by_id[spec.job_id] = rm._admit(spec)
+            elif kind == "map":
+                maps[ev["job_id"]] = MapResponse(
+                    job_id=ev["job_id"],
+                    perm=np.asarray(ev["perm"], np.int32),
+                    objective=ev["objective"], baseline=ev["baseline"],
+                    algorithm=ev["algorithm"], n=ev["n"],
+                    bucket=ev["bucket"], cached=False, seconds=0.0,
+                    batch_size=0, tier=ev["tier"],
+                    degraded=ev["degraded"],
+                    degrade_reason=ev["degrade_reason"])
+            elif kind == "start":
+                h = by_id[ev["job_id"]]
+                rm._drain_arrivals()
+                rm._queue.remove(h)
+                h.allocation = rm.cluster.allocate_nodes(
+                    h.job_id, np.asarray(ev["nodes"], np.int64))
+                h.response = maps.pop(ev["job_id"])
+                h.candidate_policy = ev["policy"]
+                h.backfilled = ev["backfilled"]
+                if h.backfilled:
+                    rm.stats.backfilled += 1
+                h.state = RUNNING
+                h.start_s = ev["start_s"]
+                h.finish_s = ev["finish_s"]
+                heapq.heappush(rm._running, (h.finish_s, h.seq, h))
+            elif kind == "release":
+                # The journal's own record is authoritative; the drain
+                # pops exactly the jobs whose finish the clock reached
+                # (journal writes suppressed: rm._journal is still None
+                # or the caller's, attached below).
+                rm._drain_completions()
+        # Orphan map records (crash between map and start) are dropped.
+        if journal is not None:
+            rm._journal = (journal if isinstance(journal, RMJournal)
+                           else RMJournal(journal))
+        return rm
+
     # ------------------------------------------------------------ internals
     def _advance(self, t: float) -> None:
         if t < self.clock - _EPS:
@@ -411,6 +600,9 @@ class ResourceManager:
             self.cluster.release(h.job_id)
             h.state = FINISHED
             self.stats.completed += 1
+            if self._journal is not None:
+                self._journal.append({"ev": "release", "t": self.clock,
+                                      "job_id": h.job_id})
 
     def _drain_arrivals(self) -> None:
         while self._arrivals and self._arrivals[0][0] <= self.clock + _EPS:
@@ -439,10 +631,9 @@ class ResourceManager:
             ends_by_shadow = self.clock + j.spec.run_s <= shadow_t + _EPS
             if ((ends_by_shadow or j.spec.size <= spare)
                     and j.spec.size <= self.cluster.num_free
-                    and self._try_start(j)):
+                    and self._try_start(j, backfilled=True)):
                 if not ends_by_shadow:
                     spare -= j.spec.size   # consumes the head's slack
-                j.backfilled = True
                 self.stats.backfilled += 1
                 self._queue.pop(i)
             else:
@@ -462,7 +653,7 @@ class ResourceManager:
         return math.inf, self.cluster.num_nodes   # cannot happen when the
         #                                           job fits the machine
 
-    def _try_start(self, h: JobHandle) -> bool:
+    def _try_start(self, h: JobHandle, backfilled: bool = False) -> bool:
         """The allocate-then-map wave: carve K candidates, reserve their
         union, score all K induced subgraphs in one engine wave, promote
         the argmin candidate.  False when the job cannot start now."""
@@ -503,6 +694,7 @@ class ResourceManager:
         h.candidate_policy = cands[best].policy
         h.num_candidates = len(cands)
         h.wave_batches = wave_batches
+        h.backfilled = backfilled
         h.state = RUNNING
         h.start_s = self.clock
         h.finish_s = self.clock + spec.run_s
@@ -511,4 +703,23 @@ class ResourceManager:
         self.stats.wave_candidates += len(cands)
         self.stats.max_batches_per_wave = max(
             self.stats.max_batches_per_wave, wave_batches)
+        if self._journal is not None:
+            r = h.response
+            # map strictly before start: recovery never applies a start
+            # without its mapping (a crash between the two writes leaves
+            # an orphan map record, which recovery ignores).
+            self._journal.append({
+                "ev": "map", "t": self.clock, "job_id": spec.job_id,
+                "perm": np.asarray(r.perm).tolist(),
+                "objective": float(r.objective),
+                "baseline": float(r.baseline), "algorithm": r.algorithm,
+                "n": int(r.n), "bucket": r.bucket, "tier": r.tier,
+                "degraded": bool(r.degraded),
+                "degrade_reason": r.degrade_reason})
+            self._journal.append({
+                "ev": "start", "t": self.clock, "job_id": spec.job_id,
+                "nodes": np.asarray(h.allocation.nodes).tolist(),
+                "start_s": h.start_s, "finish_s": h.finish_s,
+                "policy": h.candidate_policy,
+                "backfilled": h.backfilled})
         return True

@@ -337,3 +337,128 @@ def test_random_streams_random_kills_fixed_seeds(case_seed):
     """Deterministic fallback sweep so the property holds even where
     hypothesis is not installed."""
     _random_stream_random_kills(case_seed)
+
+
+# ------------------------------------------- deadline wall + degradation
+def test_deadline_wall_degrades_then_discards_late_result():
+    """The only worker hangs for 3 s; a request with a 250 ms deadline
+    must resolve by the degradation ladder well before the hang ends,
+    and the worker's late real result must be eaten by the guard."""
+    C, M = _instance(6, seed=160)
+    with make_fleet(workers=1,
+                    fault_plan=FaultPlan(delay_worker_s={0: 3.0})) as fleet:
+        req = MapRequest(job_id="d0", C=C, M=M, algorithm="psa",
+                         seed=160, deadline_ms=250.0)
+        t0 = time.monotonic()
+        fut = fleet.submit(req)
+        out = fleet.flush()
+        elapsed = time.monotonic() - t0
+        resp = fut.result(timeout=0)
+        assert elapsed < 1.5               # deadline + pump, not the hang
+        assert resp.degraded and resp.degrade_reason == "deadline_identity"
+        assert sorted(resp.perm.tolist()) == list(range(6))
+        assert resp.objective == resp.baseline
+        assert out["d0"].degraded
+        assert fleet.stats.degraded == 1
+        # the hung worker eventually delivers; first-result-wins discards
+        # it but its perm still warms the shape tier
+        assert wait_until(lambda: fleet.stats.duplicate_results >= 1,
+                          timeout=60.0), "late real result never arrived"
+        assert fut.result(timeout=0) is resp          # unchanged
+        assert fleet.stats.resolved == 1
+        # same shape, distinct exact digest (cache_seed), same hang: the
+        # ladder now has a real permutation to offer instead of identity
+        fut2 = fleet.submit(MapRequest(job_id="d1", C=C, M=M,
+                                       algorithm="psa", seed=161,
+                                       cache_seed=True,
+                                       deadline_ms=250.0))
+        fleet.flush()
+        resp2 = fut2.result(timeout=0)
+        assert resp2.degraded
+        assert resp2.degrade_reason == "deadline_shape_cache"
+        assert sorted(resp2.perm.tolist()) == list(range(6))
+        assert resp2.objective <= resp2.baseline      # never worse
+
+
+def test_no_deadline_means_no_degradation():
+    reqs = make_reqs(2, seed0=170)
+    refs = single_engine_results(reqs)
+    with make_fleet(workers=1,
+                    fault_plan=FaultPlan(delay_worker_s={0: 0.3})) as fleet:
+        [fleet.submit(r) for r in reqs]
+        out = fleet.flush()
+    assert fleet.stats.degraded == 0
+    assert_bitwise_equal(out, refs)
+
+
+# ----------------------------------------------- compiling grace period
+def test_compiling_grace_exempts_first_delivery_from_staleness():
+    """A worker silent for 0.35 s against a 0.1 s heartbeat timeout is a
+    hang -- unless it has never delivered (cold XLA compile looks
+    exactly like this).  With the grace it survives and delivers."""
+    reqs = make_reqs(1, seed0=150)
+    refs = single_engine_results(reqs)
+    with make_fleet(workers=2, heartbeat_timeout_s=0.1,
+                    compiling_grace_s=5.0,
+                    fault_plan=FaultPlan(delay_worker_s={0: 0.35})) as fleet:
+        fleet.submit(reqs[0])
+        out = fleet.flush()
+    assert fleet.stats.worker_deaths == 0
+    assert fleet.stats.requeued == 0
+    assert_bitwise_equal(out, refs)
+
+
+def test_zero_compiling_grace_still_declares_death():
+    """Control for the grace test: identical fault, grace 0 -> the
+    staleness detector fires and the request recovers elsewhere."""
+    reqs = make_reqs(1, seed0=150)
+    refs = single_engine_results(reqs)
+    with make_fleet(workers=2, heartbeat_timeout_s=0.1,
+                    compiling_grace_s=0.0,
+                    fault_plan=FaultPlan(delay_worker_s={0: 0.35})) as fleet:
+        fut = fleet.submit(reqs[0])
+        out = fleet.flush()
+        assert fut.done()
+        assert fleet.stats.worker_deaths == 1
+        assert fleet.stats.requeued == 1
+    assert_bitwise_equal(out, refs)
+
+
+# ------------------------------------------------- cancel + backpressure
+def test_cancel_before_dispatch_is_counted_and_skipped():
+    from repro.serve import MapCancelled
+    reqs = make_reqs(2, seed0=180)
+    refs = single_engine_results(reqs[:1])
+    with make_fleet(workers=1) as fleet:
+        f0 = fleet.submit(reqs[0])
+        f1 = fleet.submit(reqs[1])
+        assert f1.cancel()                 # still queued: cancel wins
+        assert not f1.cancel()             # second cancel loses (resolved)
+        assert f1.cancelled() and f1.done()
+        with pytest.raises(MapCancelled):
+            f1.result(timeout=0)
+        out = fleet.flush()                # must not raise for cancelled
+        assert f0.done() and not f0.cancelled()
+    assert "j1" not in out
+    assert fleet.stats.cancelled == 1
+    assert fleet.stats.resolved == 1
+    assert fleet.stats.solver_calls == 1   # the cancelled req never solved
+    assert_bitwise_equal(out, refs)
+
+
+def test_max_pending_rejects_with_queue_full_future():
+    from repro.serve import QueueFull
+    reqs = make_reqs(3, seed0=190)
+    refs = single_engine_results(reqs[:2])
+    with make_fleet(workers=1, max_pending=2) as fleet:
+        f0 = fleet.submit(reqs[0])
+        f1 = fleet.submit(reqs[1])
+        f2 = fleet.submit(reqs[2])         # over the limit: pre-failed
+        assert f2.done()
+        with pytest.raises(QueueFull):
+            f2.result(timeout=0)
+        assert fleet.stats.rejected == 1
+        out = fleet.flush()                # accepted work is unaffected
+        assert f0.done() and f1.done()
+    assert_bitwise_equal(out, refs)
+    assert fleet.stats.resolved == 2 and fleet.stats.failed == 0

@@ -575,3 +575,72 @@ def test_warmup_precompiles_and_leaves_results_unchanged():
     assert np.float64(warmed.objective).tobytes() == \
         np.float64(cold.objective).tobytes()
     np.testing.assert_array_equal(warmed.perm, cold.perm)
+
+
+# ------------------------------------------- (h) cancel + admission control
+def test_map_future_cancel_claim_semantics():
+    """cancel() and resolution race through one claim lock: whichever
+    lands first wins, the loser is a no-op, and a cancelled future raises
+    MapCancelled (a RuntimeError, deliberately catchable as one)."""
+    from repro.serve.mapper import MapCancelled, MapFuture, MapResponse
+
+    fut = MapFuture()
+    assert not fut.done() and not fut.cancelled()
+    assert fut.cancel()                    # cancel wins the empty race
+    assert fut.done() and fut.cancelled()
+    assert not fut.cancel()                # idempotent: claim already taken
+    with pytest.raises(MapCancelled):
+        fut.result(timeout=0)
+    assert isinstance(fut.exception(timeout=0), RuntimeError)
+    # a late real result is discarded by the claim guard
+    resp = MapResponse(job_id="x", perm=np.arange(4), objective=1.0,
+                       baseline=2.0, algorithm="psa", n=4, bucket=4,
+                       cached=False, seconds=0.0)
+    assert not fut._resolve(resp)
+    assert fut.cancelled()
+    with pytest.raises(MapCancelled):
+        fut.result(timeout=0)
+
+    # the mirror race: resolution first, cancel loses, result stands
+    fut2 = MapFuture()
+    assert fut2._resolve(resp)
+    assert not fut2.cancel()
+    assert not fut2.cancelled()
+    assert fut2.result(timeout=0) is resp
+
+
+def test_engine_cancel_skips_solve_and_counts():
+    from repro.serve.mapper import MapCancelled
+    eng = _engine(buckets=(8,))
+    C, M = _instance(6, seed=300)
+    C2, M2 = _instance(6, seed=301)
+    keep = eng.submit(MapRequest(job_id="keep", C=C, M=M, seed=300))
+    drop = eng.submit(MapRequest(job_id="drop", C=C2, M=M2, seed=301))
+    assert drop.cancel()
+    calls0 = eng.stats.solver_calls
+    out = eng.flush()                      # must not raise for cancelled
+    assert "drop" not in out
+    assert keep.done() and not keep.cancelled()
+    assert eng.stats.solver_calls - calls0 == 1
+    assert eng.stats.cancelled == 1
+
+
+def test_engine_max_pending_rejects_with_queue_full():
+    from repro.serve.mapper import QueueFull
+    eng = _engine(buckets=(8,), max_pending=2)
+    reqs = [MapRequest(job_id=f"q{i}", C=C, M=M, seed=310 + i)
+            for i, (C, M) in enumerate(_instance(6, 310 + i)
+                                       for i in range(3))]
+    f0, f1 = eng.submit(reqs[0]), eng.submit(reqs[1])
+    f2 = eng.submit(reqs[2])               # queue full: pre-failed future
+    assert f2.done()
+    with pytest.raises(QueueFull):
+        f2.result(timeout=0)
+    assert eng.stats.rejected == 1
+    out = eng.flush()
+    assert f0.done() and f1.done()
+    assert set(out) == {"q0", "q1"}        # accepted work unaffected
+    # the queue drained: the same request is admitted now
+    f3 = eng.submit(reqs[2])
+    eng.flush()
+    assert sorted(f3.result(timeout=0).perm.tolist()) == list(range(6))

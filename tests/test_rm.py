@@ -4,6 +4,13 @@ import dataclasses
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings as hyp_settings, \
+        strategies as hyp_st
+except ImportError:                       # optional test dependency
+    from _hypothesis_compat import given, settings as hyp_settings, \
+        st as hyp_st
+
 from repro.core import instances
 from repro.serve import (Candidate, ClusterState, JobSpec, MappingEngine,
                          MapRequest, MapResponse, ResourceManager,
@@ -221,3 +228,165 @@ def test_unschedulable_queue_raises():
     rm.submit_job(JobSpec(job_id="j", size=4, run_s=1.0))
     with pytest.raises(RuntimeError, match="never be scheduled"):
         rm.run()
+
+
+# ------------------------------------------ journal + crash-consistent recovery
+def _journaled_run(tmp_path, n_jobs=6, name="j.jsonl"):
+    from repro.serve import RMJournal  # noqa: F401  (exercised below)
+    path = tmp_path / name
+    rm = ResourceManager(_grid(), _engine(), candidates=2,
+                         policies=("compact", "scatter"),
+                         journal=str(path))
+    specs = [JobSpec(job_id=f"job{i}", size=3 + (i % 3), run_s=1.0 + i,
+                     arrival_s=0.5 * i, seed=i) for i in range(n_jobs)]
+    for s in specs:
+        rm.submit_job(s)
+    rm.run()
+    rm._journal.close()
+    return rm, path
+
+
+def test_journal_round_trip_recovers_exact_state(tmp_path):
+    rm, path = _journaled_run(tmp_path)
+    rm2 = ResourceManager.recover(_grid(), path)
+    done = {h.job_id for h in rm.handles if h.done()}
+    done2 = {h.job_id for h in rm2.handles if h.done()}
+    assert done2 == done and len(done) == 6
+    assert rm2.clock == rm.clock
+    assert rm2._busy_integral == rm._busy_integral
+    assert rm2.cluster.num_free == rm.cluster.num_free == 8
+    assert rm2.stats.backfilled == rm.stats.backfilled
+    by_id = {h.job_id: h for h in rm2.handles}
+    for h in rm.handles:                  # every committed mapping survives
+        g = by_id[h.job_id]
+        np.testing.assert_array_equal(g.response.perm, h.response.perm)
+        assert g.response.objective == h.response.objective
+        assert (g.start_s, g.finish_s) == (h.start_s, h.finish_s)
+        assert g.backfilled == h.backfilled
+        assert g.candidate_policy == h.candidate_policy
+
+
+def test_journal_torn_tail_recovers_committed_prefix(tmp_path):
+    """A crash mid-append leaves a torn final line: recovery must use
+    every fsync'd record before it and ignore the tear (the run_s values
+    are distinct, so the dropped release leaves exactly one job
+    running)."""
+    from repro.serve import RMJournal
+    rm, path = _journaled_run(tmp_path)
+    raw = path.read_bytes()
+    torn = tmp_path / "torn.jsonl"
+    torn.write_bytes(raw[:-10])           # tear the last (release) record
+    events = RMJournal.read_events(torn)
+    assert len(events) == len(RMJournal.read_events(path)) - 1
+    assert events[-1]["ev"] != RMJournal.read_events(path)[-1]["ev"] or \
+        events[-1]["job_id"] != RMJournal.read_events(path)[-1]["job_id"]
+    rm2 = ResourceManager.recover(_grid(), torn)
+    running = [h for h in rm2.handles if h.state == RUNNING]
+    assert len(running) == 1              # its release was the torn line
+    h = running[0]
+    assert h.allocation is not None
+    assert rm2.cluster.num_free == 8 - h.spec.size
+    assert sorted(h.response.perm.tolist()) == list(range(h.spec.size))
+    done = {e["job_id"] for e in events if e["ev"] == "release"}
+    assert {g.job_id for g in rm2.handles if g.done()} == done
+
+
+def test_recovered_manager_continues_to_completion(tmp_path):
+    """Crash mid-run (journal simply stops), recover with a fresh
+    engine, keep scheduling: every job still completes exactly once."""
+    path = tmp_path / "crash.jsonl"
+    rm = ResourceManager(_grid(), _engine(), candidates=2,
+                         journal=str(path))
+    specs = [JobSpec(job_id=f"c{i}", size=3 + (i % 3), run_s=2.0 + i,
+                     arrival_s=float(i)) for i in range(5)]
+    for s in specs:
+        rm.submit_job(s)
+    rm.schedule()                          # starts the head of the queue
+    rm.step()                              # and a bit more
+    rm._journal.close()                    # "crash": nothing else persists
+    started = {h.job_id for h in rm.handles
+               if h.state in (RUNNING,) or h.done()}
+    assert started                         # the crash happened mid-run
+    rm2 = ResourceManager.recover(_grid(), path, _engine(), candidates=2,
+                                  journal=str(path))
+    rep = rm2.run()
+    assert rep.jobs == 5
+    assert all(h.done() for h in rm2.handles)
+    assert rm2.cluster.num_free == 8
+    rm2._journal.close()
+    # the journal now tells the whole story: recovering *again* yields
+    # the fully-completed state
+    rm3 = ResourceManager.recover(_grid(), path)
+    assert {h.job_id for h in rm3.handles if h.done()} == \
+        {f"c{i}" for i in range(5)}
+
+
+# --------------------------------------------------------- admission control
+def test_max_pending_rejects_before_any_mutation(tmp_path):
+    from repro.serve import QueueFull, RMJournal
+    path = tmp_path / "bp.jsonl"
+    rm = ResourceManager(_grid(), _engine(), max_pending=2,
+                         journal=str(path))
+    rm.submit_job(JobSpec(job_id="a", size=4, run_s=1.0))
+    rm.submit_job(JobSpec(job_id="b", size=4, run_s=1.0))
+    free0 = rm.cluster.num_free
+    with pytest.raises(QueueFull):
+        rm.submit_job(JobSpec(job_id="c", size=4, run_s=1.0))
+    # the rejected job left no trace: no handle, no journal record, no
+    # cluster mutation
+    assert [h.job_id for h in rm.handles] == ["a", "b"]
+    assert rm.cluster.num_free == free0
+    assert rm.stats.submitted == 2
+    arrivals = [e for e in RMJournal.read_events(path)
+                if e["ev"] == "arrival"]
+    assert [e["job_id"] for e in arrivals] == ["a", "b"]
+    rm.run()                               # accepted jobs are unaffected
+    assert all(h.done() for h in rm.handles)
+    rm._journal.close()
+
+
+def _overload_property(case_seed):
+    """Random streams against a small max_pending: accepted jobs all
+    complete (no accepted future is ever lost), rejected jobs never
+    mutate ClusterState, and occupancy returns to empty."""
+    rng = np.random.default_rng(case_seed)
+    max_pending = int(rng.integers(1, 4))
+    n_jobs = int(rng.integers(3, 10))
+    rm = ResourceManager(_grid(), _engine(), max_pending=max_pending)
+    free0 = rm.cluster.num_free
+    accepted, rejected = [], 0
+    from repro.serve import QueueFull
+    for i in range(n_jobs):
+        spec = JobSpec(job_id=f"p{i}", size=int(rng.integers(2, 7)),
+                       run_s=float(rng.integers(1, 5)),
+                       arrival_s=float(rng.integers(0, 3)), seed=i)
+        free_before = rm.cluster.num_free
+        handles_before = len(rm.handles)
+        try:
+            accepted.append(rm.submit_job(spec))
+        except QueueFull:
+            rejected += 1
+            assert rm.cluster.num_free == free_before
+            assert len(rm.handles) == handles_before
+    assert len(accepted) + rejected == n_jobs
+    assert len(accepted) >= min(max_pending, n_jobs)
+    rep = rm.run()
+    assert rep.jobs == len(accepted)
+    for h in accepted:                    # no accepted future lost
+        assert h.done()
+        assert sorted(h.response.perm.tolist()) == \
+            list(range(h.spec.size))
+    assert rm.cluster.num_free == free0   # occupancy conserved
+
+
+@pytest.mark.slow
+@given(hyp_st.integers(min_value=0, max_value=2**31 - 1))
+@hyp_settings(max_examples=6, deadline=None)
+def test_overload_property_random_streams(case_seed):
+    _overload_property(case_seed)
+
+
+@pytest.mark.parametrize("case_seed", [11, 4242, 80808])
+def test_overload_property_fixed_seeds(case_seed):
+    """Deterministic fallback sweep (runs even without hypothesis)."""
+    _overload_property(case_seed)
