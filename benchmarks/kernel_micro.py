@@ -1,24 +1,44 @@
-"""Kernel microbenchmarks: QAP objective / swap-delta throughput.
+"""Kernel microbenchmarks: QAP objective / swap-delta / fused-step throughput.
 
 On this CPU container the timed path is the pure-jnp reference (the
 production CPU dispatch); the Pallas kernels are validated in interpret mode
-(tests/test_kernels.py) and targeted at TPU.  The derived column reports the
-achieved element throughput and the TPU roofline estimate for the kernel
-(VMEM-resident one-hot matmul formulation).
+(tests/test_kernels.py, tests/test_fused.py) and targeted at TPU.  The
+derived column reports the achieved element throughput and the TPU roofline
+estimate for the kernel (VMEM-resident one-hot matmul formulation).
+
+Besides the CSV rows consumed by ``benchmarks/run.py``, results merge into
+``BENCH_mapper.json`` under ``"kernel_micro"`` (per-kernel
+candidate-evals/s) and are rendered into README.md by
+``benchmarks/readme_table.py`` — the same pipeline as the service
+benchmarks.
+
+Usage:
+    PYTHONPATH=src python benchmarks/run.py kernel
+    PYTHONPATH=src python benchmarks/kernel_micro.py [--json BENCH_mapper.json]
 """
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import qap
-from repro.kernels import ref
-from . import common
+from repro.kernels import ops, ref
+
+try:                                     # package form (benchmarks.run)
+    from . import common
+except ImportError:                      # direct script invocation
+    import common
 
 
-def run() -> list:
+def run(json_path: str | None = "BENCH_mapper.json") -> list:
     rows = []
+    payload = {
+        "config": {"backend": jax.default_backend()},
+        "objective": {}, "delta": {}, "sa_step": {}, "ga_step": {},
+    }
     rng = np.random.default_rng(0)
     for n, batch in ((125, 64), (343, 64), (729, 32)):
         C = jnp.asarray(rng.integers(0, 50, (n, n)), jnp.float32)
@@ -33,6 +53,11 @@ def run() -> list:
         rows.append(common.csv_row(
             f"kernel.objective.n={n}.b={batch}", t / batch * 1e6,
             f"cpu_gelem_s={elems/t/1e9:.2f};tpu_est_us={tpu_s*1e6:.1f}"))
+        payload["objective"][f"n={n}"] = {
+            "batch": batch,
+            "us_per_eval": t / batch * 1e6,
+            "candidate_evals_per_s": batch / t,
+        }
 
         p = perms[0]
         pairs = qap.random_swap_pairs(jax.random.PRNGKey(1), 256, n)
@@ -41,4 +66,70 @@ def run() -> list:
         rows.append(common.csv_row(
             f"kernel.delta.n={n}.k=256", t / 256 * 1e6,
             f"cpu_gelem_s={256*n/t/1e9:.3f};onchip=O(N)/swap"))
+        payload["delta"][f"n={n}"] = {
+            "k": 256,
+            "us_per_eval": t / 256 * 1e6,
+            "candidate_evals_per_s": 256 / t,
+        }
+
+        # Fused SA temperature step (kernels/qap_sa_step.py): one launch
+        # decides max_neighbors candidates per chain with state in VMEM.
+        chains, k, max_success = 16, 50, 5
+        f0 = ref.qap_objective_ref(C, M, perms[:chains])
+        temps = jnp.full((chains,), float(jnp.std(f0)) + 1.0, jnp.float32)
+        keys = jax.random.key_data(
+            jax.random.split(jax.random.PRNGKey(2), chains)).astype(jnp.uint32)
+        nvs = jnp.full((chains,), n, jnp.int32)
+        sa = jax.jit(lambda p_, f_, ks: ops.qap_sa_step(
+            C, M, p_, f_, p_, f_, temps, ks, nvs,
+            max_neighbors=k, max_success=max_success))
+        t, _ = common.time_fn(sa, perms[:chains], f0, keys)
+        rows.append(common.csv_row(
+            f"kernel.sa_step.n={n}.chains={chains}", t / chains * 1e6,
+            f"cand_evals_s={chains*k/t/1e9:.4f}e9;launches=1/step"))
+        payload["sa_step"][f"n={n}"] = {
+            "chains": chains, "max_neighbors": k,
+            "us_per_step": t / chains * 1e6,
+            "candidate_evals_per_s": chains * k / t,
+        }
+
+        # Fused GA generation step (kernels/qap_ga_step.py): one launch
+        # breeds + scores + replaces n_off offspring per island.
+        islands, pop_size, n_off = 4, 16, 8
+        pops = jnp.stack([qap.random_permutations(jax.random.PRNGKey(10 + i),
+                                                  pop_size, n)
+                          for i in range(islands)])
+        fits = jax.vmap(lambda pp: ref.qap_objective_ref(C, M, pp))(pops)
+        gkeys = jax.random.key_data(
+            jax.random.split(jax.random.PRNGKey(3), islands)).astype(jnp.uint32)
+        gnvs = jnp.full((islands,), n, jnp.int32)
+        ga = jax.jit(lambda pp, ff, ks: ops.qap_ga_step(
+            C, M, pp, ff, ks, gnvs, n_off=n_off, tournament=3,
+            p_crossover=0.8, p_mutation=0.2))
+        t, _ = common.time_fn(ga, pops, fits, gkeys)
+        rows.append(common.csv_row(
+            f"kernel.ga_step.n={n}.islands={islands}",
+            t / islands * 1e6,
+            f"offspring_evals_s={islands*n_off/t:.1f};launches=1/gen"))
+        payload["ga_step"][f"n={n}"] = {
+            "islands": islands, "n_offspring": n_off,
+            "us_per_generation": t / islands * 1e6,
+            "candidate_evals_per_s": islands * n_off / t,
+        }
+    if json_path:
+        common.write_bench_json(json_path, "kernel_micro", payload)
     return rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default="BENCH_mapper.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(args.json):
+        print(row, flush=True)
+    print(f"wrote {args.json} [kernel_micro]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,7 @@
 """Regenerate README.md's benchmark table from BENCH_mapper.json.
 
 The benchmarks (``mapper_throughput.py``, ``scheduler_sim.py``,
-``solver_hotloop.py``, ``sparse_scale.py``) merge
+``solver_hotloop.py``, ``kernel_micro.py``, ``sparse_scale.py``) merge
 machine-readable results into ``BENCH_mapper.json``; this script renders
 the sections it finds into a markdown table and splices it between the
 ``BENCH_TABLE_START`` / ``BENCH_TABLE_END`` markers in ``README.md``.
@@ -154,6 +154,51 @@ def render_table(data: dict) -> str:
                 _fmt(wave.get("island", {}).get("maps_per_s"), 1),
                 _fmt(wave.get("wide", {}).get("maps_per_s"), 1),
                 _fmt(wave.get("speedup_wide_vs_island"))))
+    sec = data.get("fused")
+    if sec:
+        cfg = sec.get("config", {})
+        for key, sa in sorted(sec.get("sa", {}).items()):
+            # baseline: the event loop replaying the same counter-RNG
+            # stream; this path: the fused single-launch temperature step
+            # (bitwise-equal results, tests/test_fused.py)
+            disp = sa.get("dispatches_per_temperature_step", {})
+            rows.append((
+                f"SA fused step ({key}, temp-steps/s)",
+                (f"{cfg.get('batch', '?')}-wave, "
+                 f"{disp.get('event', '?')} -> {disp.get('fused', '?')} "
+                 f"dispatches/step"),
+                _fmt(sa.get("event", {}).get("rounds_per_s"), 1),
+                _fmt(sa.get("fused", {}).get("rounds_per_s"), 1),
+                _fmt(sa.get("speedup_fused_vs_event"))))
+        for key, ga in sorted(sec.get("ga", {}).items()):
+            # baseline: the wide loop on the same counter-RNG stream;
+            # this path: the fused single-launch generation
+            hbm = ga.get("hbm_state_roundtrips_per_generation", {})
+            rows.append((
+                f"GA fused step ({key}, generations/s)",
+                (f"{cfg.get('batch', '?')}-wave, "
+                 f"{hbm.get('wide', '?')} -> {hbm.get('fused', '?')} "
+                 f"HBM roundtrips/gen"),
+                _fmt(ga.get("wide", {}).get("rounds_per_s"), 1),
+                _fmt(ga.get("fused", {}).get("rounds_per_s"), 1),
+                _fmt(ga.get("speedup_fused_vs_wide"))))
+    sec = data.get("kernel_micro")
+    if sec:
+        for kernel, unit in (("objective", "perm-evals"),
+                             ("delta", "cand-evals"),
+                             ("sa_step", "cand-evals"),
+                             ("ga_step", "offspring-evals")):
+            entries = sec.get(kernel, {})
+            if not entries:
+                continue
+            # one row per kernel at the largest benched order; baseline
+            # column repeats the measured rate (no A/B pair here)
+            key = max(entries, key=lambda k: int(k.split("=")[1]))
+            rate = entries[key].get("candidate_evals_per_s")
+            rows.append((
+                f"kernel {kernel} ({key}, {unit}/s)",
+                f"{sec.get('config', {}).get('backend', '?')} dispatch path",
+                _fmt(rate, 1), _fmt(rate, 1), "1.00"))
     sec = data.get("sparse_scale")
     if sec:
         for e in sec.get("eval", []):

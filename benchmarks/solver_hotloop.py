@@ -20,8 +20,22 @@ full ``run_pga`` solves (generations/s and offspring-evals/s) and
 end-to-end ``run_pga_batch`` waves, both at the engine's default GA
 budget.
 
+``--loop fused`` — megakernel steps vs the unfused counter-RNG loops.
+``SAConfig(loop="fused")`` runs a whole temperature step (all
+``max_neighbors`` candidates, Metropolis decisions, best-so-far updates)
+as **one** Pallas launch with chain state resident in VMEM, and
+``GAConfig(eval="fused")`` does the same for a whole GA generation
+(selection / OX / mutation / offspring evaluation / replacement /
+elitism).  Both replay the identical on-chip counter-RNG stream as the
+unfused ``loop="event", rng="counter"`` / ``eval="wide", rng="counter"``
+paths, so results are bitwise-equal on the CPU reference backend
+(tests/test_fused.py) and asserted on every run here.  Timed: end-to-end
+batched waves, reported as rounds/s (temperature steps or generations
+per second) plus the analytic dispatch / HBM-state-roundtrip counts per
+solve phase.  Results go to ``BENCH_mapper.json`` under ``"fused"``.
+
 Results merge into ``BENCH_mapper.json`` under ``"solver_hotloop"`` /
-``"ga_hotloop"`` and are rendered into README.md by
+``"ga_hotloop"`` / ``"fused"`` and are rendered into README.md by
 ``benchmarks/readme_table.py``.  Equality of old and new loops is
 asserted on every run.
 
@@ -29,6 +43,7 @@ Usage:
     PYTHONPATH=src python benchmarks/solver_hotloop.py             # both
     PYTHONPATH=src python benchmarks/solver_hotloop.py --mode ga
     PYTHONPATH=src python benchmarks/solver_hotloop.py --dry-run   # CI smoke
+    PYTHONPATH=src python benchmarks/solver_hotloop.py --loop fused
 """
 from __future__ import annotations
 
@@ -218,6 +233,143 @@ def bench_ga_batch(n: int, batch: int, islands: int, cfg: genetic.GAConfig,
     return out
 
 
+def bench_fused_sa(n: int, batch: int, cfg: annealing.SAConfig,
+                   repeats: int):
+    """Fused single-launch temperature steps vs the event loop replaying
+    the identical counter-RNG stream (interleaved A/B; equality asserted,
+    bitwise on the CPU reference backend)."""
+    insts = [random_instance(n, 300 + i) for i in range(batch)]
+    Cs = jnp.stack([c for c, _ in insts])
+    Ms = jnp.stack([m for _, m in insts])
+    nvs = jnp.full((batch,), n, jnp.int32)
+    keys = jnp.stack([jax.random.PRNGKey(i) for i in range(batch)])
+    variants = {"event": replace(cfg, loop="event", rng="counter"),
+                "fused": replace(cfg, loop="fused")}
+    runs = {name: (lambda c=c: annealing.run_psa_batch(Cs, Ms, keys, c, 2,
+                                                       n_valid=nvs))
+            for name, c in variants.items()}
+    fs = {name: np.asarray(jax.block_until_ready(run())[1])
+          for name, run in runs.items()}       # compile + equality
+    _assert_equal(fs["event"], fs["fused"])
+    ts = {name: [] for name in runs}
+    for _ in range(repeats):
+        for name, run in runs.items():         # interleaved A/B
+            ts[name].append(_timed(run))
+    steps = cfg.num_exchanges * cfg.iters_per_exchange
+    out = {}
+    for name in runs:
+        t = min(ts[name])
+        out[name] = {
+            "wave_ms": t * 1e3,
+            "maps_per_s": batch / t,
+            # a "round" == one temperature step of one batched wave
+            "rounds_per_s": steps * batch / t,
+        }
+    out["speedup_fused_vs_event"] = (out["fused"]["maps_per_s"]
+                                     / out["event"]["maps_per_s"])
+    # Analytic launch counts per temperature step (the solve phase):
+    # the event loop issues up to max_success acceptance rounds plus
+    # ceil(max_neighbors / event_width) window evaluations, each a
+    # separate qap_delta dispatch with chain state written back to HBM
+    # in between; the fused kernel is one launch with state in VMEM.
+    width = annealing.resolved_event_width(variants["event"], n)
+    k, s = cfg.max_neighbors, cfg.max_success
+    event_rounds = min(s, k) + -(-k // width)
+    out["dispatches_per_temperature_step"] = {"fused": 1,
+                                              "event": event_rounds}
+    out["hbm_state_roundtrips_per_step"] = {"fused": 1,
+                                            "event": event_rounds}
+    return out
+
+
+def bench_fused_ga(n: int, batch: int, islands: int, cfg: genetic.GAConfig,
+                   repeats: int):
+    """Fused single-launch generations vs the wide loop replaying the
+    identical counter-RNG stream (interleaved A/B; equality asserted)."""
+    insts = [random_instance(n, 400 + i) for i in range(batch)]
+    Cs = jnp.stack([c for c, _ in insts])
+    Ms = jnp.stack([m for _, m in insts])
+    nvs = jnp.full((batch,), n, jnp.int32)
+    keys = jnp.stack([jax.random.PRNGKey(i) for i in range(batch)])
+    variants = {"wide": replace(cfg, eval="wide", rng="counter"),
+                "fused": replace(cfg, eval="fused")}
+    runs = {name: (lambda c=c: genetic.run_pga_batch(Cs, Ms, keys, c,
+                                                     islands, n_valid=nvs))
+            for name, c in variants.items()}
+    fs = {name: np.asarray(jax.block_until_ready(run())[1])
+          for name, run in runs.items()}
+    _assert_equal(fs["wide"], fs["fused"])
+    ts = {name: [] for name in runs}
+    for _ in range(repeats):
+        for name, run in runs.items():
+            ts[name].append(_timed(run))
+    out = {}
+    for name in runs:
+        t = min(ts[name])
+        out[name] = {
+            "wave_ms": t * 1e3,
+            "maps_per_s": batch / t,
+            # a "round" == one generation of one batched wave
+            "rounds_per_s": cfg.generations * batch / t,
+        }
+    out["speedup_fused_vs_wide"] = (out["fused"]["maps_per_s"]
+                                    / out["wide"]["maps_per_s"])
+    # The wide loop launches one qap_objective kernel per generation but
+    # round-trips the population through HBM between each XLA operator
+    # stage (selection, crossover, mutation, scoring, replacement,
+    # elitism); the fused kernel is one launch with the population in
+    # VMEM for all six stages.
+    out["dispatches_per_generation"] = {"fused": 1, "wide": 1}
+    out["hbm_state_roundtrips_per_generation"] = {"fused": 1, "wide": 6}
+    return out
+
+
+def run_fused(args) -> None:
+    if args.dry_run:
+        sa_cfg = annealing.SAConfig(max_neighbors=10, max_success=3,
+                                    iters_per_exchange=4,
+                                    num_exchanges=2, solvers=4)
+        ga_cfg = genetic.GAConfig(generations=6, pop_size=8)
+        ns, batch, islands = [16], 2, 2
+    else:
+        sa_cfg = annealing.SAConfig(max_neighbors=25, iters_per_exchange=30,
+                                    num_exchanges=20, solvers=8)
+        ga_cfg = genetic.GAConfig(generations=80, pop_size=32)
+        ns, batch, islands = [32, 64], 8, 2
+
+    payload = {
+        "config": {"backend": jax.default_backend(),
+                   "dry_run": args.dry_run, "batch": batch,
+                   "sa_max_neighbors": sa_cfg.max_neighbors,
+                   "sa_solvers": sa_cfg.solvers,
+                   "ga_generations": ga_cfg.generations,
+                   "ga_islands": islands},
+        "sa": {}, "ga": {},
+    }
+    for n in ns:
+        if args.mode in ("sa", "both"):
+            sa = bench_fused_sa(n, batch, sa_cfg, args.repeats)
+            payload["sa"][f"n={n}"] = sa
+            print(f"sa n={n:4d}  "
+                  f"{sa['event']['rounds_per_s']:8.1f} -> "
+                  f"{sa['fused']['rounds_per_s']:8.1f} temp-steps/s "
+                  f"({sa['speedup_fused_vs_event']:.2f}x)  dispatches/step: "
+                  f"{sa['dispatches_per_temperature_step']['event']} -> "
+                  f"{sa['dispatches_per_temperature_step']['fused']}")
+        if args.mode in ("ga", "both"):
+            ga = bench_fused_ga(n, batch, islands, ga_cfg, args.repeats)
+            payload["ga"][f"n={n}"] = ga
+            print(f"ga n={n:4d}  "
+                  f"{ga['wide']['rounds_per_s']:8.1f} -> "
+                  f"{ga['fused']['rounds_per_s']:8.1f} generations/s "
+                  f"({ga['speedup_fused_vs_wide']:.2f}x)  HBM roundtrips/gen: "
+                  f"{ga['hbm_state_roundtrips_per_generation']['wide']} -> "
+                  f"{ga['hbm_state_roundtrips_per_generation']['fused']}")
+    if args.json:
+        common.write_bench_json(args.json, "fused", payload)
+        print(f"wrote {args.json} [fused]")
+
+
 def run_sa(args) -> None:
     if args.dry_run:
         cfg = annealing.SAConfig(max_neighbors=10, max_success=3,
@@ -309,12 +461,18 @@ def main():
     ap.add_argument("--json", default="BENCH_mapper.json")
     ap.add_argument("--mode", choices=("sa", "ga", "both"), default="both",
                     help="which hot loop to benchmark")
+    ap.add_argument("--loop", choices=("default", "fused"), default="default",
+                    help="'fused' benches the megakernel steps against the "
+                         "unfused counter-RNG loops (equality asserted)")
     ap.add_argument("--dry-run", action="store_true",
                     help="tiny budgets: CI smoke that still writes JSON")
     ap.add_argument("--chains", type=int, default=64)
     ap.add_argument("--repeats", type=int, default=3)
     args = ap.parse_args()
 
+    if args.loop == "fused":
+        run_fused(args)
+        return
     if args.mode in ("sa", "both"):
         run_sa(args)
     if args.mode in ("ga", "both"):

@@ -44,13 +44,15 @@ use the standard UGR form and note the fix).
 from __future__ import annotations
 
 import functools
+import time
 from dataclasses import dataclass
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops as kernel_ops
+from repro.kernels import prng
 
 from . import qap, sparse
 
@@ -70,11 +72,28 @@ class SAConfig:
     num_exchanges: int = 50          # c;  total iterations = c * iters_per_exchange
     solvers: int = 125               # chains per process (Fig 5)
     seed_with: Optional[str] = None  # None | "greedy"  (initialisation variant)
-    loop: str = "event"              # "event" | "scan" hot-loop realisation
-                                     # (bitwise-identical; see module docstring)
-    event_width: Optional[int] = None  # candidates evaluated per wide round
-                                       # (None: backend default, see
-                                       # resolved_event_width)
+    loop: str = "event"              # "event" | "scan" | "fused" hot-loop
+                                     # realisation (bitwise-identical; "fused"
+                                     # = one Pallas launch per temperature
+                                     # step with on-chip counter draws, auto-
+                                     # falling back to "event" above the VMEM
+                                     # budget — see resolved_loop and
+                                     # docs/DESIGN.md §13)
+    rng: str = "host"                # "host" | "counter" draw regime:
+                                     # "counter" derives candidate pairs and
+                                     # Metropolis uniforms from the portable
+                                     # counter stream (kernels/prng.py) that
+                                     # the fused kernel replays on-chip —
+                                     # loop="fused" implies it; "host" keeps
+                                     # the original jax.random draws (the
+                                     # existing goldens)
+    event_width: Union[int, str, None] = None
+                                     # candidates evaluated per wide round:
+                                     # int | "auto" (one-shot measured
+                                     # autotune, cached per (backend, n),
+                                     # deterministic fallback) | None
+                                     # (backend default) — see
+                                     # resolved_event_width
     flows: str = "dense"             # "dense" | "sparse" flow representation:
                                      # "sparse" expects C as a
                                      # core.sparse.SparseFlows (convert once,
@@ -159,26 +178,109 @@ _CPU_EVENT_WIDTH = 6   # empirically balances wasted re-evaluation in the
                        # acceptance-dense (hot) phase against extra rounds
                        # in the sparse (cold) phase on the CPU backend
 
+# event_width="auto": measured widths, cached per (backend, n).  Populated
+# eagerly by autotune_event_width (mapper warmup / benchmarks); a cache
+# miss during tracing falls back to the deterministic backend default so
+# traced programs never depend on whether the autotune ran.
+_EVENT_WIDTH_CACHE: dict = {}
+_AUTO_WIDTHS = (1, 2, 4, 6, 8, 12, 16, 24, 32)
+_AUTO_SUCCESSES = 5    # cost-model round counts: a temperature level runs
+_AUTO_CANDIDATES = 50  # ~(successes + candidates / width) wide rounds
 
-def resolved_event_width(cfg: SAConfig) -> int:
+
+def _default_event_width(max_neighbors: int) -> int:
+    """Deterministic backend fallback (the pre-autotune constants)."""
+    if jax.default_backend() == "tpu":
+        return max_neighbors
+    return min(_CPU_EVENT_WIDTH, max_neighbors)
+
+
+def autotune_event_width(n: int, max_neighbors: int = 50,
+                         repeats: int = 3) -> int:
+    """One-shot measured pick for ``SAConfig.event_width="auto"``.
+
+    Times the jitted wide ``qap_delta`` dispatch at each candidate width
+    on a synthetic order-``n`` instance and picks the width minimising
+    the event-loop cost model ``(successes + candidates/width) * t(width)``
+    — a temperature level pays one wide round per acceptance plus enough
+    rounds to sweep the candidate list.  The result is cached per
+    (backend, n); the width never changes results (only how much is
+    evaluated per round), so tuning is a pure throughput knob.  Call this
+    eagerly (mapper warmup, benchmarks) — inside a trace,
+    :func:`resolved_event_width` only *reads* the cache.
+    """
+    backend = jax.default_backend()
+    cached = _EVENT_WIDTH_CACHE.get((backend, n))
+    if cached is not None:
+        return cached
+    key = jax.random.PRNGKey(0)
+    kc, km, kp = jax.random.split(key, 3)
+    C = jnp.round(jax.random.uniform(kc, (n, n)) * 9.0)
+    M = jnp.round(jax.random.uniform(km, (n, n)) * 9.0)
+    p = jnp.arange(n, dtype=jnp.int32)
+    delta = jax.jit(lambda c, m, pp, prs: kernel_ops.qap_delta(c, m, pp, prs))
+    best_w, best_cost = None, float("inf")
+    for w in _AUTO_WIDTHS:
+        pairs = qap.random_swap_pairs(kp, w, n, None)
+        delta(C, M, p, pairs).block_until_ready()        # compile
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            delta(C, M, p, pairs).block_until_ready()
+        t = (time.perf_counter() - t0) / repeats
+        cost = (_AUTO_SUCCESSES + _AUTO_CANDIDATES / w) * t
+        if cost < best_cost:
+            best_w, best_cost = w, cost
+    _EVENT_WIDTH_CACHE[(backend, n)] = best_w
+    return best_w
+
+
+def resolved_event_width(cfg: SAConfig, n: Optional[int] = None) -> int:
     """Candidates evaluated per wide acceptance-event round.
 
-    ``cfg.event_width`` when set; otherwise all ``max_neighbors``
-    candidates on TPU (one kernel launch covers every remaining
-    candidate, so the sequential depth per temperature level is at most
-    ``max_success + 1`` rounds) and a narrow ``_CPU_EVENT_WIDTH`` window
-    on CPU, where re-evaluating the full candidate set every round costs
-    more than it saves.  The width changes *only* how much is evaluated
-    per round — never which candidates are accepted — so results are
-    bitwise-identical for every width (tests/test_hotloop.py).
+    ``cfg.event_width`` when set to an int; ``"auto"`` reads the
+    per-(backend, n) measured cache (``autotune_event_width``) and falls
+    back to the deterministic backend default on a miss, so digests and
+    traced programs stay stable whether or not the autotune ran.
+    Otherwise all ``max_neighbors`` candidates on TPU (one kernel launch
+    covers every remaining candidate, so the sequential depth per
+    temperature level is at most ``max_success + 1`` rounds) and a narrow
+    ``_CPU_EVENT_WIDTH`` window on CPU, where re-evaluating the full
+    candidate set every round costs more than it saves.  The width
+    changes *only* how much is evaluated per round — never which
+    candidates are accepted — so results are bitwise-identical for every
+    width (tests/test_hotloop.py).
     """
+    if cfg.event_width == "auto":
+        w = _EVENT_WIDTH_CACHE.get((jax.default_backend(), n))
+        if w is None:
+            w = _default_event_width(cfg.max_neighbors)
+        return max(1, min(w, cfg.max_neighbors))
     if cfg.event_width is not None:
-        if cfg.event_width < 1:
-            raise ValueError(f"event_width must be >= 1, got {cfg.event_width}")
+        if not isinstance(cfg.event_width, int) or cfg.event_width < 1:
+            raise ValueError(
+                f"event_width must be >= 1 or 'auto', got {cfg.event_width!r}")
         return min(cfg.event_width, cfg.max_neighbors)
-    if jax.default_backend() == "tpu":
-        return cfg.max_neighbors
-    return min(_CPU_EVENT_WIDTH, cfg.max_neighbors)
+    return _default_event_width(cfg.max_neighbors)
+
+
+def resolved_loop(cfg: SAConfig, n: Optional[int] = None) -> str:
+    """The hot-loop realisation that will actually run at order ``n``.
+
+    ``"fused"`` needs the whole working set (C, M, their transposes, and
+    the chain state) resident in VMEM, so above the dense kernel cap
+    (``kernel_ops.fused_step_fits``) — and for sparse flows, which the
+    fused kernel does not stream — it degrades to the bitwise-equivalent
+    unfused ``"event"`` loop; nothing regresses at n=4096.
+    """
+    if cfg.loop not in ("event", "scan", "fused"):
+        raise ValueError(f"unknown hot-loop realisation {cfg.loop!r}")
+    if cfg.loop != "fused":
+        return cfg.loop
+    if cfg.flows == "sparse":
+        return "event"
+    if n is not None and not kernel_ops.fused_step_fits(n):
+        return "event"
+    return "fused"
 
 
 def _acceptance_event_loop(C: Array, M: Array, state: SAState, pairs: Array,
@@ -200,7 +302,7 @@ def _acceptance_event_loop(C: Array, M: Array, state: SAState, pairs: Array,
     identical to ``_candidate_scan`` for every window width.
     """
     k = cfg.max_neighbors
-    w = resolved_event_width(cfg)
+    w = resolved_event_width(cfg, state.p.shape[0])
 
     def cond(carry):
         _, _, _, _, start, successes = carry
@@ -242,20 +344,41 @@ def temperature_step(C: Array, M: Array, state: SAState, key: Array,
     ``max_success`` acceptances (paper steps 2-3).
 
     ``cfg.loop`` picks the realisation — ``"event"`` (wide batched rounds
-    through the kernel dispatch layer, the default) or ``"scan"`` (the
-    golden sequential reference); both produce bitwise-identical states
-    on the CPU reference path.  With ``n_valid`` candidate swaps stay
-    inside the padded instance's valid prefix."""
+    through the kernel dispatch layer, the default), ``"scan"`` (the
+    golden sequential reference), or ``"fused"`` (one
+    ``kernels.ops.qap_sa_step`` launch for the whole level, candidate
+    stream derived on-chip; degrades to ``"event"`` above the VMEM
+    budget, see ``resolved_loop``); all produce bitwise-identical states
+    on the CPU reference path.  ``cfg.rng`` picks the draw regime:
+    ``"counter"`` (implied by ``loop="fused"``) takes candidate pairs and
+    uniforms from the portable counter stream the fused kernel replays,
+    ``"host"`` keeps the original ``jax.random`` draws.  With ``n_valid``
+    candidate swaps stay inside the padded instance's valid prefix."""
+    if cfg.rng not in ("host", "counter"):
+        raise ValueError(f"unknown rng regime {cfg.rng!r}")
     n = state.p.shape[0]
-    kpair, kacc = jax.random.split(key)
-    pairs = qap.random_swap_pairs(kpair, cfg.max_neighbors, n, n_valid)
-    us = jax.random.uniform(kacc, (cfg.max_neighbors,))
-    if cfg.loop == "event":
-        p, f, best_p, best_f = _acceptance_event_loop(C, M, state, pairs, us, cfg)
-    elif cfg.loop == "scan":
-        p, f, best_p, best_f = _candidate_scan(C, M, state, pairs, us, cfg)
+    loop = resolved_loop(cfg, n)
+    if loop == "fused":
+        nv = jnp.int32(n) if n_valid is None else n_valid
+        p, f, best_p, best_f = kernel_ops.qap_sa_step(
+            C, M, state.p, state.f, state.best_p, state.best_f, state.temp,
+            prng.key_data(key), nv, max_neighbors=cfg.max_neighbors,
+            max_success=cfg.max_success,
+            event_width=resolved_event_width(cfg, n))
     else:
-        raise ValueError(f"unknown hot-loop realisation {cfg.loop!r}")
+        if cfg.rng == "counter" or cfg.loop == "fused":
+            pairs, us = prng.sa_step_draws(
+                key, cfg.max_neighbors,
+                jnp.int32(n) if n_valid is None else n_valid)
+        else:
+            kpair, kacc = jax.random.split(key)
+            pairs = qap.random_swap_pairs(kpair, cfg.max_neighbors, n, n_valid)
+            us = jax.random.uniform(kacc, (cfg.max_neighbors,))
+        if loop == "event":
+            p, f, best_p, best_f = _acceptance_event_loop(
+                C, M, state, pairs, us, cfg)
+        else:
+            p, f, best_p, best_f = _candidate_scan(C, M, state, pairs, us, cfg)
     temp = jnp.maximum(cool(state.temp, cfg, beta), cfg.t_final)
     return SAState(p=p, f=f, best_p=best_p, best_f=best_f, temp=temp)
 

@@ -1,0 +1,115 @@
+"""Stateless GA operator bodies, shared by host paths and the fused kernel.
+
+``genetic.order_crossover`` / ``swap_mutation`` / ``tournament_select``
+mix two concerns: *drawing* randomness from a JAX PRNG key and *applying*
+the operator.  The fused generation kernel (``kernels/qap_ga_step.py``)
+derives its draws from the portable counter stream (``kernels/prng.py``)
+inside the kernel body, so the apply halves must be callable there too —
+which means: pure jnp, no ``jax.random``, no scatters, no cumsum
+primitives Mosaic might reject (prefix sums are triangular-mask
+reductions), 1-D iotas via ``jax.lax.iota`` (the form the existing
+kernels already rely on).
+
+The exact same functions run in ``genetic._offspring_counter`` (the
+unfused ``rng="counter"`` host path) and ``kernels/ref.py``'s
+``qap_ga_step_ref`` oracle, so fused and unfused counter-mode
+generations are bitwise-identical by construction: every operator here
+is integer arithmetic (comparisons, masked integer sums), which f32/i32
+execute exactly on every backend.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+MAX_MUT = 4   # fixed per-individual mutation budget (see genetic.py docstring)
+
+
+def _prefix_sum(x: Array) -> Array:
+    """Inclusive integer prefix sum as a triangular-mask reduction.
+
+    ``jnp.cumsum`` may not lower inside a Pallas TPU kernel; the
+    triangular form is a plain masked row-sum and — being an integer
+    sum — produces the identical values in any summation order.
+    """
+    n = x.shape[0]
+    pos = jax.lax.iota(jnp.int32, n)
+    tri = pos[None, :] <= pos[:, None]
+    return jnp.sum(jnp.where(tri, x[None, :].astype(jnp.int32), 0), axis=1)
+
+
+def ox_apply(c1: Array, c2: Array, p1: Array, p2: Array,
+             n_valid: Array) -> Array:
+    """Order crossover given the cut points: child keeps ``p1[c1:c2]``,
+    remaining positions take ``p2``'s genes in p2-order from ``c2`` on.
+
+    The scatter-free one-hot/rank-matching body of
+    ``genetic.order_crossover`` with the cut drawing factored out (the
+    caller draws ``c1 <= c2`` in ``[0, n_valid)`` from whichever RNG
+    regime it runs).  Positions at or beyond ``n_valid`` stay identity —
+    with ``n_valid = n`` this is exactly the unmasked crossover, so one
+    code path serves full, padded, and kernel-padded (``n_pad``) sizes.
+    """
+    n = p1.shape[0]
+    nv = jnp.maximum(jnp.asarray(n_valid, jnp.int32), 1)
+    pos = jax.lax.iota(jnp.int32, n)
+    validp = pos < nv
+    seg_mask = (pos >= c1) & (pos < c2)
+    gene_in_seg = jnp.any((p1[:, None] == pos[None, :]) & seg_mask[:, None],
+                          axis=0)
+    rot = jnp.where(validp, (pos + c2) % nv, pos)
+    genes = jnp.take(p2, rot)
+    keep = ~jnp.take(gene_in_seg, genes) & validp
+    avail = ~jnp.take(seg_mask, rot) & validp
+    t_of_q = jnp.where(validp, (pos - c2) % nv, pos)
+    gene_rank = _prefix_sum(keep) - 1
+    pos_rank = _prefix_sum(avail) - 1
+    rankmat = (gene_rank[:, None] == pos[None, :]) & keep[:, None]
+    val_by_rank = jnp.sum(jnp.where(rankmat, genes[:, None], 0), axis=0)
+    r_of_q = jnp.clip(jnp.take(pos_rank, t_of_q), 0, n - 1)
+    child = jnp.where(seg_mask, p1, jnp.take(val_by_rank, r_of_q))
+    child = jnp.where(validp, child, pos)
+    return child.astype(p1.dtype)
+
+
+def mutation_gate(p_mutation: float, n_valid: Array) -> Array:
+    """Per-candidate-swap gate probability: expected ``p_mutation * n``
+    swaps realised as ``MAX_MUT`` gated candidates (genetic.py docstring)."""
+    return jnp.minimum(
+        p_mutation * jnp.asarray(n_valid, jnp.float32) / MAX_MUT, 1.0)
+
+
+def mutation_apply(p: Array, ii: Array, jj: Array, us: Array,
+                   gate_p: Array) -> Array:
+    """``MAX_MUT`` gated position swaps, scatter-free (select form).
+
+    Mirrors ``genetic.swap_mutation``'s scan body with the draws
+    externalised; ``ii == jj`` degenerates to a no-op exactly as the
+    scatter form does.  The loop is a static unroll (``MAX_MUT`` = 4).
+    """
+    n = p.shape[0]
+    pos = jax.lax.iota(jnp.int32, n)
+    for t in range(ii.shape[0]):
+        i, j, u = jnp.take(ii, t), jnp.take(jj, t), jnp.take(us, t)
+        pi, pj = jnp.take(p, i), jnp.take(p, j)
+        swapped = jnp.where(pos == i, pj, jnp.where(pos == j, pi, p))
+        p = jnp.where(u < gate_p, swapped, p)
+    return p
+
+
+def tournament_pick(fit: Array, idx: Array) -> Array:
+    """``idx[argmin(fit[idx])]`` with the first-minimum tie rule, as a
+    static unroll over the (small) tournament size — identical selection
+    to ``genetic.tournament_select`` given identical candidate indices,
+    without a 1-D argmin the kernel backend would have to support."""
+    best = jnp.take(idx, 0)
+    bval = jnp.take(fit, best)
+    for t in range(1, idx.shape[0]):
+        cand = jnp.take(idx, t)
+        cval = jnp.take(fit, cand)
+        better = cval < bval
+        best = jnp.where(better, cand, best)
+        bval = jnp.where(better, cval, bval)
+    return best

@@ -44,12 +44,13 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from . import qap, sparse
+from . import ga_ops, qap, sparse
 from repro.kernels import ops
+from repro.kernels import prng
 
 Array = jax.Array
 
-MAX_MUT = 4
+MAX_MUT = ga_ops.MAX_MUT   # fixed per-individual mutation budget
 
 
 @dataclass(frozen=True)
@@ -64,8 +65,20 @@ class GAConfig:
     tournament: int = 2
     seed_identity: bool = False  # include the as-allocated order in the
                                  # initial population (placement use case)
-    eval: str = "wide"           # "wide" | "island" generation realisation
-                                 # (bitwise-identical; see module docstring)
+    eval: str = "wide"           # "wide" | "island" | "fused" generation
+                                 # realisation (bitwise-identical; "fused" =
+                                 # one Pallas launch per island generation
+                                 # with on-chip counter draws, auto-falling
+                                 # back to "wide" above the VMEM budget — see
+                                 # resolved_eval and docs/DESIGN.md §13)
+    rng: str = "host"            # "host" | "counter" draw regime: "counter"
+                                 # derives every operator draw from the
+                                 # portable counter stream (kernels/prng.py)
+                                 # the fused kernel replays on-chip —
+                                 # eval="fused" implies it; "host" keeps the
+                                 # original jax.random draws (the existing
+                                 # goldens).  "counter" requires a wide-form
+                                 # eval ("wide"/"fused")
     flows: str = "dense"         # "dense" | "sparse" flow representation:
                                  # "sparse" expects C as a
                                  # core.sparse.SparseFlows (convert host-side
@@ -272,6 +285,26 @@ def _resolve_n_off(cfg: GAConfig, pop_actual: int) -> int:
     return min(n_off, pop_actual)
 
 
+def resolved_eval(cfg: GAConfig, n: Optional[int] = None) -> str:
+    """The generation realisation that will actually run at order ``n``.
+
+    ``"fused"`` keeps the island population, matrices, and objective
+    temporaries resident in VMEM, so above the dense kernel cap
+    (``ops.fused_step_fits``) — and for sparse flows — it degrades to the
+    bitwise-equivalent unfused ``"wide"`` counter-mode path; nothing
+    regresses at n=4096.
+    """
+    if cfg.eval not in ("wide", "island", "fused"):
+        raise ValueError(f"unknown generation realisation {cfg.eval!r}")
+    if cfg.eval != "fused":
+        return cfg.eval
+    if cfg.flows == "sparse":
+        return "wide"
+    if n is not None and not ops.fused_step_fits(n):
+        return "wide"
+    return "fused"
+
+
 def _init_population(key: Array, cfg: GAConfig, n: int,
                      n_valid: Optional[Array] = None,
                      init_perm: Optional[Array] = None) -> Array:
@@ -332,6 +365,40 @@ def _offspring(state: GAState, key: Array, cfg: GAConfig,
     mkeys = jax.random.split(kmut, n_off)
     children = jax.vmap(
         lambda k, p: swap_mutation(k, p, cfg.p_mutation, n_valid))(mkeys, children)
+    return children
+
+
+def _offspring_counter(state: GAState, key: Array, cfg: GAConfig,
+                       n_valid: Optional[Array] = None) -> Array:
+    """Counter-mode :func:`_offspring`: identical operator structure, but
+    every draw comes from the portable counter stream of ``key``
+    (``kernels/prng.py``) through the shared apply bodies
+    (``core.ga_ops``) — the exact sequence the fused generation kernel
+    replays on-chip, which is what makes ``eval="fused"`` bitwise-equal
+    to this unfused path (tests/test_fused.py)."""
+    pop_actual = state.pop.shape[0]
+    n = state.pop.shape[1]
+    n_off = _resolve_n_off(cfg, pop_actual)
+    nv = jnp.int32(n) if n_valid is None else n_valid
+    d = prng.ga_step_draws(key, n_off, cfg.tournament, ga_ops.MAX_MUT,
+                           pop_actual, nv)
+
+    i1 = jax.vmap(lambda ix: ga_ops.tournament_pick(state.fit, ix))(d.sel[:, 0])
+    i2 = jax.vmap(lambda ix: ga_ops.tournament_pick(state.fit, ix))(d.sel[:, 1])
+    par1, par2 = state.pop[i1], state.pop[i2]
+    if cfg.crossover == "oxs":
+        swap = state.fit[i2] < state.fit[i1]
+        par1, par2 = (jnp.where(swap[:, None], par2, par1),
+                      jnp.where(swap[:, None], par1, par2))
+
+    children = jax.vmap(
+        lambda c1, c2, a, b: ga_ops.ox_apply(c1, c2, a, b, nv))(
+            d.cut1, d.cut2, par1, par2)
+    children = jnp.where((d.xu < cfg.p_crossover)[:, None], children, par1)
+    gate = ga_ops.mutation_gate(cfg.p_mutation, nv)
+    children = jax.vmap(
+        lambda p, ii, jj, uu: ga_ops.mutation_apply(p, ii, jj, uu, gate))(
+            children, d.mut_i, d.mut_j, d.mut_u)
     return children
 
 
@@ -450,24 +517,42 @@ def generation_step(C: Array, M: Array, state: GAState, key: Array,
       kernel launch whose grid spans every (island, offspring) pair,
       instead of per-island kernel calls issued under ``vmap``;
     * ``"island"``: the seed-era ``vmap(_breed_island)`` path, pinned as
-      the golden reference.
+      the golden reference;
+    * ``"fused"``: the whole per-island generation — selection through
+      replacement, with operator draws derived on-chip from the counter
+      stream — is **one** ``ops.qap_ga_step`` launch (degrading to the
+      bitwise-equal ``"wide"`` counter path above the VMEM budget, see
+      ``resolved_eval``).
 
-    Both consume the same keys and apply bitwise-equal operations, so the
-    resulting populations are bitwise identical (tests/test_ga_hotloop.py).
-    Shared by ``_pga_impl`` and the composite solver's GA rounds.  Returns
+    All consume the same draw streams within their rng regime and apply
+    bitwise-equal operations, so the resulting populations are bitwise
+    identical (tests/test_ga_hotloop.py, tests/test_fused.py).  Shared by
+    ``_pga_impl`` and the composite solver's GA rounds.  Returns
     (new_state, pre-migration global best) — the history entry.
     """
+    n = state.pop.shape[-1]
+    ev = resolved_eval(cfg, n)
+    use_counter = cfg.rng == "counter" or cfg.eval == "fused"
     keys = jax.random.split(key, num_processes)
-    if cfg.eval == "wide":
+    if ev == "fused":
+        nv = jnp.int32(n) if n_valid is None else n_valid
+        pop_actual = state.pop.shape[-2]
+        new_pop, new_fit = ops.qap_ga_step(
+            C, M, state.pop, state.fit, prng.key_data(keys),
+            jnp.broadcast_to(nv, (num_processes,)),
+            n_off=_resolve_n_off(cfg, pop_actual),
+            tournament=cfg.tournament, p_crossover=cfg.p_crossover,
+            p_mutation=cfg.p_mutation, crossover=cfg.crossover)
+        state = GAState(pop=new_pop, fit=new_fit)
+    elif ev == "wide":
+        off_fn = _offspring_counter if use_counter else _offspring
         children = jax.vmap(
-            lambda s, k: _offspring(s, k, cfg, n_valid))(state, keys)
+            lambda s, k: off_fn(s, k, cfg, n_valid))(state, keys)
         child_fit = ops.qap_objective(C, M, children)   # ONE wide dispatch
         state = jax.vmap(_replace_worst)(state, children, child_fit)
-    elif cfg.eval == "island":
+    else:
         state = jax.vmap(
             lambda s, k: _breed_island(C, M, s, k, cfg, n_valid))(state, keys)
-    else:
-        raise ValueError(f"unknown generation realisation {cfg.eval!r}")
     bp, bf = jax.vmap(island_best)(state)
     # Ring migration: island i receives the best of island i-1.
     mig_p, mig_f = jnp.roll(bp, 1, axis=0), jnp.roll(bf, 1, axis=0)
@@ -485,8 +570,14 @@ def _pga_impl(C: Array, M: Array, key: Array, cfg: GAConfig,
     worst-replacement then guarantees the final best is no worse than the
     seed's objective for every config (even total-replacement ones).
     """
-    if cfg.eval not in ("wide", "island"):
+    if cfg.eval not in ("wide", "island", "fused"):
         raise ValueError(f"unknown generation realisation {cfg.eval!r}")
+    if cfg.rng not in ("host", "counter"):
+        raise ValueError(f"unknown rng regime {cfg.rng!r}")
+    if cfg.rng == "counter" and cfg.eval == "island":
+        raise ValueError(
+            "rng='counter' requires a wide-form eval ('wide'/'fused') — "
+            "eval='island' is the seed-era host-RNG golden reference")
     if cfg.flows == "sparse" and not isinstance(C, sparse.SparseFlows):
         raise TypeError(
             "GAConfig.flows='sparse' requires C as a core.sparse.SparseFlows"
@@ -496,7 +587,7 @@ def _pga_impl(C: Array, M: Array, key: Array, cfg: GAConfig,
     n = C.shape[0]
     kinit, krun = jax.random.split(key)
     init_keys = jax.random.split(kinit, num_processes)
-    if cfg.eval == "wide":
+    if cfg.eval in ("wide", "fused"):
         # One (islands x pop) fitness dispatch instead of per-island calls.
         pops = jax.vmap(
             lambda k: _init_population(k, cfg, n, n_valid, init_perm))(init_keys)

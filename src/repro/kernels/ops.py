@@ -41,8 +41,10 @@ import jax.numpy as jnp
 from ..core.sparse import SparseFlows
 from . import ref
 from .qap_delta import qap_delta_pallas_batch
+from .qap_ga_step import qap_ga_step_pallas_batch
 from .qap_objective import (qap_objective_pallas_batch, MAX_KERNEL_N,
                             _pad_to, LANE)
+from .qap_sa_step import qap_sa_step_pallas_batch
 from .qap_sparse import (qap_delta_sparse_pallas_batch,
                          qap_objective_sparse_pallas_batch,
                          MAX_SPARSE_KERNEL_N)
@@ -237,6 +239,205 @@ def qap_delta(C: Array, M: Array, p: Array, pairs: Array, *,
     if not (force_pallas or on_tpu):
         return ref.qap_delta_ref(C, M, p, pairs)
     return _delta_shared(bool(interpret or not on_tpu))(C, M, p, pairs)
+
+
+# --------------------------------------------------------- fused solver steps
+
+def fused_step_fits(n: int) -> bool:
+    """Does the fused solver-step working set fit VMEM at order ``n``?
+
+    The fused SA/GA step kernels keep full matrices (and, for GA, the
+    island population and objective temporaries) resident per program, so
+    they share the dense objective kernel's padded-order cap.  Above it
+    ``annealing.resolved_loop`` / ``genetic.resolved_eval`` fall back to
+    the unfused event/wide paths — nothing regresses at n=4096.
+    """
+    return _pad_to(max(n, LANE), LANE) <= MAX_KERNEL_N
+
+
+@functools.lru_cache(maxsize=None)
+def _sa_step_shared(interpret: bool, max_neighbors: int, max_success: int):
+    """Fused-SA-step dispatch for shared matrices.
+
+    State operands carry matching leading dims (chains, solvers, ...);
+    the custom-vmap rule folds every outer vmap axis into the kernel
+    grid, handing instance-batched ``C``/``M`` to :func:`_sa_step_inst`.
+    """
+    @jax.custom_batching.custom_vmap
+    def step(C, M, p, f, bp, bf, temp, key, nv):
+        n = p.shape[-1]
+        lead = p.shape[:-1]
+        po, fo, bpo, bfo = qap_sa_step_pallas_batch(
+            C, M, p.reshape((-1, n)), f.reshape((-1,)),
+            bp.reshape((-1, n)), bf.reshape((-1,)), temp.reshape((-1,)),
+            key.reshape((-1, 2)), nv.reshape((-1,)),
+            max_neighbors=max_neighbors, max_success=max_success,
+            interpret=interpret)
+        return (po.reshape(lead + (n,)), fo.reshape(lead),
+                bpo.reshape(lead + (n,)), bfo.reshape(lead))
+
+    @step.def_vmap
+    def step_vmap(axis_size, in_batched, C, M, *state):
+        cb, mb = in_batched[0], in_batched[1]
+        state = [_bcast(x, b, axis_size)
+                 for x, b in zip(state, in_batched[2:])]
+        if not (cb or mb):
+            return step(C, M, *state), (True, True, True, True)
+        return _sa_step_inst(interpret, max_neighbors, max_success)(
+            _bcast(C, cb, axis_size), _bcast(M, mb, axis_size),
+            *state), (True, True, True, True)
+
+    return step
+
+
+@functools.lru_cache(maxsize=None)
+def _sa_step_inst(interpret: bool, max_neighbors: int, max_success: int):
+    """Instance-batched fused SA step: C, M (B, N, N); state (B, ...)."""
+    @jax.custom_batching.custom_vmap
+    def step_i(Cs, Ms, p, f, bp, bf, temp, key, nv):
+        n = p.shape[-1]
+        lead = p.shape[:-1]
+        # Rows of one instance are contiguous in the flattened batch —
+        # the kernel's i // rpt matrix indexing contract.
+        po, fo, bpo, bfo = qap_sa_step_pallas_batch(
+            Cs, Ms, p.reshape((-1, n)), f.reshape((-1,)),
+            bp.reshape((-1, n)), bf.reshape((-1,)), temp.reshape((-1,)),
+            key.reshape((-1, 2)), nv.reshape((-1,)),
+            max_neighbors=max_neighbors, max_success=max_success,
+            interpret=interpret)
+        return (po.reshape(lead + (n,)), fo.reshape(lead),
+                bpo.reshape(lead + (n,)), bfo.reshape(lead))
+
+    @step_i.def_vmap
+    def step_i_vmap(axis_size, in_batched, Cs, Ms, *state):
+        cb, mb = in_batched[0], in_batched[1]
+        Cs = _bcast(Cs, cb, axis_size)
+        Ms = _bcast(Ms, mb, axis_size)
+        state = [_bcast(x, b, axis_size)
+                 for x, b in zip(state, in_batched[2:])]
+        b0 = Cs.shape[1]
+        outs = step_i(Cs.reshape((-1,) + Cs.shape[2:]),
+                      Ms.reshape((-1,) + Ms.shape[2:]),
+                      *[x.reshape((-1,) + x.shape[2:]) for x in state])
+        return tuple(o.reshape((axis_size, b0) + o.shape[1:])
+                     for o in outs), (True, True, True, True)
+
+    return step_i
+
+
+def qap_sa_step(C: Array, M: Array, p: Array, f: Array, best_p: Array,
+                best_f: Array, temp: Array, key: Array, n_valid: Array, *,
+                max_neighbors: int, max_success: int, event_width=None,
+                force_pallas: bool = False, interpret: bool = False):
+    """One whole SA temperature step, fused: ``(p, f, best_p, best_f)``.
+
+    ``p``/``best_p``: (..., N); ``f``/``best_f``/``temp``/``n_valid``:
+    (...); ``key``: (..., 2) raw uint32 key words (``prng.key_data``) —
+    candidate pairs and Metropolis uniforms are derived on-chip from the
+    counter stream, not passed in.  On CPU the event-window reference
+    runs (bitwise-equal to the unfused ``loop="event"``/``"scan"``
+    counter-mode paths; ``event_width`` only shapes its windows, never
+    its results); on TPU one Pallas launch per step with outer vmaps
+    folded into the grid.  Callers guard orders with
+    :func:`fused_step_fits` (``annealing.resolved_loop``).
+    """
+    if not (force_pallas or _on_tpu()):
+        return ref.qap_sa_step_ref(
+            C, M, p, f, best_p, best_f, temp, key, n_valid,
+            max_neighbors=max_neighbors, max_success=max_success,
+            event_width=event_width)
+    return _sa_step_shared(bool(interpret or not _on_tpu()),
+                           int(max_neighbors), int(max_success))(
+        C, M, p, f, best_p, best_f, temp, key, n_valid)
+
+
+@functools.lru_cache(maxsize=None)
+def _ga_step_shared(interpret: bool, n_off: int, tournament: int,
+                    p_crossover: float, p_mutation: float, crossover: str):
+    """Fused-GA-generation dispatch for shared matrices."""
+    @jax.custom_batching.custom_vmap
+    def step(C, M, pop, fit, key, nv):
+        psz, n = pop.shape[-2], pop.shape[-1]
+        lead = pop.shape[:-2]
+        po, fo = qap_ga_step_pallas_batch(
+            C, M, pop.reshape((-1, psz, n)), fit.reshape((-1, psz)),
+            key.reshape((-1, 2)), nv.reshape((-1,)), n_off=n_off,
+            tournament=tournament, p_crossover=p_crossover,
+            p_mutation=p_mutation, crossover=crossover, interpret=interpret)
+        return po.reshape(lead + (psz, n)), fo.reshape(lead + (psz,))
+
+    @step.def_vmap
+    def step_vmap(axis_size, in_batched, C, M, *state):
+        cb, mb = in_batched[0], in_batched[1]
+        state = [_bcast(x, b, axis_size)
+                 for x, b in zip(state, in_batched[2:])]
+        if not (cb or mb):
+            return step(C, M, *state), (True, True)
+        return _ga_step_inst(interpret, n_off, tournament, p_crossover,
+                             p_mutation, crossover)(
+            _bcast(C, cb, axis_size), _bcast(M, mb, axis_size),
+            *state), (True, True)
+
+    return step
+
+
+@functools.lru_cache(maxsize=None)
+def _ga_step_inst(interpret: bool, n_off: int, tournament: int,
+                  p_crossover: float, p_mutation: float, crossover: str):
+    """Instance-batched fused GA generation: C, M (B, N, N)."""
+    @jax.custom_batching.custom_vmap
+    def step_i(Cs, Ms, pop, fit, key, nv):
+        psz, n = pop.shape[-2], pop.shape[-1]
+        lead = pop.shape[:-2]
+        po, fo = qap_ga_step_pallas_batch(
+            Cs, Ms, pop.reshape((-1, psz, n)), fit.reshape((-1, psz)),
+            key.reshape((-1, 2)), nv.reshape((-1,)), n_off=n_off,
+            tournament=tournament, p_crossover=p_crossover,
+            p_mutation=p_mutation, crossover=crossover, interpret=interpret)
+        return po.reshape(lead + (psz, n)), fo.reshape(lead + (psz,))
+
+    @step_i.def_vmap
+    def step_i_vmap(axis_size, in_batched, Cs, Ms, *state):
+        cb, mb = in_batched[0], in_batched[1]
+        Cs = _bcast(Cs, cb, axis_size)
+        Ms = _bcast(Ms, mb, axis_size)
+        state = [_bcast(x, b, axis_size)
+                 for x, b in zip(state, in_batched[2:])]
+        b0 = Cs.shape[1]
+        outs = step_i(Cs.reshape((-1,) + Cs.shape[2:]),
+                      Ms.reshape((-1,) + Ms.shape[2:]),
+                      *[x.reshape((-1,) + x.shape[2:]) for x in state])
+        return tuple(o.reshape((axis_size, b0) + o.shape[1:])
+                     for o in outs), (True, True)
+
+    return step_i
+
+
+def qap_ga_step(C: Array, M: Array, pop: Array, fit: Array, key: Array,
+                n_valid: Array, *, n_off: int, tournament: int,
+                p_crossover: float, p_mutation: float,
+                crossover: str = "ox", force_pallas: bool = False,
+                interpret: bool = False):
+    """One whole GA generation for an island, fused: ``(pop, fit)``.
+
+    ``pop``: (..., P, N); ``fit``: (..., P); ``key``: (..., 2) raw uint32
+    key words; ``n_valid``: (...).  Selection, crossover, mutation,
+    offspring evaluation, and replacement run in one launch with the
+    operator draws derived on-chip (``kernels/prng.py``); ring migration
+    stays with the caller.  On CPU the reference runs (bitwise-equal to
+    the unfused ``eval="wide"`` counter-mode path); on TPU outer vmaps
+    fold into the kernel grid.  Callers guard orders with
+    :func:`fused_step_fits` (``genetic.resolved_eval``).
+    """
+    if not (force_pallas or _on_tpu()):
+        return ref.qap_ga_step_ref(
+            C, M, pop, fit, key, n_valid, n_off=n_off,
+            tournament=tournament, p_crossover=p_crossover,
+            p_mutation=p_mutation, crossover=crossover)
+    return _ga_step_shared(bool(interpret or not _on_tpu()), int(n_off),
+                           int(tournament), float(p_crossover),
+                           float(p_mutation), str(crossover))(
+        C, M, pop, fit, key, n_valid)
 
 
 # ---------------------------------------------------------------- sparse

@@ -1,0 +1,197 @@
+"""Portable counter-based RNG shared by the fused kernels and their oracles.
+
+The fused solver step kernels (``qap_sa_step`` / ``qap_ga_step``) keep a
+whole SA temperature step / GA generation on-chip, so the candidate pairs
+and Metropolis/operator uniforms can no longer arrive as host-precomputed
+arrays — they must be derived *inside* the kernel from the step's PRNG
+key.  ``pltpu.prng_random_bits`` would do that on TPU, but its stream is
+backend-specific: a pure-jnp reference could never replay it, and the
+repo's correctness story is built on bitwise kernel == oracle equality.
+
+So the counter stream is a **portable Threefry-2x32-20** implemented in
+plain uint32 jnp ops (shifts, xors, adds — all of which Pallas lowers and
+interpret mode executes exactly).  The *same functions* run inside the
+kernel bodies and in ``kernels/ref.py`` / the solvers' counter-mode host
+paths, so every consumer sees the identical draw sequence by construction
+on every backend:
+
+    draw(j) = threefry2x32(k0, k1, stream_tag, j)
+
+with ``(k0, k1)`` the raw uint32 words of the step's JAX PRNG key, a
+per-purpose ``stream_tag`` counter word, and ``j`` the draw index.
+Integer draws are taken modulo their range; uniforms keep the top 24 bits
+(``(w >> 8) * 2^-24``), which is exact in f32 — so fused and unfused
+counter-mode paths agree bit for bit (docs/DESIGN.md §13).
+
+This module is deliberately *not* bitwise-compatible with
+``jax.random``'s own draws: counter mode (``SAConfig.rng="counter"`` /
+``GAConfig.rng="counter"``) is a distinct, self-consistent RNG regime,
+and the host-RNG paths (``rng="host"``, the default) are untouched.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import qap
+
+Array = jax.Array
+
+# Stream tags: one counter word per draw purpose, so draws for different
+# purposes never collide even at equal draw indices.
+STREAM_SA_PAIR = 1    # SA candidate swap pairs
+STREAM_SA_ACC = 2     # SA Metropolis acceptance uniforms
+STREAM_GA_SEL = 3     # GA tournament member indices
+STREAM_GA_CUT = 4     # GA order-crossover cut points
+STREAM_GA_XGATE = 5   # GA crossover gate uniforms
+STREAM_GA_MUT = 6     # GA mutation position pairs
+STREAM_GA_MGATE = 7   # GA mutation gate uniforms
+
+
+def _rotl(x: Array, r: int) -> Array:
+    return (x << jnp.uint32(r)) | (x >> jnp.uint32(32 - r))
+
+
+def threefry2x32(k0: Array, k1: Array, c0: Array, c1: Array):
+    """Threefry-2x32, 20 rounds: (key, counter) -> two uint32 words.
+
+    The standard rotation schedule and key injections (Salmon et al.;
+    the same cipher family ``jax.random`` builds on).  All operands are
+    uint32 and broadcast together, so the function runs identically on
+    scalars (in-kernel per-draw use) and vectors (host/oracle batch use).
+    """
+    x0 = jnp.asarray(c0, jnp.uint32)
+    x1 = jnp.asarray(c1, jnp.uint32)
+    ks0 = jnp.asarray(k0, jnp.uint32)
+    ks1 = jnp.asarray(k1, jnp.uint32)
+    ks2 = ks0 ^ ks1 ^ jnp.uint32(0x1BD11BDA)
+
+    def rounds(x0, x1, rots):
+        for r in rots:
+            x0 = x0 + x1
+            x1 = _rotl(x1, r)
+            x1 = x0 ^ x1
+        return x0, x1
+
+    ra, rb = (13, 15, 26, 6), (17, 29, 16, 24)
+    x0, x1 = x0 + ks0, x1 + ks1
+    x0, x1 = rounds(x0, x1, ra)
+    x0, x1 = x0 + ks1, x1 + ks2 + jnp.uint32(1)
+    x0, x1 = rounds(x0, x1, rb)
+    x0, x1 = x0 + ks2, x1 + ks0 + jnp.uint32(2)
+    x0, x1 = rounds(x0, x1, ra)
+    x0, x1 = x0 + ks0, x1 + ks1 + jnp.uint32(3)
+    x0, x1 = rounds(x0, x1, rb)
+    x0, x1 = x0 + ks1, x1 + ks2 + jnp.uint32(4)
+    x0, x1 = rounds(x0, x1, ra)
+    x0, x1 = x0 + ks2, x1 + ks0 + jnp.uint32(5)
+    return x0, x1
+
+
+def uniform32(bits: Array) -> Array:
+    """uint32 bits -> f32 uniform in [0, 1): the top 24 bits scaled by
+    2^-24.  A 24-bit integer times a power of two is exact in f32, so the
+    value is identical on every backend (no rounding to disagree on)."""
+    return (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0 ** -24)
+
+
+def key_data(key: Array) -> Array:
+    """Raw uint32 ``(..., 2)`` words of a JAX PRNG key (old- or new-style)."""
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        key = jax.random.key_data(key)
+    return key.astype(jnp.uint32)
+
+
+# ------------------------------------------------------------------ SA draws
+
+def sa_draws(k0: Array, k1: Array, max_neighbors: int, n_valid: Array):
+    """One temperature step's candidate stream from raw key words.
+
+    Returns ``(a, b, us)``: ``(K,)`` swap positions (``a < b``, drawn
+    uniformly-by-modulo over the C(n_valid, 2) unordered pairs of the
+    valid prefix) and ``(K,)`` Metropolis uniforms.  Pure uint32/int32
+    jnp — callable verbatim inside a Pallas kernel body (scalar ``k0``,
+    ``k1`` from a prefetched key row) and on host (the solvers'
+    ``rng="counter"`` draw path and ``kernels/ref.py`` oracles), which is
+    what makes the fused step bitwise-equal to the unfused counter-mode
+    loops.  Orders < 2 get the degenerate (0, 0) no-op pair, matching
+    ``core.qap.random_swap_pairs``.
+    """
+    j = jax.lax.iota(jnp.int32, max_neighbors).astype(jnp.uint32)
+    nv = jnp.asarray(n_valid, jnp.int32)
+    nv2 = jnp.maximum(nv, 2)
+    num = qap.num_pairs(nv2).astype(jnp.uint32)
+    w0, _ = threefry2x32(k0, k1, jnp.uint32(STREAM_SA_PAIR), j)
+    a, b = qap.pair_from_index((w0 % num).astype(jnp.int32), nv2)
+    ok = nv >= 2
+    a = jnp.where(ok, a, 0).astype(jnp.int32)
+    b = jnp.where(ok, b, 0).astype(jnp.int32)
+    u0, _ = threefry2x32(k0, k1, jnp.uint32(STREAM_SA_ACC), j)
+    return a, b, uniform32(u0)
+
+
+def sa_step_draws(key: Array, max_neighbors: int, n_valid: Array):
+    """Host-side form over a JAX PRNG key: ``(pairs (K, 2), us (K,))`` —
+    the arrays ``annealing.temperature_step`` feeds the event/scan loops
+    in counter mode (the fused kernel's golden references)."""
+    kd = key_data(key)
+    a, b, us = sa_draws(kd[..., 0], kd[..., 1], max_neighbors, n_valid)
+    return jnp.stack([a, b], axis=-1), us
+
+
+# ------------------------------------------------------------------ GA draws
+
+class GADraws(NamedTuple):
+    """One island generation's operator draws (all leading dim n_off)."""
+    sel: Array     # (n_off, 2, tournament) int32 candidate member indices
+    cut1: Array    # (n_off,) int32 OX cut points (already min/max ordered)
+    cut2: Array    # (n_off,) int32
+    xu: Array      # (n_off,) f32 crossover gate uniforms
+    mut_i: Array   # (n_off, max_mut) int32 mutation positions
+    mut_j: Array   # (n_off, max_mut) int32
+    mut_u: Array   # (n_off, max_mut) f32 mutation gate uniforms
+
+
+def ga_draws(k0: Array, k1: Array, n_off: int, tournament: int,
+             max_mut: int, pop: int, n_valid: Array) -> GADraws:
+    """One island generation's draw set from raw key words.
+
+    Same portability contract as :func:`sa_draws`: pure uint32/int32 jnp
+    usable inside the fused GA kernel and on host, one stream tag per
+    operator.  ``n_valid`` bounds cut points and mutation positions to
+    the valid prefix (the full order when the instance is unpadded).
+    """
+    nv = jnp.maximum(jnp.asarray(n_valid, jnp.int32), 1).astype(jnp.uint32)
+    popu = jnp.uint32(pop)
+
+    jsel = jax.lax.iota(jnp.int32, n_off * 2 * tournament).astype(jnp.uint32)
+    w0, _ = threefry2x32(k0, k1, jnp.uint32(STREAM_GA_SEL), jsel)
+    sel = (w0 % popu).astype(jnp.int32).reshape(n_off, 2, tournament)
+
+    joff = jax.lax.iota(jnp.int32, n_off).astype(jnp.uint32)
+    w0, w1 = threefry2x32(k0, k1, jnp.uint32(STREAM_GA_CUT), joff)
+    c1 = (w0 % nv).astype(jnp.int32)
+    c2 = (w1 % nv).astype(jnp.int32)
+    cut1, cut2 = jnp.minimum(c1, c2), jnp.maximum(c1, c2)
+
+    w0, _ = threefry2x32(k0, k1, jnp.uint32(STREAM_GA_XGATE), joff)
+    xu = uniform32(w0)
+
+    jmut = jax.lax.iota(jnp.int32, n_off * max_mut).astype(jnp.uint32)
+    w0, w1 = threefry2x32(k0, k1, jnp.uint32(STREAM_GA_MUT), jmut)
+    mut_i = (w0 % nv).astype(jnp.int32).reshape(n_off, max_mut)
+    mut_j = (w1 % nv).astype(jnp.int32).reshape(n_off, max_mut)
+
+    w0, _ = threefry2x32(k0, k1, jnp.uint32(STREAM_GA_MGATE), jmut)
+    mut_u = uniform32(w0).reshape(n_off, max_mut)
+    return GADraws(sel, cut1, cut2, xu, mut_i, mut_j, mut_u)
+
+
+def ga_step_draws(key: Array, n_off: int, tournament: int, max_mut: int,
+                  pop: int, n_valid: Array) -> GADraws:
+    """Host-side form over a JAX PRNG key (``genetic._offspring_counter``)."""
+    kd = key_data(key)
+    return ga_draws(kd[..., 0], kd[..., 1], n_off, tournament, max_mut,
+                    pop, n_valid)

@@ -8,6 +8,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..core import ga_ops
+from . import prng
+
 Array = jax.Array
 
 
@@ -124,6 +127,137 @@ def selective_scan_ref(u: Array, dt: Array, a: Array, b: Array, c: Array
     h0 = jnp.zeros((bsz, d, n), jnp.float32)
     _, ys = jax.lax.scan(step, h0, jnp.arange(s))
     return ys.swapaxes(0, 1)                                     # (B, S, D)
+
+
+def qap_sa_step_ref(C: Array, M: Array, p: Array, f: Array, best_p: Array,
+                    best_f: Array, temp: Array, key: Array, n_valid: Array,
+                    *, max_neighbors: int, max_success: int,
+                    event_width=None):
+    """Oracle for the fused SA temperature-step kernel (and the CPU side
+    of the ``ops.qap_sa_step`` dispatch).
+
+    One whole temperature level: draw ``max_neighbors`` candidate pairs
+    and Metropolis uniforms from the portable counter stream of ``key``
+    (raw uint32 words — ``kernels/prng.py``), then consume them with the
+    acceptance-event window loop of ``annealing._acceptance_event_loop``
+    over ``qap_delta_ref``.  Because the candidate stream, uniforms, and
+    per-candidate delta arithmetic are identical, the result is
+    bitwise-equal to the unfused ``loop="event"`` / ``loop="scan"``
+    counter-mode host paths for every ``event_width`` — and to the fused
+    Pallas kernel (which replays the same stream through a sequential
+    in-VMEM scan) on integer-valued instances, where every f32 sum is
+    exact regardless of padding or reduction order (docs/DESIGN.md §13).
+
+    Returns ``(p, f, best_p, best_f)``; cooling stays with the caller.
+    """
+    if p.ndim > 1:
+        nv = jnp.asarray(n_valid, jnp.int32)
+        nv_ax = 0 if nv.ndim > 0 else None
+        fn = lambda pp, ff, bp, bf, tt, kk, vv: qap_sa_step_ref(
+            C, M, pp, ff, bp, bf, tt, kk, vv, max_neighbors=max_neighbors,
+            max_success=max_success, event_width=event_width)
+        return jax.vmap(fn, in_axes=(0, 0, 0, 0, 0, 0, nv_ax))(
+            p, f, best_p, best_f, temp, key, nv)
+
+    k = max_neighbors
+    w = k if event_width is None else min(max(int(event_width), 1), k)
+    kd = key.astype(jnp.uint32)
+    a, b, us = prng.sa_draws(kd[0], kd[1], k, n_valid)
+    pairs = jnp.stack([a, b], axis=-1)
+    tsafe = jnp.maximum(temp, 1e-9)
+
+    def cond(carry):
+        _, _, _, _, start, successes = carry
+        return (start < k) & (successes < max_success)
+
+    def body(carry):
+        p_, f_, bp_, bf_, start, successes = carry
+        off = jnp.minimum(start, k - w)
+        wpairs = jax.lax.dynamic_slice(pairs, (off, jnp.int32(0)), (w, 2))
+        wus = jax.lax.dynamic_slice(us, (off,), (w,))
+        ds = qap_delta_ref(C, M, p_, wpairs)
+        accept = (ds < 0) | (wus < jnp.exp(-ds / tsafe))
+        live = accept & (off + jnp.arange(w, dtype=jnp.int32) >= start)
+        fire = live.any()
+        j = jnp.argmax(live)
+        aa, bb = wpairs[j, 0], wpairs[j, 1]
+        pa, pb = p_[aa], p_[bb]
+        p_ = jnp.where(fire, p_.at[aa].set(pb).at[bb].set(pa), p_)
+        f_ = jnp.where(fire, f_ + ds[j], f_)
+        better = f_ < bf_
+        bp_ = jnp.where(better, p_, bp_)
+        bf_ = jnp.where(better, f_, bf_)
+        start = jnp.where(fire, off + j + 1, off + w)
+        return (p_, f_, bp_, bf_, start, successes + fire.astype(jnp.int32))
+
+    p, f, best_p, best_f, _, _ = jax.lax.while_loop(
+        cond, body, (p, f, best_p, best_f, jnp.int32(0), jnp.int32(0)))
+    return p, f, best_p, best_f
+
+
+def qap_ga_step_ref(C: Array, M: Array, pop: Array, fit: Array, key: Array,
+                    n_valid: Array, *, n_off: int, tournament: int,
+                    p_crossover: float, p_mutation: float,
+                    crossover: str = "ox"):
+    """Oracle for the fused GA generation kernel (and the CPU side of the
+    ``ops.qap_ga_step`` dispatch): one island's whole generation.
+
+    Tournament selection, OX crossover, and swap mutation consume the
+    counter stream of ``key`` through the shared apply bodies
+    (``core.ga_ops``), offspring are scored with ``qap_objective_ref``,
+    and the worst members are replaced via the tie-stable ``top_k``
+    formulation plus elitism guard — line for line the arithmetic of
+    ``genetic._replace_worst``, so the result is bitwise-equal to the
+    unfused ``eval="wide"`` counter-mode path.  Ring migration stays with
+    the caller (it crosses islands, which one kernel program cannot).
+
+    Returns ``(pop, fit)``.
+    """
+    if pop.ndim > 2:
+        nv = jnp.asarray(n_valid, jnp.int32)
+        nv_ax = 0 if nv.ndim > 0 else None
+        fn = lambda pp, ff, kk, vv: qap_ga_step_ref(
+            C, M, pp, ff, kk, vv, n_off=n_off, tournament=tournament,
+            p_crossover=p_crossover, p_mutation=p_mutation,
+            crossover=crossover)
+        return jax.vmap(fn, in_axes=(0, 0, 0, nv_ax))(pop, fit, key, nv)
+
+    pop_size = pop.shape[0]
+    kd = key.astype(jnp.uint32)
+    d = prng.ga_draws(kd[0], kd[1], n_off, tournament, ga_ops.MAX_MUT,
+                      pop_size, n_valid)
+    i1 = jax.vmap(lambda ix: ga_ops.tournament_pick(fit, ix))(d.sel[:, 0])
+    i2 = jax.vmap(lambda ix: ga_ops.tournament_pick(fit, ix))(d.sel[:, 1])
+    par1, par2 = pop[i1], pop[i2]
+    if crossover == "oxs":
+        swap = fit[i2] < fit[i1]
+        par1, par2 = (jnp.where(swap[:, None], par2, par1),
+                      jnp.where(swap[:, None], par1, par2))
+    children = jax.vmap(
+        lambda c1, c2, a, b: ga_ops.ox_apply(c1, c2, a, b, n_valid))(
+            d.cut1, d.cut2, par1, par2)
+    children = jnp.where((d.xu < p_crossover)[:, None], children, par1)
+    gate = ga_ops.mutation_gate(p_mutation, n_valid)
+    children = jax.vmap(
+        lambda p_, ii, jj, uu: ga_ops.mutation_apply(p_, ii, jj, uu, gate))(
+            children, d.mut_i, d.mut_j, d.mut_u)
+    child_fit = qap_objective_ref(C, M, children)
+
+    # Tie-stable worst replacement + elitism guard: the arithmetic of
+    # genetic._replace_worst, inlined to keep this module core-free.
+    _, ridx = jax.lax.top_k(fit[::-1], n_off)
+    worst = (pop_size - 1 - ridx)[::-1]
+    new_pop = pop.at[worst].set(children)
+    new_fit = fit.at[worst].set(child_fit)
+    prev_i = jnp.argmin(fit)
+    prev_p, prev_f = pop[prev_i], fit[prev_i]
+    worst_new = jax.lax.top_k(new_fit, 1)[1][0]
+    lost = prev_f < new_fit.min()
+    new_pop = new_pop.at[worst_new].set(
+        jnp.where(lost, prev_p, new_pop[worst_new]))
+    new_fit = new_fit.at[worst_new].set(
+        jnp.where(lost, prev_f, new_fit[worst_new]))
+    return new_pop, new_fit
 
 
 def qap_delta_ref(C: Array, M: Array, p: Array, pairs: Array) -> Array:

@@ -602,6 +602,15 @@ class MappingEngine:
         count = 0
         try:
             for bucket in buckets:
+                # event_width="auto": populate the measured width cache
+                # eagerly (it is only *read* during tracing), so the
+                # programs compiled below — and every later dispatch at
+                # this bucket — resolve the tuned width instead of the
+                # deterministic fallback.  The width never changes
+                # results, so mixing tuned and fallback programs is safe.
+                if any(self._tier_cfgs[t][0].event_width == "auto"
+                       for t in tiers):
+                    annealing.autotune_event_width(bucket)
                 for wave in sizes:
                     count += self._warmup_polish(bucket, wave, execute)
                     for algorithm in algorithms:

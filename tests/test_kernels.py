@@ -434,17 +434,28 @@ def test_no_pallas_call_under_vmap_on_tpu_paths(monkeypatch):
         nvs = jnp.full((B,), n, jnp.int32)
         sa = replace(SA_SMALL, solvers=3)
         pca = replace(PCA_SMALL, ga=replace(GA_SMALL, tournament=3))
+        pca_fused = replace(
+            pca, sa=replace(pca.sa, loop="fused"),
+            ga=replace(pca.ga, eval="fused"))
         Ss = sparse.from_dense(np.asarray(Cs))
         solvers = {
             "psa": lambda: annealing.run_psa_batch(Cs, Ms, keys, sa, procs,
                                                    n_valid=nvs),
+            "psa_fused": lambda: annealing.run_psa_batch(
+                Cs, Ms, keys, replace(sa, loop="fused"), procs,
+                n_valid=nvs),
             "psa_sparse": lambda: annealing.run_psa_batch(
                 Ss, Ms, keys, replace(sa, flows="sparse"), procs,
                 n_valid=nvs),
             "pga": lambda: genetic.run_pga_batch(Cs, Ms, keys, GA_SMALL,
                                                  procs, n_valid=nvs),
+            "pga_fused": lambda: genetic.run_pga_batch(
+                Cs, Ms, keys, replace(GA_SMALL, eval="fused"), procs,
+                n_valid=nvs),
             "pca": lambda: composite.run_pca_batch(Cs, Ms, keys, pca, procs,
                                                    n_valid=nvs),
+            "pca_fused": lambda: composite.run_pca_batch(
+                Cs, Ms, keys, pca_fused, procs, n_valid=nvs),
             "polish": lambda: mapping.polish_batch(
                 Cs, Ms,
                 jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (B, n)),
